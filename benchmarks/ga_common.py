@@ -1,0 +1,59 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5
+              ) -> Tuple[float, object]:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / iters
+    return dt, out
+
+
+def numpy_sequential_ga(problem, n: int, m: int, k: int, seed: int = 0,
+                        mutation_rate: float = 0.02) -> Tuple[float, float]:
+    """The 'software implementation' baseline of the paper's Table 2: a
+    plain sequential NumPy GA (per-individual python loops, like the CPU
+    programs the FPGA was compared against).  Returns (seconds, best)."""
+    import math
+    rng = np.random.default_rng(seed)
+    c = m // 2
+    lo, hi = problem.domain
+    pop = rng.integers(0, 1 << c, size=(n, 2), dtype=np.uint32)
+    p_count = max(1, math.ceil(n * mutation_rate))
+    best = np.inf
+    t0 = time.perf_counter()
+    for _ in range(k):
+        vals = lo + pop * (hi - lo) / ((1 << c) - 1)
+        y = np.array([problem.f(vals[j, 0], vals[j, 1]) for j in range(n)])
+        best = min(best, float(y.min()))
+        w = np.empty_like(pop)
+        for j in range(n):                      # tournament, sequential
+            i1, i2 = rng.integers(0, n, 2)
+            w[j] = pop[i1] if y[i1] <= y[i2] else pop[i2]
+        z = np.empty_like(pop)
+        for j in range(0, n, 2):                # single-point crossover
+            for var in range(2):
+                cut = rng.integers(0, c + 1)
+                s = np.uint32(((1 << c) - 1) >> cut)
+                h1, t1 = w[j, var] & ~s, w[j, var] & s
+                h2, t2 = w[j + 1, var] & ~s, w[j + 1, var] & s
+                z[j, var] = h1 | t2
+                z[j + 1, var] = h2 | t1
+        for j in range(p_count):                # mutation
+            z[j] ^= rng.integers(0, 1 << c, 2, dtype=np.uint32)
+        pop = z
+    return time.perf_counter() - t0, best

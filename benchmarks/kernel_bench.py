@@ -1,0 +1,38 @@
+"""Fused Pallas kernel vs pure-JAX GA path (interpret mode on CPU — the
+relative number is architecture-bound on TPU; see EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.ga_common import time_call
+from repro.core import fitness as F
+from repro.core import ga as G
+from repro.core import islands as ISL
+from repro.kernels import ops
+
+K = 50
+
+
+def run():
+    rows = []
+    cfg = G.GAConfig(n=256, c=10, v=2, mutation_rate=0.02, seed=1,
+                     mode="arith")
+    spec = F.ArithSpec.for_problem(F.F3)
+    icfg = ISL.IslandConfig(ga=cfg, n_islands=8)
+    st = ISL.init_islands_fast(icfg)
+
+    kern = functools.partial(ops.ga_run_kernel, cfg=cfg, spec=spec)
+    dt_k, _ = time_call(lambda: kern(st, K), iters=2)
+    rows.append(("kernel_fused_8x256", dt_k / K * 1e6,
+                 f"island_gens_per_s={8*K/dt_k:.0f}"))
+
+    fit = G.fitness_for_problem(F.F3, cfg)
+    pure = jax.jit(lambda s: ISL._local_generations(s, icfg, fit, K))
+    dt_p, _ = time_call(lambda: pure(st), iters=2)
+    rows.append(("pure_jax_8x256", dt_p / K * 1e6,
+                 f"island_gens_per_s={8*K/dt_p:.0f},"
+                 f"kernel_speedup={dt_p/dt_k:.2f}x(cpu-interpret)"))
+    return rows

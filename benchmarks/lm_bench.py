@@ -1,0 +1,34 @@
+"""LM substrate sanity benchmarks (reduced configs, CPU): train step
+tokens/s and decode tokens/s. Full-scale numbers live in the dry-run
+roofline (EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.ga_common import time_call
+from repro.configs import get_config, reduced
+from repro.models import common as C
+from repro.models import lm as LM
+from repro.optim import adamw as OPT
+from repro.train import step as TS
+
+B, S = 4, 128
+
+
+def run():
+    rows = []
+    for arch in ("minitron-8b", "mamba2-1.3b", "deepseek-v3-671b"):
+        cfg = reduced(get_config(arch))
+        defs = LM.model_defs(cfg, max_seq=S)
+        params = C.init_params(defs, jax.random.key(0))
+        opt = OPT.init(params, OPT.AdamWConfig())
+        ts = jax.jit(TS.make_train_step(cfg))
+        batch = {"tokens": jnp.ones((B, S), jnp.int32),
+                 "labels": jnp.ones((B, S), jnp.int32)}
+        dt, _ = time_call(lambda: ts(params, opt, batch), iters=3)
+        rows.append((f"train_step_{arch}-reduced", dt * 1e6,
+                     f"tokens_per_s={B*S/dt:.0f}"))
+    return rows

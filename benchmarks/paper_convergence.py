@@ -1,0 +1,52 @@
+"""Paper Figs. 11-12: convergence curves for F1 (N=32, m=26) and F3
+(N=64, m=20), averaged over seeds; derived value = generations to reach the
+paper's reported convergence point."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import fitness as F
+from repro.core import ga as G
+
+
+def _gens_to(traj, target):
+    hit = np.nonzero(traj <= target)[0]
+    return int(hit[0]) if len(hit) else -1
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    # F1: global min at x=-4096
+    target1 = float(F.F1.f(np.array(0.0), np.array(-4096.0))) * 0.98
+    gens = []
+    for seed in range(10):
+        cfg = G.GAConfig(n=32, c=13, v=2, mutation_rate=0.05, seed=seed,
+                         mode="lut")
+        t = F.build_tables(F.F1, 26)
+        out = G.run(cfg, G.make_lut_fitness(t), 100)
+        traj = np.asarray(out.traj_best) / 2.0 ** t.frac_bits
+        gens.append(_gens_to(traj, target1))
+    ok = [g for g in gens if g >= 0]
+    rows.append(("convergence_F1_N32_m26",
+                 (time.perf_counter() - t0) * 1e5,
+                 f"median_gens_to_min={int(np.median(ok)) if ok else -1},"
+                 f"hit_rate={len(ok)}/10"))
+    # F3
+    t0 = time.perf_counter()
+    gens = []
+    for seed in range(10):
+        cfg = G.GAConfig(n=64, c=10, v=2, mutation_rate=0.05, seed=seed,
+                         mode="arith")
+        out = G.run(cfg, G.fitness_for_problem(F.F3, cfg), 100)
+        gens.append(_gens_to(np.asarray(out.traj_best), 1.0))
+    ok = [g for g in gens if g >= 0]
+    rows.append(("convergence_F3_N64_m20",
+                 (time.perf_counter() - t0) * 1e5,
+                 f"median_gens_to_near_zero={int(np.median(ok)) if ok else -1},"
+                 f"hit_rate={len(ok)}/10"))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Figs. 15-16: effect of chromosome width m on speed (N=32).
+
+On the FPGA, clock falls ~linearly with m (LUT depth) and LUT count rises.
+Here m changes the fixed-point tables and bit widths; the vectorized engine
+should be nearly m-invariant — which is itself a finding we record."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.ga_common import time_call
+from repro.core import fitness as F
+from repro.core import ga as G
+
+K = 200
+
+
+def run():
+    rows = []
+    for m in (20, 22, 24, 26, 28):
+        cfg = G.GAConfig(n=32, c=m // 2, v=2, mutation_rate=0.02, seed=1,
+                         mode="lut")
+        fit = G.fitness_for_problem(F.F3, cfg)
+        runner = jax.jit(lambda: G.run(cfg, fit, K))
+        dt, _ = time_call(runner, iters=3)
+        rows.append((f"m_sweep_m{m}", dt / K * 1e6,
+                     f"gens_per_s={K/dt:.0f}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+MODULES = [
+    "benchmarks.paper_table1",       # Table 1: gens/s vs N
+    "benchmarks.paper_m_sweep",      # Figs 15-16: m sweep
+    "benchmarks.paper_table2",       # Table 2: speedup vs sequential GA
+    "benchmarks.paper_convergence",  # Figs 11-12: convergence
+    "benchmarks.kernel_bench",       # fused kernel vs pure JAX
+    "benchmarks.lm_bench",           # LM substrate sanity
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+    print("name,us_per_call,derived")
+    failed = []
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness going
+            failed.append((modname, repr(e)))
+            print(f"{modname},ERROR,{e!r}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

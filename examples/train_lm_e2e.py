@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic pipeline with checkpointing + auto-resume, then serve it.
+
+    PYTHONPATH=src python examples/train_lm_e2e.py [--steps 300]
+
+This exercises the full production path (data -> sharded step -> async
+checkpoints -> watchdog -> serving engine) at laptop scale.
+"""
+
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.serve.engine import Engine, EngineConfig
+from repro.train.loop import TrainConfig, train
+
+# ~100M params: 12 layers, d=512, llama-style
+CFG_100M = ModelConfig(
+    name="repro-100m", family="dense", n_layers=12, d_model=512,
+    n_heads=8, n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32000,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             "repro_100m_ckpt")
+    print(f"~{CFG_100M.param_count()/1e6:.0f}M params; ckpts -> {ckpt_dir}")
+
+    out = train(
+        CFG_100M,
+        TrainConfig(steps=args.steps, log_every=20, ckpt_every=100,
+                    ckpt_dir=ckpt_dir, resume=True),
+        DataConfig(vocab=CFG_100M.vocab_, seq_len=args.seq_len,
+                   global_batch=args.global_batch),
+        AdamWConfig(lr=1e-3),
+    )
+    print(f"trained to loss {out['loss']:.4f} "
+          f"({out['straggler_events']} straggler events)")
+
+    # serve the trained weights
+    eng = Engine(CFG_100M, out["params"],
+                 EngineConfig(batch=4, max_len=args.seq_len + 64))
+    prompts = np.tile(np.arange(16, dtype=np.int32)[None], (4, 1))
+    toks, stats = eng.generate(prompts, max_new_tokens=24)
+    print("continuations:", toks[:, :12])
+    print(f"decode throughput: {stats['decode_tok_per_s']:.1f} tok/s")
+    # the synthetic corpus is a noisy +1 (mod 64) walk — a trained model
+    # should often continue the pattern:
+    expect = (prompts[:, -1:] + 1 + np.arange(toks.shape[1])) % 64
+    acc = float((toks == expect).mean())
+    print(f"pattern-continuation accuracy: {acc:.2f}")
+
+
+if __name__ == "__main__":
+    main()

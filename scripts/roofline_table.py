@@ -1,0 +1,33 @@
+#!/usr/bin/env python3
+"""Render a dryrun results directory as the EXPERIMENTS.md roofline table.
+
+    python scripts/roofline_table.py dryrun_results_v2 [pod1|pod2]
+"""
+import glob
+import json
+import sys
+
+
+def main():
+    dirname = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "pod1"
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) |"
+          " dominant | MODEL/HLO | roofline % | temp GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for f in sorted(glob.glob(f"{dirname}/*.json")):
+        d = json.load(open(f))
+        if d.get("mesh") != mesh:
+            continue
+        if d["status"] != "ok":
+            print(f"| {d['arch']} | {d['shape']} | — | — | — | *skipped* |"
+                  " — | — | — |")
+            continue
+        print(f"| {d['arch']} | {d['shape']} | {d['t_compute']*1e3:.1f} |"
+              f" {d['t_memory']*1e3:.1f} | {d['t_collective']*1e3:.1f} |"
+              f" {d['dominant']} | {d['useful_flops_ratio']:.2f} |"
+              f" {d['roofline_fraction']*100:.1f} |"
+              f" {d['memory_analysis']['temp_size_in_bytes']/2**30:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""mamba2-1.3b — SSD state-space model, attention-free [arXiv:2405.21060;
+unverified].  d_state 128, headdim 64 (64 SSM heads), chunked SSD scan.
+Vocab 50280 padded to 50432."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    n_layers=48, d_model=2048, vocab=50280,
+    d_state=128, ssm_headdim=64, tie_embeddings=True,
+    # ssm_chunk stays 256: chunk 64 was tried (predicted 4x less decay-
+    # tensor traffic) and REFUTED — with sequence-sharded activations the
+    # decay tensor is no longer dominant, and smaller chunks add inter-chunk
+    # state traffic (6.25 s -> 6.57 s memory term; EXPERIMENTS.md §Perf).
+)

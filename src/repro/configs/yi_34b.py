@@ -1,0 +1,12 @@
+"""yi-34b — llama-architecture GQA [arXiv:2403.04652; hf].
+
+56 q-heads are padded to 64 for even 16-way tensor parallelism (GSPMD would
+otherwise pad internally); kv=8 stays (uneven-sharded on the model axis).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b", family="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=20480, vocab=64000, rope_theta=5_000_000.0, pad_heads_to=16,
+)

@@ -1,0 +1,10 @@
+"""Core: the paper's full-parallel GA as a composable JAX module.
+
+Submodules: lfsr (paper's PRNG), fitness (FFM), ga (FFM+SM+CM+MM datapath),
+islands (multi-pod scaling), evolve (blackbox-tuning service).
+"""
+
+from repro.core.fitness import F1, F2, F3, PROBLEMS, Problem, ArithSpec, build_tables
+from repro.core.ga import GAConfig, GAState, GARun, generation, init_state, run
+from repro.core.islands import IslandConfig, init_islands_fast, run_local, run_sharded
+from repro.core.evolve import evolve, EvolveResult

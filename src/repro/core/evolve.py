@@ -1,0 +1,88 @@
+"""`evolve` — the GA engine exposed as the framework's blackbox-tuning service.
+
+This is how the paper's accelerator integrates with the LM stack as a
+first-class feature: anything expressible as "minimize f(θ) over a box" —
+learning-rate schedule coefficients, serving batch knobs, quantization
+clip scales — can be handed to the full-parallel GA.  The evaluation function
+receives a whole population matrix at once (N, V) and returns (N,) scores, so
+model-based fitness (e.g. run 10 train steps per candidate) can itself be
+vmapped/pmapped by the caller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fitness as F
+from repro.core import ga as G
+from repro.core import islands as ISL
+
+
+@dataclasses.dataclass
+class EvolveResult:
+    best_params: np.ndarray     # [V] decoded
+    best_fitness: float
+    traj_best: np.ndarray       # [K]
+    traj_mean: np.ndarray       # [K]
+
+
+def evolve(fn: Callable[[jax.Array], jax.Array],
+           bounds: Sequence[Tuple[float, float]],
+           *,
+           population: int = 64,
+           generations: int = 100,
+           bits_per_var: int = 16,
+           mutation_rate: float = 0.02,
+           minimize: bool = True,
+           seed: int = 0,
+           n_islands: int = 1,
+           migrate_every: int = 16,
+           jit_fitness: bool = True,
+           mesh=None) -> EvolveResult:
+    """Minimize (or maximize) `fn` over box `bounds` with the parallel GA.
+
+    fn: (N, V) float32 -> (N,) batch evaluator.  Set jit_fitness=False when
+    fn is not traceable (e.g. it runs training trials) — the GA operators
+    stay jitted, fitness runs eagerly.
+    With n_islands > 1 the island model is used (sharded over `mesh` when
+    given, vmapped locally otherwise).
+    """
+    v = len(bounds)
+    cfg = G.GAConfig(n=population, c=bits_per_var, v=v,
+                     mutation_rate=mutation_rate, minimize=minimize,
+                     seed=seed, mode="arith")
+    fit = G.make_blackbox_fitness(fn, bits_per_var, bounds)
+
+    if n_islands <= 1:
+        if jit_fitness:
+            out = jax.jit(lambda: G.run(cfg, fit, generations))()
+        else:
+            out = G.run_unjitted(cfg, fit, generations)
+        lo = np.array([b[0] for b in bounds])
+        hi = np.array([b[1] for b in bounds])
+        u = np.asarray(out.best_x) & cfg.var_mask
+        params = lo + u.astype(np.float64) * (hi - lo) / ((1 << bits_per_var) - 1)
+        return EvolveResult(params, float(out.best_y),
+                            np.asarray(out.traj_best), np.asarray(out.traj_mean))
+
+    icfg = ISL.IslandConfig(ga=cfg, n_islands=n_islands,
+                            migrate_every=migrate_every)
+    epochs = max(1, generations // migrate_every)
+    if mesh is not None:
+        states, best = ISL.run_sharded(icfg, fit, mesh, epochs)
+    else:
+        states, best = ISL.run_local(icfg, fit, epochs)
+    # recover best chromosome across islands
+    y = jax.vmap(fit)(states.x).astype(jnp.float32)
+    flat = y.reshape(-1)
+    idx = int(jnp.argmin(flat) if minimize else jnp.argmax(flat))
+    xi = np.asarray(states.x.reshape(-1, v)[idx]) & cfg.var_mask
+    lo = np.array([b[0] for b in bounds])
+    hi = np.array([b[1] for b in bounds])
+    params = lo + xi.astype(np.float64) * (hi - lo) / ((1 << bits_per_var) - 1)
+    return EvolveResult(params, float(flat[idx]), np.array([best]), np.array([]))

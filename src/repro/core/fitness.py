@@ -1,0 +1,210 @@
+"""Fitness Function Module (FFM) — paper Sec. 3.1.
+
+The paper computes  y = γ(α(px) + β(qx))  with three ROMs per individual:
+α and β are LUTs over the c = m/2 bit halves of the chromosome, γ a LUT over
+the d-bit sum δ.  Any separable two-variable function fits (Eq. 11); products
+of the two variables do not (paper's stated limitation — same here).
+
+Two modes:
+  * ``lut``   — faithful: int32 fixed-point tables, XLA gathers (ROM analogue).
+  * ``arith`` — TPU-native: α/β/γ evaluated in f32 on the VPU. On TPU, HBM
+    gathers are far more expensive than a few FMAs; this is the first
+    beyond-paper optimization (recorded in EXPERIMENTS.md §Perf).
+
+Both modes share the same domain mapping: a c-bit unsigned chromosome half u
+decodes to   v = lo + u * (hi - lo) / (2^c - 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A separable two-variable optimisation problem (Eq. 11 of the paper)."""
+
+    name: str
+    alpha: Callable[[np.ndarray], np.ndarray]   # α(px)
+    beta: Callable[[np.ndarray], np.ndarray]    # β(qx)
+    gamma: Callable[[np.ndarray], np.ndarray]   # γ(δ)
+    domain: tuple  # (lo, hi) for each decoded variable
+    minimize: bool = True
+    single_var: bool = False  # paper's one-variable case: α(px)=0, only qx used
+
+    def f(self, px: np.ndarray, qx: np.ndarray) -> np.ndarray:
+        return self.gamma(self.alpha(px) + self.beta(qx))
+
+
+# --- The paper's three validation functions (Sec. 4) -----------------------
+
+# F1: f(x) = x^3 - 15 x^2 + 500   (one variable; paper Eq. 24, range ±2^12)
+F1 = Problem(
+    name="F1",
+    alpha=lambda px: np.zeros_like(px, dtype=np.float64),
+    beta=lambda qx: qx ** 3 - 15.0 * qx ** 2 + 500.0,
+    gamma=lambda d: d,
+    domain=(-4096.0, 4095.0),
+    minimize=True,
+    single_var=True,
+)
+
+# F2: f(x, y) = 8x - 4y + 1020   (paper Eq. 25)
+F2 = Problem(
+    name="F2",
+    alpha=lambda px: 8.0 * px,
+    beta=lambda qx: -4.0 * qx + 1020.0,
+    gamma=lambda d: d,
+    domain=(-128.0, 127.0),
+    minimize=True,
+)
+
+# F3: f(x, y) = sqrt(x^2 + y^2)   (paper Eq. 26)
+F3 = Problem(
+    name="F3",
+    alpha=lambda px: px.astype(np.float64) ** 2,
+    beta=lambda qx: qx.astype(np.float64) ** 2,
+    gamma=lambda d: np.sqrt(np.maximum(d, 0.0)),
+    domain=(-128.0, 127.0),
+    minimize=True,
+)
+
+PROBLEMS = {"F1": F1, "F2": F2, "F3": F3}
+
+
+def decode(u: jax.Array, c: int, domain: tuple) -> jax.Array:
+    """Decode a c-bit unsigned half-chromosome to its real value."""
+    lo, hi = domain
+    scale = (hi - lo) / float((1 << c) - 1)
+    return lo + u.astype(jnp.float32) * jnp.float32(scale)
+
+
+# ---------------------------------------------------------------------------
+# LUT (faithful) mode
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LutTables:
+    """Fixed-point ROM contents for one Problem at a given m.
+
+    alpha_t, beta_t: int32[2^c] — α/β values scaled by 2^frac_bits.
+    gamma_t: int32[2^g] or None (None == identity γ, paper's F1/F2 case where
+             the third ROM is a pass-through).
+    delta_min / delta_shift: the γ ROM is addressed by
+             clip((δ - delta_min) >> delta_shift, 0, 2^g - 1).
+    """
+
+    c: int
+    frac_bits: int
+    alpha_t: np.ndarray
+    beta_t: np.ndarray
+    gamma_t: Optional[np.ndarray]
+    delta_min: int
+    delta_shift: int
+    g: int
+
+
+def build_tables(problem: Problem, m: int, frac_bits: Optional[int] = None,
+                 g: int = 14) -> LutTables:
+    """Quantize α/β/γ into ROM tables, the FFM's synthesis step.
+
+    frac_bits may be negative (coarser-than-integer fixed point) — exactly
+    what a hardware synthesis would do when the fitness range exceeds the
+    ROM word width.  If None, the largest value keeping |α|+|β| within int31
+    is chosen automatically (capped at 8 fractional bits).
+    """
+    c = m // 2
+    u = np.arange(1 << c, dtype=np.float64)
+    lo, hi = problem.domain
+    v = lo + u * (hi - lo) / float((1 << c) - 1)
+
+    if frac_bits is None:
+        peak = (np.abs(problem.alpha(v)).max() + np.abs(problem.beta(v)).max())
+        frac_bits = 8
+        while frac_bits > -24 and peak * (2.0 ** frac_bits) >= 2 ** 30:
+            frac_bits -= 1
+
+    scale = float(2.0 ** frac_bits)
+    a = np.round(problem.alpha(v) * scale).astype(np.int64)
+    b = np.round(problem.beta(v) * scale).astype(np.int64)
+
+    # int32 saturation (the ROM word width)
+    i32 = lambda t: np.clip(t, -(2 ** 31), 2 ** 31 - 1).astype(np.int32)
+    alpha_t, beta_t = i32(a), i32(b)
+
+    is_identity = problem.gamma(np.array([0.0, 1.0, 2.0])).tolist() == [0.0, 1.0, 2.0]
+    if is_identity:
+        return LutTables(c, frac_bits, alpha_t, beta_t, None, 0, 0, 0)
+
+    dmin = int(a.min() + b.min())
+    dmax = int(a.max() + b.max())
+    span = max(dmax - dmin, 1)
+    shift = max(0, int(np.ceil(np.log2(span / ((1 << g) - 1) + 1e-12))) if span >= (1 << g) else 0)
+    # γ table: value at address k represents δ = dmin + (k << shift)
+    k = np.arange(1 << g, dtype=np.int64)
+    delta = (dmin + (k << shift)).astype(np.float64) / scale
+    gamma_t = i32(np.round(problem.gamma(delta) * scale))
+    return LutTables(c, frac_bits, alpha_t, beta_t, gamma_t, dmin, shift, g)
+
+
+def lut_fitness(px: jax.Array, qx: jax.Array, t: LutTables) -> jax.Array:
+    """Faithful FFM: two ROM reads, an add, one more ROM read. int32 out."""
+    a = jnp.asarray(t.alpha_t)[px]
+    b = jnp.asarray(t.beta_t)[qx]
+    d = a + b
+    if t.gamma_t is None:
+        return d
+    addr = jnp.clip((d - jnp.int32(t.delta_min)) >> t.delta_shift, 0, (1 << t.g) - 1)
+    return jnp.asarray(t.gamma_t)[addr]
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic (TPU-native) mode
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArithSpec:
+    """Closed-form fitness for the VPU: cubic α/β + {identity,sqrt} γ.
+
+    α(v) = a3 v³ + a2 v² + a1 v + a0 (same for β); covers the paper's F1–F3
+    and anything polynomial; γ ∈ {identity, sqrt}.
+    """
+
+    alpha_coef: tuple  # (a3, a2, a1, a0)
+    beta_coef: tuple
+    gamma_sqrt: bool
+    domain: tuple
+
+    @staticmethod
+    def for_problem(problem: Problem) -> "ArithSpec":
+        specs = {
+            "F1": ((0.0, 0.0, 0.0, 0.0), (1.0, -15.0, 0.0, 500.0), False),
+            "F2": ((0.0, 0.0, 8.0, 0.0), (0.0, 0.0, -4.0, 1020.0), False),
+            "F3": ((0.0, 1.0, 0.0, 0.0), (0.0, 1.0, 0.0, 0.0), True),
+        }
+        if problem.name not in specs:
+            raise ValueError(f"no ArithSpec for {problem.name}")
+        a, b, s = specs[problem.name]
+        return ArithSpec(a, b, s, problem.domain)
+
+
+def _poly3(v: jax.Array, coef: tuple) -> jax.Array:
+    a3, a2, a1, a0 = (jnp.float32(x) for x in coef)
+    return ((a3 * v + a2) * v + a1) * v + a0
+
+
+def arith_fitness(px: jax.Array, qx: jax.Array, c: int, spec: ArithSpec) -> jax.Array:
+    """TPU-native FFM: decode + FMAs on the VPU, no memory traffic."""
+    vp = decode(px, c, spec.domain)
+    vq = decode(qx, c, spec.domain)
+    d = _poly3(vp, spec.alpha_coef) + _poly3(vq, spec.beta_coef)
+    if spec.gamma_sqrt:
+        d = jnp.sqrt(jnp.maximum(d, 0.0))
+    return d

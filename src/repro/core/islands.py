@@ -1,0 +1,194 @@
+"""Island-model parallel GA — how the paper's one-FPGA datapath scales to pods.
+
+The paper instantiates the full GA once per FPGA; its cited related work [19]
+(Guo et al., multi-FPGA parallel GAs) scales by running isolated populations
+("islands") that periodically exchange good individuals.  We map that to the
+TPU production mesh:
+
+  * a device holds `islands_per_device` independent populations,
+    vmapped over the leading axis (the VPU analogue of replicated datapaths);
+  * the global island array is sharded over EVERY mesh axis with `shard_map`;
+  * every `migrate_every` generations the best individual of each island is
+    ring-shipped to the next device with `jax.lax.ppermute`
+    (collective-permute == the inter-FPGA links of [19]), replacing the
+    recipient island's worst individual.
+
+Migration is overlapped with compute by construction: the permute is issued
+on a [I_local, V]-sized elite buffer (tiny) while the next local-generation
+scan runs on values that do not depend on it until the splice point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import ga as G
+from repro.core import lfsr
+
+
+@dataclasses.dataclass(frozen=True)
+class IslandConfig:
+    ga: G.GAConfig
+    n_islands: int               # global island count I
+    migrate_every: int = 16      # generations between migrations
+    axis_names: tuple = ("data", "model")  # mesh axes the islands shard over
+
+
+def init_islands(cfg: IslandConfig) -> G.GAState:
+    """Stack of I island states with decorrelated seeds."""
+    states = []
+    for i in range(cfg.n_islands):
+        sub = dataclasses.replace(cfg.ga, seed=cfg.ga.seed + 7919 * (i + 1))
+        states.append(G.init_state(sub))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def init_islands_fast(cfg: IslandConfig) -> G.GAState:
+    """Vectorized init (no per-island python loop) for large I."""
+    I, n, v = cfg.n_islands, cfg.ga.n, cfg.ga.v
+    per = 2 * n + v * (n // 2) + 2 * v * n
+    s = lfsr.seeds(cfg.ga.seed, I * per).reshape(I, per)
+    sel = s[:, : 2 * n].reshape(I, 2, n)
+    cross = s[:, 2 * n: 2 * n + v * (n // 2)].reshape(I, v, n // 2)
+    mut = s[:, 2 * n + v * (n // 2): 2 * n + v * (n // 2) + v * n].reshape(I, v, n)
+    init_bank = s[:, -v * n:].reshape(I, n, v)
+    x = lfsr.truncate(lfsr.steps(init_bank, 8), cfg.ga.c)
+    return G.GAState(x=x, sel_lfsr=sel, cross_lfsr=cross, mut_lfsr=mut,
+                     k=jnp.zeros((I,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Local (single-device) island stepping
+# ---------------------------------------------------------------------------
+
+
+def _local_generations(states: G.GAState, cfg: IslandConfig,
+                       fit: G.FitnessFn, gens: int) -> Tuple[G.GAState, jax.Array]:
+    """Run `gens` generations on a stack of islands; returns final fitness."""
+    step = functools.partial(G.generation, cfg=cfg.ga, fit=fit)
+
+    def one(st, _):
+        st2, y = jax.vmap(lambda s: step(s))(st)
+        return st2, None
+
+    states, _ = jax.lax.scan(one, states, None, length=gens)
+    y = jax.vmap(fit)(states.x)
+    return states, y
+
+
+def _splice_elites(states: G.GAState, y: jax.Array, elites: jax.Array,
+                   cfg: IslandConfig) -> G.GAState:
+    """Replace each island's worst individual with the incoming elite."""
+    minimize = cfg.ga.minimize
+    yf = y.astype(jnp.float32)
+    worst = jnp.argmax(yf, axis=1) if minimize else jnp.argmin(yf, axis=1)
+    I = states.x.shape[0]
+    x = states.x.at[jnp.arange(I), worst].set(elites)
+    return states._replace(x=x)
+
+
+def _best_of(states: G.GAState, y: jax.Array, cfg: IslandConfig):
+    yf = y.astype(jnp.float32)
+    best = jnp.argmin(yf, axis=1) if cfg.ga.minimize else jnp.argmax(yf, axis=1)
+    I = states.x.shape[0]
+    return states.x[jnp.arange(I), best], yf[jnp.arange(I), best]
+
+
+# ---------------------------------------------------------------------------
+# Sharded multi-pod runner
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_step(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh
+                      ) -> Callable[[G.GAState], Tuple[G.GAState, jax.Array]]:
+    """Build the jit/shard_map epoch step for the production mesh.
+
+    One call = `migrate_every` local generations + one ring migration.
+    Island axis is sharded over all `cfg.axis_names` mesh axes jointly.
+    """
+    axes = cfg.axis_names
+    spec_leading = P(axes)  # shard leading (island) dim over all axes
+
+    def spec_for(x):
+        return P(axes, *([None] * (x.ndim - 1)))
+
+    def epoch(states: G.GAState) -> Tuple[G.GAState, jax.Array]:
+        states, y = _local_generations(states, cfg, fit, cfg.migrate_every)
+        elite_x, elite_y = _best_of(states, y, cfg)
+        # ring-migrate elites to the next device along the *last* mesh axis,
+        # composing rings across axes (pod ring at the wrap point).
+        perm_axis = axes[-1]
+        n_dev = np.prod([mesh.shape[a] for a in axes])
+        size_last = mesh.shape[perm_axis]
+        shifted = jax.lax.ppermute(
+            elite_x, perm_axis,
+            perm=[(i, (i + 1) % size_last) for i in range(size_last)])
+        states = _splice_elites(states, y, shifted, cfg)
+        del n_dev
+        return states, elite_y
+
+    state_specs = G.GAState(
+        x=spec_for(jnp.zeros((1, 1, 1))),
+        sel_lfsr=spec_for(jnp.zeros((1, 1, 1))),
+        cross_lfsr=spec_for(jnp.zeros((1, 1, 1))),
+        mut_lfsr=spec_for(jnp.zeros((1, 1, 1))),
+        k=P(axes),
+    )
+    sharded = shard_map(epoch, mesh=mesh, in_specs=(state_specs,),
+                        out_specs=(state_specs, P(axes)), check_rep=False)
+    return jax.jit(sharded)
+
+
+def run_sharded(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
+                epochs: int, states: Optional[G.GAState] = None):
+    """Drive `epochs` migration epochs on the mesh; returns best over all."""
+    if states is None:
+        states = init_islands_fast(cfg)
+        sharding = jax.tree.map(
+            lambda _: NamedSharding(mesh, P(cfg.axis_names)), states,
+            is_leaf=lambda x: False)
+        states = jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(
+                mesh, P(cfg.axis_names, *([None] * (x.ndim - 1))))), states)
+        del sharding
+    step = make_sharded_step(cfg, fit, mesh)
+    best = None
+    for _ in range(epochs):
+        states, elite_y = step(states)
+        e = float(jnp.min(elite_y) if cfg.ga.minimize else jnp.max(elite_y))
+        best = e if best is None else (min(best, e) if cfg.ga.minimize else max(best, e))
+    return states, best
+
+
+# ---------------------------------------------------------------------------
+# Single-host convenience (vmap only, no mesh) — used by tests/benchmarks
+# ---------------------------------------------------------------------------
+
+
+def run_local(cfg: IslandConfig, fit: G.FitnessFn, epochs: int,
+              states: Optional[G.GAState] = None):
+    if states is None:
+        states = init_islands_fast(cfg)
+
+    @jax.jit
+    def epoch(states):
+        states, y = _local_generations(states, cfg, fit, cfg.migrate_every)
+        elite_x, elite_y = _best_of(states, y, cfg)
+        shifted = jnp.roll(elite_x, 1, axis=0)  # on-host ring
+        states = _splice_elites(states, y, shifted, cfg)
+        return states, elite_y
+
+    best = None
+    for _ in range(epochs):
+        states, elite_y = epoch(states)
+        e = float(jnp.min(elite_y) if cfg.ga.minimize else jnp.max(elite_y))
+        best = e if best is None else (min(best, e) if cfg.ga.minimize else max(best, e))
+    return states, best

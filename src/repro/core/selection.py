@@ -1,0 +1,102 @@
+"""Selection-method variants (paper Sec. 2 surveys these; the hardware
+implements tournament-of-2 — we provide the others as drop-in SMs so the
+engine covers the survey, all full-parallel).
+
+Each returns (selected population W, new lfsr state); all consume the same
+(2, N) LFSR bank as the tournament SM so the GAState layout is unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lfsr
+from repro.core.ga import GAConfig
+
+
+def tournament(x, y, sel_lfsr, cfg: GAConfig):
+    """The paper's SM: N parallel 2-way tournaments (re-exported)."""
+    from repro.core.ga import _select
+    return _select(x, y, sel_lfsr, cfg)
+
+
+def tournament_k(x, y, sel_lfsr, cfg: GAConfig, k: int = 4):
+    """k-way tournament: draw k indices per slot (k/2 draws per bank lane by
+    re-stepping), pick the best.  Stronger selection pressure than 2-way."""
+    n = cfg.n
+    state = sel_lfsr
+    idx = []
+    for _ in range(k):
+        state, r = lfsr.draw(state, cfg.steps_per_draw)
+        i = lfsr.truncate(r[0] ^ r[1], cfg.idx_bits).astype(jnp.int32)
+        if n & (n - 1):
+            i = i % n
+        idx.append(i)
+    idx = jnp.stack(idx, axis=1)                       # (N, k)
+    ys = y[idx].astype(jnp.float32)                    # (N, k)
+    pick = jnp.argmin(ys, axis=1) if cfg.minimize else jnp.argmax(ys, axis=1)
+    winner = jnp.take_along_axis(idx, pick[:, None], axis=1)[:, 0]
+    return x[winner], state
+
+
+def roulette(x, y, sel_lfsr, cfg: GAConfig):
+    """Fitness-proportional selection via inverse-CDF on LFSR draws.
+
+    Minimization uses (max - y) weighting; ties/flat fitness degrade to
+    uniform — matching the classical definition."""
+    yf = y.astype(jnp.float32)
+    w = (jnp.max(yf) - yf) if cfg.minimize else (yf - jnp.min(yf))
+    w = w + 1e-9
+    cdf = jnp.cumsum(w) / jnp.sum(w)                   # (N,)
+    state, r = lfsr.draw(sel_lfsr, cfg.steps_per_draw)
+    u = (r[0].astype(jnp.float32) / jnp.float32(2 ** 32))  # (N,) in [0,1)
+    sel = jnp.searchsorted(cdf, u)
+    sel = jnp.clip(sel, 0, cfg.n - 1)
+    return x[sel], state
+
+
+def rank(x, y, sel_lfsr, cfg: GAConfig):
+    """Linear-rank selection: probability ∝ (N - rank)."""
+    yf = y.astype(jnp.float32)
+    order = jnp.argsort(yf) if cfg.minimize else jnp.argsort(-yf)
+    ranks = jnp.zeros((cfg.n,), jnp.float32).at[order].set(
+        jnp.arange(cfg.n, 0, -1, dtype=jnp.float32))
+    cdf = jnp.cumsum(ranks) / jnp.sum(ranks)
+    state, r = lfsr.draw(sel_lfsr, cfg.steps_per_draw)
+    u = r[0].astype(jnp.float32) / jnp.float32(2 ** 32)
+    sel = jnp.clip(jnp.searchsorted(cdf, u), 0, cfg.n - 1)
+    return x[sel], state
+
+
+def with_elitism(select_fn, n_elite: int = 1):
+    """Wrap any SM so the n_elite best individuals always survive into W
+    (slots 0..n_elite-1, i.e. they may still be mutated — set MR/P
+    accordingly, or place them beyond index P to protect them)."""
+
+    def fn(x, y, sel_lfsr, cfg: GAConfig):
+        w, state = select_fn(x, y, sel_lfsr, cfg)
+        yf = y.astype(jnp.float32)
+        best = jnp.argsort(yf if cfg.minimize else -yf)[:n_elite]
+        w = w.at[jnp.arange(n_elite) + cfg.p].set(x[best]) \
+            if cfg.p + n_elite <= cfg.n else w.at[:n_elite].set(x[best])
+        return w, state
+
+    return fn
+
+
+SELECTORS = {"tournament": tournament, "tournament4": tournament_k,
+             "roulette": roulette, "rank": rank}
+
+
+def generation_with(selector, state, cfg: GAConfig, fit):
+    """A GA generation using an alternative SM (same CM/MM as the paper)."""
+    from repro.core import ga as G
+    y = fit(state.x)
+    w, sel_lfsr = selector(state.x, y, state.sel_lfsr, cfg)
+    z, cross_lfsr = G._crossover(w, state.cross_lfsr, cfg)
+    x_new, mut_lfsr = G._mutate(z, state.mut_lfsr, cfg)
+    return G.GAState(x_new, sel_lfsr, cross_lfsr, mut_lfsr, state.k + 1), y

@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: one fused GA generation per island.
+
+This is the TPU re-expression of the paper's full-parallel datapath: on the
+FPGA, FFM/SM/CM/MM are N physically parallel circuits clocked as one 3-cycle
+pipeline; here the whole generation is ONE kernel launch whose working set
+(population, fitness vector, LFSR banks, one-hot tournament matrices) lives
+entirely in VMEM — no HBM round-trips between GA stages.
+
+Key adaptation — MUX trees → MXU matmuls:
+  the paper gathers tournament contestants through N-input multiplexer trees
+  (SMMUX1..3, the source of its O(N²) LUT growth).  A TPU has no per-lane
+  dynamic gather, but the systolic array contracts a one-hot matrix against
+  the population in O(N²) MACs — the exact same asymptotics as the MUX-tree
+  area, now in hardware we do have.  Bit-exactness is preserved by splitting
+  each uint32 word into two 16-bit halves before the f32 matmul (≤ 2^16 is
+  exactly representable; each one-hot row has a single nonzero so the
+  accumulation is exact), then recombining.
+
+Grid: one program instance per island.  VMEM budget per instance is dominated
+by the (N, N) one-hot f32 matrices → N ≤ 1024 keeps it ≤ 4 MiB (checked).
+The FPGA paper tops out at N=64; larger populations use more islands or the
+pure-JAX path in repro.core.ga.
+
+Fitness inside the kernel is the TPU-native arithmetic mode (cubic α/β + γ ∈
+{identity, sqrt} on the VPU).  LUT-mode (HBM gather tables) stays in the
+pure-JAX path — gathers inside a TPU kernel would defeat the fusion.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.fitness import ArithSpec
+from repro.core.ga import GAConfig
+
+
+def _lfsr_draw(state, steps: int):
+    """In-kernel LFSR-32 advance (paper polynomial r^32+r^22+r^2+1)."""
+    s = state
+    for _ in range(steps):
+        fb = ((s >> 31) ^ (s >> 21) ^ (s >> 1) ^ s) & jnp.uint32(1)
+        s = (s << 1) | fb
+    return s
+
+
+def _onehot_gather_u32(oh: jax.Array, x: jax.Array) -> jax.Array:
+    """Exact uint32 gather via two 16-bit-half f32 matmuls on the MXU."""
+    hi = (x >> 16).astype(jnp.float32)
+    lo = (x & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    ghi = jax.lax.dot(oh, hi, precision=jax.lax.Precision.HIGHEST)
+    glo = jax.lax.dot(oh, lo, precision=jax.lax.Precision.HIGHEST)
+    return (ghi.astype(jnp.uint32) << 16) | glo.astype(jnp.uint32)
+
+
+def _kernel(x_ref, sel_ref, cross_ref, mut_ref,          # inputs
+            x_out, sel_out, cross_out, mut_out, y_out,   # outputs
+            *, cfg: GAConfig, spec: ArithSpec, gens: int = 1):
+    """One or MANY generations per launch.
+
+    gens > 1 is the VMEM-residency optimization (EXPERIMENTS.md §Perf GA
+    iter 2): the FPGA keeps population + LFSRs in registers between clock
+    beats; we keep them in VMEM between generations, so HBM sees one state
+    read + one write per `gens` generations instead of per generation."""
+    if gens > 1:
+        def body(_, carry):
+            return _one_generation(*carry, cfg=cfg, spec=spec)
+
+        x, sel, cross, mut, y = jax.lax.fori_loop(
+            0, gens, body,
+            (x_ref[0], sel_ref[0], cross_ref[0], mut_ref[0],
+             jnp.zeros((cfg.n,), jnp.float32)))
+        x_out[0], sel_out[0], cross_out[0], mut_out[0], y_out[0] = \
+            x, sel, cross, mut, y
+        return
+    x, sel, cross, mut, y = _one_generation(
+        x_ref[0], sel_ref[0], cross_ref[0], mut_ref[0],
+        jnp.zeros((cfg.n,), jnp.float32), cfg=cfg, spec=spec)
+    x_out[0], sel_out[0], cross_out[0], mut_out[0], y_out[0] = \
+        x, sel, cross, mut, y
+
+
+def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
+                    *, cfg: GAConfig, spec: ArithSpec):
+    n, v, c = cfg.n, cfg.v, cfg.c
+    var_mask = jnp.uint32((1 << c) - 1)
+
+    # ---- FFM (arithmetic mode, VPU) --------------------------------------
+    lo, hi = spec.domain
+    scale = jnp.float32((hi - lo) / float((1 << c) - 1))
+    vals = jnp.float32(lo) + (x & var_mask).astype(jnp.float32) * scale
+
+    def poly3(vv, coef):
+        a3, a2, a1, a0 = (jnp.float32(t) for t in coef)
+        return ((a3 * vv + a2) * vv + a1) * vv + a0
+
+    delta = poly3(vals[:, 0], spec.alpha_coef) + poly3(vals[:, 1], spec.beta_coef)
+    y = jnp.sqrt(jnp.maximum(delta, 0.0)) if spec.gamma_sqrt else delta  # (N,)
+
+    # ---- SM: tournaments via one-hot MXU gathers --------------------------
+    sel = _lfsr_draw(sel_in, cfg.steps_per_draw)          # (2, N)
+    i1 = (sel[0] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)
+    i2 = (sel[1] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    oh1 = (iota == i1[:, None]).astype(jnp.float32)
+    oh2 = (iota == i2[:, None]).astype(jnp.float32)
+    y1 = jax.lax.dot(oh1, y[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    y2 = jax.lax.dot(oh2, y[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    first_wins = (y1 <= y2) if cfg.minimize else (y1 >= y2)
+    ohw = jnp.where(first_wins[:, None], oh1, oh2)        # winner one-hot
+    w = _onehot_gather_u32(ohw, x)                        # (N, V)
+
+    # ---- CM: mask-shift single-point crossover ----------------------------
+    cross = _lfsr_draw(cross_in, cfg.steps_per_draw)      # (V, N/2)
+    cut = (cross >> jnp.uint32(32 - cfg.cut_bits)).astype(jnp.uint32)
+    cut = jnp.minimum(cut, jnp.uint32(c))
+    s = (var_mask >> cut).T                               # (N/2, V)
+    wp = w.reshape(n // 2, 2, v)
+    w1, w2 = wp[:, 0], wp[:, 1]
+    z1 = (w1 & ~s) | (w2 & s)
+    z2 = (w2 & ~s) | (w1 & s)
+    z = jnp.stack([z1, z2], axis=1).reshape(n, v)
+
+    # ---- MM: XOR-mutate the first P --------------------------------------
+    mut = _lfsr_draw(mut_in, cfg.steps_per_draw)          # (V, N)
+    rbits = (mut >> jnp.uint32(32 - c)).T                 # (N, V)
+    mut_row = (jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0) < cfg.p)
+    x_new = jnp.where(mut_row, z ^ rbits, z)
+    return x_new, sel, cross, mut, y
+
+
+def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
+                         spec: ArithSpec, interpret: bool = False,
+                         gens: int = 1
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Launch the fused generation(s) over a stack of islands.
+
+    x: uint32[I, N, V]; sel: uint32[I, 2, N]; cross: uint32[I, V, N//2];
+    mut: uint32[I, V, N].  Returns (x', sel', cross', mut', y[I, N]).
+    gens: generations per launch (VMEM-resident state between them).
+    """
+    assert cfg.n & (cfg.n - 1) == 0, "kernel path requires power-of-two N"
+    assert cfg.n <= 1024, "one-hot (N,N) must fit VMEM; use islands for more"
+    i_islands, n, v = x.shape
+    assert (n, v) == (cfg.n, cfg.v)
+
+    blk = lambda *shape: pl.BlockSpec((1,) + shape, lambda i: (i,) + (0,) * len(shape))
+    grid = (i_islands,)
+    kernel = functools.partial(_kernel, cfg=cfg, spec=spec, gens=gens)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n)],
+        out_specs=[blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n), blk(n)],
+        out_shape=[
+            jax.ShapeDtypeStruct((i_islands, n, v), jnp.uint32),
+            jax.ShapeDtypeStruct((i_islands, 2, n), jnp.uint32),
+            jax.ShapeDtypeStruct((i_islands, v, n // 2), jnp.uint32),
+            jax.ShapeDtypeStruct((i_islands, v, n), jnp.uint32),
+            jax.ShapeDtypeStruct((i_islands, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, sel, cross, mut)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: bulk LFSR-32 advance.
+
+Advances a large bank of independent LFSR lanes `steps` clocks.  Used to
+(re)seed island farms and to stream random words for the pure-JAX GA path
+without materializing intermediate states in HBM.
+
+Tiling: the lane array is viewed as (rows, 128); each program instance
+processes an (8, 128) VMEM tile — the native f32/int32 TPU tile, so the
+bitwise VPU ops are perfectly aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TILE_R, TILE_C = 8, 128
+
+
+def _kernel(s_ref, o_ref, *, steps: int):
+    s = s_ref[...]
+
+    def one(_, s):
+        fb = ((s >> 31) ^ (s >> 21) ^ (s >> 1) ^ s) & jnp.uint32(1)
+        return (s << 1) | fb
+
+    o_ref[...] = jax.lax.fori_loop(0, steps, one, s) if steps > 8 else \
+        functools.reduce(lambda a, _: one(0, a), range(steps), s)
+
+
+def lfsr_advance_kernel(state: jax.Array, steps: int,
+                        interpret: bool = False) -> jax.Array:
+    """Advance every lane of `state` (any shape, uint32) `steps` clocks."""
+    shape = state.shape
+    flat = state.reshape(-1)
+    n = flat.shape[0]
+    per_tile = TILE_R * TILE_C
+    pad = (-n) % per_tile
+    if pad:
+        flat = jnp.concatenate([flat, jnp.ones((pad,), jnp.uint32)])
+    rows = flat.shape[0] // TILE_C
+    grid = (rows // TILE_R,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, steps=steps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, TILE_C), jnp.uint32),
+        interpret=interpret,
+    )(flat.reshape(rows, TILE_C))
+    return out.reshape(-1)[:n].reshape(shape)

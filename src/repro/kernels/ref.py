@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These mirror the kernels op-for-op using plain indexing instead of one-hot
+matmuls; the kernels must match them BIT-EXACTLY (uint32) / exactly (f32
+fitness, since every one-hot contraction has a single nonzero and 16-bit
+halves are exact in f32).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lfsr
+from repro.core.fitness import ArithSpec, decode
+from repro.core.ga import GAConfig
+
+
+def lfsr_advance_ref(state: jax.Array, steps: int) -> jax.Array:
+    return lfsr.steps(state, steps)
+
+
+def _fitness_ref(x: jax.Array, cfg: GAConfig, spec: ArithSpec) -> jax.Array:
+    c = cfg.c
+    mask = jnp.uint32((1 << c) - 1)
+    lo, hi = spec.domain
+    scale = jnp.float32((hi - lo) / float((1 << c) - 1))
+    vals = jnp.float32(lo) + (x & mask).astype(jnp.float32) * scale
+
+    def poly3(vv, coef):
+        a3, a2, a1, a0 = (jnp.float32(t) for t in coef)
+        return ((a3 * vv + a2) * vv + a1) * vv + a0
+
+    d = poly3(vals[:, 0], spec.alpha_coef) + poly3(vals[:, 1], spec.beta_coef)
+    return jnp.sqrt(jnp.maximum(d, 0.0)) if spec.gamma_sqrt else d
+
+
+def ga_generation_ref(x, sel, cross, mut, *, cfg: GAConfig, spec: ArithSpec
+                      ) -> Tuple[jax.Array, ...]:
+    """Oracle for ga_step: operates on stacked islands via vmap."""
+
+    def one(x, sel, cross, mut):
+        n, v, c = cfg.n, cfg.v, cfg.c
+        var_mask = jnp.uint32((1 << c) - 1)
+        y = _fitness_ref(x, cfg, spec)
+
+        sel2 = lfsr.steps(sel, cfg.steps_per_draw)
+        i1 = (sel2[0] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)
+        i2 = (sel2[1] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)
+        y1, y2 = y[i1], y[i2]
+        first = (y1 <= y2) if cfg.minimize else (y1 >= y2)
+        w = jnp.where(first[:, None], x[i1], x[i2])
+
+        cross2 = lfsr.steps(cross, cfg.steps_per_draw)
+        cut = (cross2 >> jnp.uint32(32 - cfg.cut_bits)).astype(jnp.uint32)
+        cut = jnp.minimum(cut, jnp.uint32(c))
+        s = (var_mask >> cut).T
+        w1, w2 = w[0::2], w[1::2]
+        z1 = (w1 & ~s) | (w2 & s)
+        z2 = (w2 & ~s) | (w1 & s)
+        z = jnp.stack([z1, z2], axis=1).reshape(n, v)
+
+        mut2 = lfsr.steps(mut, cfg.steps_per_draw)
+        rbits = (mut2 >> jnp.uint32(32 - c)).T
+        mrow = (jnp.arange(n) < cfg.p)[:, None]
+        x_new = jnp.where(mrow, z ^ rbits, z)
+        return x_new, sel2, cross2, mut2, y
+
+    return jax.vmap(one)(x, sel, cross, mut)

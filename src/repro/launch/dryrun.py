@@ -1,0 +1,299 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+512 placeholder devices, print memory/cost analysis, save roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all          # sweep (subprocess/cell)
+    PYTHONPATH=src python -m repro.launch.dryrun --ga           # the GA mega-cell
+
+Results land in dryrun_results/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+
+# The VERY FIRST lines — before ANY other import — jax locks the device
+# count on first init:
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import roofline as RL
+from repro import sharding as SH
+from repro.configs import REGISTRY, get_config
+from repro.configs.base import ModelConfig
+from repro.launch import shapes as SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import common as C
+from repro.models import lm as LM
+from repro.optim import adamw as OPT
+from repro.train import step as TS
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "dryrun_results")
+
+MESHES = {"pod1": dict(multi_pod=False), "pod2": dict(multi_pod=True)}
+
+
+def abstract_opt_state(defs, opt_cfg: OPT.AdamWConfig):
+    """ShapeDtypeStruct tree for the optimizer state (sharded like params)."""
+    def moment(d: C.ParamDef):
+        if opt_cfg.state_bits == 8 and OPT.quantizable(d.shape, opt_cfg.block):
+            shp_s = d.shape[:-1] + (d.shape[-1] // opt_cfg.block,)
+            return OPT.QTensor(
+                q=jax.ShapeDtypeStruct(d.shape, jnp.int8,
+                                       sharding=SH.named_sharding(d.axes, d.shape)),
+                scale=jax.ShapeDtypeStruct(shp_s, jnp.float32,
+                                           sharding=SH.named_sharding(d.axes, shp_s)),
+                shape=d.shape, npad=0)
+        return jax.ShapeDtypeStruct(d.shape, jnp.float32,
+                                    sharding=SH.named_sharding(d.axes, d.shape))
+
+    is_def = C.is_def
+    return OPT.AdamState(
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=SH.named_sharding(())),
+        m=jax.tree.map(moment, defs, is_leaf=is_def),
+        v=jax.tree.map(moment, defs, is_leaf=is_def))
+
+
+def model_flops_total(cfg: ModelConfig, shape: SHAPES.ShapeSpec) -> float:
+    """Useful-FLOP convention: 6·N_active·D train, 2·N_active·D forward."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def build_cell(cfg: ModelConfig, shape: SHAPES.ShapeSpec,
+               opt_bits: Optional[int] = None):
+    """Returns (fn, args) ready to lower under the active mesh."""
+    max_seq = shape.seq_len
+    defs = LM.model_defs(cfg, max_seq=max_seq)
+    params = C.abstract_params(defs)
+    inputs = SHAPES.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        bits = opt_bits or (8 if cfg.name.startswith("deepseek") else 32)
+        opt_cfg = OPT.AdamWConfig(state_bits=bits)
+        opt_state = abstract_opt_state(defs, opt_cfg)
+        fn = TS.make_train_step(cfg, opt_cfg, remat=True)
+        return fn, (params, opt_state, inputs)
+
+    if cfg.family == "vlm":
+        max_seq += cfg.n_patches  # the patch prefix occupies cache slots
+    cache_defs = LM.cache_defs(cfg, shape.global_batch, max_seq)
+    cache = C.abstract_params(cache_defs)
+    if shape.kind == "prefill":
+        def fn(p, tokens, cache, frames=None, patches=None):
+            return LM.prefill(p, cfg, tokens, cache, frames=frames,
+                              patches=patches)
+        kw = {k: v for k, v in inputs.items() if k != "tokens"}
+        return fn, (params, inputs["tokens"], cache), kw
+    # decode
+    def fn(p, tokens, cache):
+        return LM.decode_step(p, cfg, tokens, cache)
+    return fn, (params, inputs["tokens"], cache)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = RESULTS_DIR, verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES.SHAPES[shape_name]
+    ok, why = SHAPES.cell_supported(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": why}
+        _save(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(**MESHES[mesh_name])
+    t0 = time.time()
+    with SH.use_mesh(mesh, fsdp=True):
+        built = build_cell(cfg, shape)
+        fn, args = built[0], built[1]
+        kw = built[2] if len(built) > 2 else {}
+        lowered = jax.jit(fn).lower(*args, **kw)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {k: float(getattr(mem, k, 0) or 0) for k in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes")}
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    report = RL.analyze_cell(arch, shape_name, mesh_name, n_dev, hlo,
+                             dict(cost), mem_d,
+                             model_flops_total(cfg, shape))
+    rec = {"status": "ok", "t_lower_s": t_lower, "t_compile_s": t_compile,
+           **report.to_dict()}
+    _save(rec, out_dir)
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(f"  memory/device: args {mem_d['argument_size_in_bytes']/2**30:.2f} GiB, "
+              f"temp {mem_d['temp_size_in_bytes']/2**30:.2f} GiB")
+        print(f"  terms: compute {report.t_compute*1e3:.2f} ms | "
+              f"memory {report.t_memory*1e3:.2f} ms | "
+              f"collective {report.t_collective*1e3:.2f} ms "
+              f"-> {report.dominant}-bound, "
+              f"roofline {report.roofline_fraction*100:.1f}%")
+    return rec
+
+
+def _save(rec: Dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# GA mega-cell: the paper's engine at production scale
+# ---------------------------------------------------------------------------
+
+
+def run_ga_cell(mesh_name: str, out_dir: str = RESULTS_DIR,
+                islands_per_device: int = 8, n: int = 256) -> Dict:
+    from repro.core import fitness as F
+    from repro.core import ga as G
+    from repro.core import islands as ISL
+
+    mesh = make_production_mesh(**MESHES[mesh_name])
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    axes = tuple(mesh.axis_names)
+    cfg = G.GAConfig(n=n, c=14, v=2, mutation_rate=0.02, seed=1, mode="arith")
+    icfg = ISL.IslandConfig(ga=cfg, n_islands=islands_per_device * n_dev,
+                            migrate_every=16, axis_names=axes)
+    fit = G.make_arith_fitness(F.ArithSpec.for_problem(F.F3), cfg.c)
+
+    t0 = time.time()
+    step = ISL.make_sharded_step(icfg, fit, mesh)
+
+    def sds(shape, dtype=jnp.uint32):
+        return jax.ShapeDtypeStruct(
+            shape, dtype, sharding=jax.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(axes, *([None] * (len(shape) - 1)))))
+
+    I = icfg.n_islands
+    states = G.GAState(
+        x=sds((I, cfg.n, cfg.v)), sel_lfsr=sds((I, 2, cfg.n)),
+        cross_lfsr=sds((I, cfg.v, cfg.n // 2)), mut_lfsr=sds((I, cfg.v, cfg.n)),
+        k=jax.ShapeDtypeStruct((I,), jnp.int32, sharding=jax.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(axes))))
+    lowered = step.lower(states)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    mem_d = {k: float(getattr(mem, k, 0) or 0) for k in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes")}
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    report = RL.analyze_cell("ga-islands", f"I{I}_N{n}", mesh_name, n_dev,
+                             compiled.as_text(), dict(cost), mem_d,
+                             model_flops_total_ga(cfg, icfg))
+    t_dom = max(report.t_compute, report.t_memory, report.t_collective)
+    gens_per_s = icfg.migrate_every / t_dom if t_dom > 0 else 0
+    rec = {"status": "ok", "t_lower_s": t_lower, "t_compile_s": t_compile,
+           "generations_per_s_bound": gens_per_s,
+           "total_chromosomes": I * n,
+           **report.to_dict()}
+    rec["arch"], rec["shape"] = "ga-islands", f"I{I}_N{n}"
+    _save(rec, out_dir)
+    print(f"[GA × {mesh_name}] {I} islands × N={n} "
+          f"({I*n/1e6:.1f}M chromosomes): compile {t_compile:.1f}s, "
+          f"bound {gens_per_s/1e3:.0f}k gens/s/epoch-step, "
+          f"dominant={report.dominant}")
+    return rec
+
+
+def model_flops_total_ga(cfg, icfg) -> float:
+    """Useful FLOPs per sharded epoch step: fitness evals dominate."""
+    per_gen = icfg.n_islands * cfg.n * 20.0     # ~20 flops per fitness eval
+    return per_gen * icfg.migrate_every
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "pod1", "pod2"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--ga", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    if args.ga:
+        for mesh_name in ([args.mesh] if args.mesh else ["pod1", "pod2"]):
+            run_ga_cell(mesh_name, args.out)
+        return
+
+    if args.all:
+        # spawn one subprocess per cell: isolates XLA state + failures
+        cells = []
+        for arch in sorted(REGISTRY):
+            for shape in SHAPES.SHAPES:
+                for mesh_name in MESHES:
+                    out = os.path.join(
+                        args.out, f"{arch}__{shape}__{mesh_name}.json")
+                    if os.path.exists(out) and not args.force:
+                        continue
+                    cells.append((arch, shape, mesh_name))
+        print(f"{len(cells)} cells to run")
+        failures = []
+        for arch, shape, mesh_name in cells:
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_name,
+                   "--out", args.out]
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            tail = r.stdout.strip().splitlines()[-3:]
+            print(f"== {arch} × {shape} × {mesh_name}: rc={r.returncode}")
+            for l in tail:
+                print("   " + l)
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh_name,
+                                 r.stderr.strip().splitlines()[-5:]))
+        if failures:
+            print(f"\n{len(failures)} FAILURES:")
+            for f_ in failures:
+                print(f_)
+            sys.exit(1)
+        return
+
+    assert args.arch and args.shape, "--arch and --shape (or --all / --ga)"
+    meshes = [args.mesh] if args.mesh else list(MESHES)
+    for mesh_name in meshes:
+        try:
+            run_cell(args.arch, args.shape, mesh_name, args.out)
+        except Exception:
+            traceback.print_exc()
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

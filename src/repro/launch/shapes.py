@@ -1,0 +1,75 @@
+"""The assigned input-shape grid and abstract input specs (no allocation).
+
+Four shapes per LM architecture:
+    train_4k     seq 4096,    global_batch 256   -> train_step
+    prefill_32k  seq 32768,   global_batch 32    -> prefill
+    decode_32k   seq 32768,   global_batch 128   -> decode_step (KV @ 32k)
+    long_500k    seq 524288,  global_batch 1     -> decode_step (KV @ 512k)
+
+long_500k is only valid for sub-quadratic archs (ssm / hybrid / gemma3's
+5:1 sliding-window pattern); `cell_supported` encodes the skip rules from
+DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as SH
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: 512k decode has no "
+                       "sub-quadratic path (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def _sds(shape, dtype, *axes):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=SH.named_sharding(axes, shape))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For train: the batch dict. For prefill: prompt tokens (+modality stubs).
+    For decode: the one-token batch (the KV cache is built separately).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        d = {"tokens": _sds((b, s), jnp.int32, "batch", None),
+             "labels": _sds((b, s), jnp.int32, "batch", None)}
+    elif shape.kind == "prefill":
+        d = {"tokens": _sds((b, s), jnp.int32, "batch", None)}
+    else:  # decode
+        d = {"tokens": _sds((b, 1), jnp.int32, "batch", None)}
+    if cfg.family == "audio" and shape.kind != "decode":
+        d["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.float32,
+                           "batch", None, "act_embed")
+    if cfg.family == "vlm" and shape.kind != "decode":
+        d["patches"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.float32,
+                            "batch", None, "act_embed")
+    return d

@@ -1,0 +1,71 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-8b --reduced \
+        --steps 200 --ckpt-dir /tmp/run1
+
+On the production pods this binary is what every host runs (jax.distributed
+initializes from the cluster env); on this container it runs the reduced
+configs end-to-end with the same code path: data pipeline -> sharded
+train_step -> async checkpoints -> watchdog -> auto-resume.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced (CPU-sized) config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--mesh", choices=["none", "host", "pod1", "pod2"],
+                    default="none")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="force host platform device count (dry-run style)")
+    args = ap.parse_args()
+
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.fake_devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    from repro.configs import get_config
+    from repro.configs.base import reduced as make_reduced
+    from repro.data.pipeline import DataConfig
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_host_mesh, make_production_mesh
+        mesh = (make_host_mesh() if args.mesh == "host" else
+                make_production_mesh(multi_pod=(args.mesh == "pod2")))
+
+    out = train(
+        cfg,
+        TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                    ckpt_every=args.ckpt_every, resume=not args.no_resume),
+        DataConfig(vocab=cfg.vocab_, seq_len=args.seq_len,
+                   global_batch=args.global_batch),
+        AdamWConfig(lr=args.lr),
+        mesh=mesh,
+    )
+    print(f"final loss {out['loss']:.4f} after {out['final_step']} steps "
+          f"({out['straggler_events']} straggler events)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,390 @@
+"""Attention: GQA/MHA with RoPE, sliding windows, QKV bias, QK-norm,
+cross-attention, and a decode KV cache.  Heads are TP-sharded ("heads" /
+"kv_heads" logical axes); batch stays on the DP axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as SH
+from repro.models import common as C
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False       # qwen1.5
+    qk_norm: bool = False        # gemma3
+    rope_theta: Optional[float] = 10_000.0   # None = no rope (whisper)
+    causal: bool = True
+    window: Optional[int] = None  # sliding-window size (gemma3 locals)
+    softmax_scale: Optional[float] = None
+
+    @property
+    def q_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale or self.head_dim ** -0.5
+
+
+def attn_defs(cfg: AttnConfig) -> Dict[str, C.ParamDef]:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": C.ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wk": C.ParamDef((d, kh, hd), ("embed", "kv_heads", None)),
+        "wv": C.ParamDef((d, kh, hd), ("embed", "kv_heads", None)),
+        "wo": C.ParamDef((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = C.ParamDef((h, hd), ("heads", None), init="zeros")
+        defs["bk"] = C.ParamDef((kh, hd), ("kv_heads", None), init="zeros")
+        defs["bv"] = C.ParamDef((kh, hd), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = C.ParamDef((hd,), (None,), init="zeros")
+        defs["k_norm"] = C.ParamDef((hd,), (None,), init="zeros")
+    return defs
+
+
+def _project_qkv(p, x, cfg: AttnConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = C.rmsnorm(q, p["q_norm"])
+        k = C.rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, cfg: AttnConfig,
+               k_valid: Optional[jax.Array] = None,
+               window=None) -> jax.Array:
+    """(..., Sq, Sk) additive f32 mask from positions.
+
+    `window` may be a traced scalar (gemma3 selects local/global per layer
+    inside the layer scan); falls back to the static cfg.window.
+    """
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if cfg.causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    elif cfg.window is not None:
+        ok &= d < cfg.window
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, cfg: AttnConfig):
+    """q: (B,Sq,H,hd)  k/v: (B,Sk,KH,hd)  bias: broadcastable (B,1,Sq,Sk).
+
+    KV heads are broadcast up to the Q-head count BEFORE the score einsum so
+    the (Sq, Sk) score tensor shards on "heads" (always TP-divisible, unlike
+    kv_heads, e.g. 8 KV heads on a 16-way model axis would replicate a
+    B×H×S×S f32 tensor — catastrophic at 4k+ context).
+    """
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = SH.constrain(k, "batch", None, "heads", None)
+        v = SH.constrain(v, "batch", None, "heads", None)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores * cfg.scale + bias
+    scores = SH.constrain(scores, "batch", "heads", None, None)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out
+
+
+def forward(p, x: jax.Array, cfg: AttnConfig,
+            positions: Optional[jax.Array] = None,
+            rope_cs: Optional[Tuple[jax.Array, jax.Array]] = None,
+            window=None) -> jax.Array:
+    """Full-sequence (train / prefill) self-attention.
+
+    rope_cs: optional precomputed (cos, sin) tables — lets a layer scan pick
+    between local/global RoPE bases (gemma3) without retracing.
+    window: optional traced sliding-window size.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = SH.constrain(q, "batch", None, "heads", None)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if rope_cs is not None:
+        q = C.apply_rope(q, *rope_cs)
+        k = C.apply_rope(k, *rope_cs)
+    elif cfg.rope_theta is not None:
+        cos, sin = C.rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        q = C.apply_rope(q, cos, sin)
+        k = C.apply_rope(k, cos, sin)
+    bias = _mask_bias(positions, positions, cfg, window=window)[:, None]
+    out = _sdpa(q, k, v, bias, cfg)
+    out = SH.constrain(out, "batch", None, "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (prefill): online softmax over KV blocks —
+# the (Sq, Sk) score matrix never exists in HBM.  At 32k context the naive
+# form costs ≈50 GiB of score traffic per layer; this form reads K/V once.
+# Inference-only (prefill/serving): the train path keeps the einsum form
+# (its backward is handled by remat; a custom flash VJP is future work).
+# ---------------------------------------------------------------------------
+
+FLASH_MIN_SEQ = 8192
+FLASH_CHUNK = 1024
+
+
+def _flash_sdpa(q, k, v, cfg: AttnConfig, q_pos, k_pos, window=None):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,H,hd) (already head-expanded).
+    q_pos: (B,Sq); k_pos: (Sk,). Returns (B,Sq,H,hd)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    n_chunks = -(-sk // FLASH_CHUNK)
+    pad = n_chunks * FLASH_CHUNK - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-(10 ** 9))
+    kc = k.reshape(b, n_chunks, FLASH_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, FLASH_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, FLASH_CHUNK)
+
+    qf = q.astype(jnp.float32) * cfg.scale
+
+    def body(carry, xs):
+        m, l, acc = carry                     # (B,H,Sq), (B,H,Sq), (B,Sq,H,hd)
+        k_i, v_i, p_i = xs
+        s = jnp.einsum("bshd,bthd->bhst", qf,
+                       k_i.astype(jnp.float32))          # (B,H,Sq,Ck)
+        d = q_pos[:, None, :, None] - p_i[None, None, None, :]
+        ok = jnp.ones(d.shape, bool)
+        if cfg.causal:
+            ok &= d >= 0
+        if window is not None:
+            ok &= d < window
+        elif cfg.window is not None:
+            ok &= d < cfg.window
+        ok &= (p_i >= 0)[None, None, None, :]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhst,bthd->bshd", p.astype(v_i.dtype), v_i)
+        acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + \
+            pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def _sdpa_infer(q, k, v, cfg: AttnConfig, q_pos, k_pos, window=None):
+    """Inference SDPA: flash path for long sequences, einsum otherwise."""
+    kh = k.shape[2]
+    g = q.shape[2] // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = SH.constrain(k, "batch", None, "heads", None)
+        v = SH.constrain(v, "batch", None, "heads", None)
+    if q.shape[1] >= FLASH_MIN_SEQ:
+        return _flash_sdpa(q, k, v, cfg, q_pos, k_pos, window=window)
+    bias = _mask_bias(q_pos, k_pos[None, :], cfg, window=window)[:, None]
+    return _sdpa(q, k, v, bias, cfg)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg: AttnConfig, batch: int, max_len: int) -> Dict[str, C.ParamDef]:
+    """KV cache sharded over batch AND sequence ("act_seq" -> model axis):
+    flash-decoding layout — each model-shard attends its sequence slice and
+    GSPMD combines the partial softmaxes (tiny AR), instead of replicating a
+    multi-GiB cache when kv_heads < TP ways."""
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": C.ParamDef((batch, max_len, kh, hd), ("batch", "act_seq", "kv_heads", None), init="zeros"),
+        "v": C.ParamDef((batch, max_len, kh, hd), ("batch", "act_seq", "kv_heads", None), init="zeros"),
+    }
+
+
+def prefill(p, x: jax.Array, cfg: AttnConfig, cache: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Run full attention over the prompt and fill the cache at [0, S)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    positions = jnp.arange(s)[None, :]
+    if cfg.rope_theta is not None:
+        cos, sin = C.rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        q = C.apply_rope(q, cos, sin)
+        k = C.apply_rope(k, cos, sin)
+    out = _sdpa_infer(q, k, v, cfg, positions, jnp.arange(s))
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def decode_step(p, x: jax.Array, cfg: AttnConfig, cache: Dict[str, jax.Array],
+                pos: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B,1,D); pos: scalar int32 (current length)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.rope_theta is not None:
+        cos, sin = C.rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        q = C.apply_rope(q, cos, sin)
+        k = C.apply_rope(k, cos, sin)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    s_max = ck.shape[1]
+    k_pos = jnp.arange(s_max)[None, :]
+    k_valid = k_pos[0] <= pos
+    bias = _mask_bias(positions, jnp.broadcast_to(k_pos, (b, s_max)), cfg,
+                      k_valid=k_valid[None, :])[:, None]
+    out = _sdpa(q, ck, cv, bias, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer KV cache for sliding-window layers (gemma3 locals).
+# Slot i of the ring holds position p ≡ i (mod W); at decode position `pos`
+# the live positions are (pos-W, pos], recoverable in closed form — no extra
+# position storage.  This is what makes a 500k-token decode hold a 1k cache
+# in 52 of gemma3's 62 layers.
+# ---------------------------------------------------------------------------
+
+
+def ring_cache_defs(cfg: AttnConfig, batch: int, window: int) -> Dict[str, C.ParamDef]:
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": C.ParamDef((batch, window, kh, hd), ("batch", "act_seq", "kv_heads", None), init="zeros"),
+        "v": C.ParamDef((batch, window, kh, hd), ("batch", "act_seq", "kv_heads", None), init="zeros"),
+    }
+
+
+def ring_prefill(p, x: jax.Array, cfg: AttnConfig, cache, window: int,
+                 rope_cs=None):
+    """Windowed attention over the prompt; keep the last `window` KVs.
+
+    Requires window | S (checked) so ring slots line up with positions.
+    """
+    b, s, _ = x.shape
+    assert s % window == 0, f"ring prefill needs window|S ({window},{s})"
+    q, k, v = _project_qkv(p, x, cfg)
+    positions = jnp.arange(s)[None, :]
+    if rope_cs is not None:
+        q = C.apply_rope(q, *rope_cs)
+        k = C.apply_rope(k, *rope_cs)
+    elif cfg.rope_theta is not None:
+        cos, sin = C.rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        q = C.apply_rope(q, cos, sin)
+        k = C.apply_rope(k, cos, sin)
+    bias = _mask_bias(positions, positions, cfg, window=window)[:, None]
+    out = _sdpa(q, k, v, bias, cfg)
+    cache = {"k": k[:, -window:].astype(cache["k"].dtype),
+             "v": v[:, -window:].astype(cache["v"].dtype)}
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def ring_decode_step(p, x: jax.Array, cfg: AttnConfig, cache, pos: jax.Array,
+                     window: int, rope_cs=None):
+    """One-token decode against a ring cache. x: (B,1,D)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if rope_cs is not None:
+        q = C.apply_rope(q, *rope_cs)
+        k = C.apply_rope(k, *rope_cs)
+    elif cfg.rope_theta is not None:
+        cos, sin = C.rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        q = C.apply_rope(q, cos, sin)
+        k = C.apply_rope(k, cos, sin)
+    slot = jnp.mod(pos, window)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    # position held by ring slot i:  pos - ((pos - i) mod W)
+    i = jnp.arange(window)[None, :]
+    k_pos = pos - jnp.mod(pos - i, window)
+    k_valid = (k_pos[0] >= 0)
+    bias = _mask_bias(positions, jnp.broadcast_to(k_pos, (b, window)), cfg,
+                      k_valid=k_valid[None, :], window=window)[:, None]
+    out = _sdpa(q, ck, cv, bias, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_defs(cfg: AttnConfig) -> Dict[str, C.ParamDef]:
+    return attn_defs(dataclasses.replace(cfg, qkv_bias=False, qk_norm=False))
+
+
+def cross_forward(p, x: jax.Array, kv_src: jax.Array, cfg: AttnConfig) -> jax.Array:
+    """x attends over kv_src (encoder states); no mask, no rope."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    bias = jnp.zeros((x.shape[0], 1, x.shape[1], kv_src.shape[1]), jnp.float32)
+    out = _sdpa(q, k, v, bias, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_cache_defs(cfg: AttnConfig, batch: int, enc_seq: int) -> Dict[str, C.ParamDef]:
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": C.ParamDef((batch, enc_seq, kh, hd), ("batch", "act_seq", "kv_heads", None), init="zeros"),
+        "v": C.ParamDef((batch, enc_seq, kh, hd), ("batch", "act_seq", "kv_heads", None), init="zeros"),
+    }
+
+
+def cross_fill(p, kv_src: jax.Array, cfg: AttnConfig):
+    """Project encoder states to cross K/V once (at prefill)."""
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    return {"k": k, "v": v}
+
+
+def cross_decode(p, x: jax.Array, cfg: AttnConfig, cache) -> jax.Array:
+    """Decode-time cross-attention against cached encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = cache["k"].astype(q.dtype), cache["v"].astype(q.dtype)
+    bias = jnp.zeros((x.shape[0], 1, x.shape[1], k.shape[1]), jnp.float32)
+    out = _sdpa(q, k, v, bias, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

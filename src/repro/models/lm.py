@@ -1,0 +1,800 @@
+"""Model assembly: every assigned architecture as (defs, forward, prefill,
+decode_step) driven by one ModelConfig.
+
+Families:
+  dense  — llama-style decoder (minitron, yi, qwen[+bias], gemma3[5:1 pattern])
+  moe    — GQA or MLA attention + GShard MoE (moonshot, deepseek-v3)
+  audio  — whisper backbone: encoder (stubbed conv frontend) + cross-attn dec
+  vlm    — pixtral backbone: patch-embedding prefix + mistral-nemo decoder
+  ssm    — mamba2 SSD stack
+  hybrid — zamba2: mamba2 stack + shared attention block every k layers
+
+Layer stacks are scanned (homogeneous per stack) so HLO size is O(1) in
+depth; heterogeneous patterns (gemma3 5:1, zamba2 shared block, deepseek
+leading dense layers) are expressed as *group* scans with the odd layer
+unrolled inside the group — still O(1) HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as SH
+from repro.configs.base import ModelConfig
+from repro.models import attention as ATT
+from repro.models import common as C
+from repro.models import mla as MLA
+from repro.models import mlp as MLP
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+
+# ---------------------------------------------------------------------------
+# Sub-config builders
+# ---------------------------------------------------------------------------
+
+
+def _norm_defs(d: int, cfg: ModelConfig) -> Dict[str, C.ParamDef]:
+    if cfg.norm == "rms":
+        return {"w": C.ParamDef((d,), (None,), init="zeros")}
+    return {"w": C.ParamDef((d,), (None,), init="ones"),
+            "b": C.ParamDef((d,), (None,), init="zeros")}
+
+
+def _apply_norm(p, x, cfg: ModelConfig):
+    if cfg.norm == "rms":
+        return C.rmsnorm(x, p["w"])
+    return C.layernorm(x, p["w"], p["b"])
+
+
+def _attn_cfg(cfg: ModelConfig, *, window: Optional[int] = None,
+              theta: Optional[float] = None, causal: bool = True) -> ATT.AttnConfig:
+    return ATT.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads_, n_kv_heads=cfg.n_kv_heads_,
+        head_dim=cfg.head_dim_, qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        rope_theta=theta if theta is not None else cfg.rope_theta,
+        causal=causal, window=window)
+
+
+def _mla_cfg(cfg: ModelConfig) -> MLA.MLAConfig:
+    return MLA.MLAConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads_, q_lora_rank=cfg.q_lora_rank,
+        kv_lora_rank=cfg.kv_lora_rank, qk_nope_dim=cfg.qk_nope_dim,
+        qk_rope_dim=cfg.qk_rope_dim, v_head_dim=cfg.v_head_dim,
+        rope_theta=cfg.rope_theta)
+
+
+def _moe_cfg(cfg: ModelConfig) -> MOE.MoEConfig:
+    return MOE.MoEConfig(
+        d_model=cfg.d_model, n_experts=cfg.n_experts, top_k=cfg.top_k,
+        expert_ff=cfg.expert_ff, n_shared=cfg.n_shared_experts,
+        shared_ff=cfg.expert_ff, capacity_factor=cfg.capacity_factor)
+
+
+def _ssm_cfg(cfg: ModelConfig) -> SSM.SSMConfig:
+    return SSM.SSMConfig(d_model=cfg.d_model, d_state=cfg.d_state,
+                         headdim=cfg.ssm_headdim, chunk=cfg.ssm_chunk)
+
+
+def _gemma_groups(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, locals_per_group, n_tail_locals) for the 5:1 pattern."""
+    ge = cfg.global_every
+    n_groups = cfg.n_layers // ge
+    tail = cfg.n_layers - n_groups * ge
+    assert tail < ge, "tail must be all-local"
+    return n_groups, ge - 1, tail
+
+
+def _zamba_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+# ---------------------------------------------------------------------------
+# Layer defs
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer_defs(cfg: ModelConfig, acfg: ATT.AttnConfig) -> Dict:
+    return {
+        "attn": ATT.attn_defs(acfg),
+        "mlp": MLP.gated_defs(cfg.d_model, cfg.d_ff),
+        "norm1": _norm_defs(cfg.d_model, cfg),
+        "norm2": _norm_defs(cfg.d_model, cfg),
+    }
+
+
+def _moe_layer_defs(cfg: ModelConfig) -> Dict:
+    attn = (MLA.mla_defs(_mla_cfg(cfg)) if cfg.use_mla
+            else ATT.attn_defs(_attn_cfg(cfg)))
+    return {
+        "attn": attn,
+        "moe": MOE.moe_defs(_moe_cfg(cfg)),
+        "norm1": _norm_defs(cfg.d_model, cfg),
+        "norm2": _norm_defs(cfg.d_model, cfg),
+    }
+
+
+def _moe_dense_layer_defs(cfg: ModelConfig) -> Dict:
+    attn = (MLA.mla_defs(_mla_cfg(cfg)) if cfg.use_mla
+            else ATT.attn_defs(_attn_cfg(cfg)))
+    return {
+        "attn": attn,
+        "mlp": MLP.gated_defs(cfg.d_model, cfg.moe_ff_dense or cfg.d_ff),
+        "norm1": _norm_defs(cfg.d_model, cfg),
+        "norm2": _norm_defs(cfg.d_model, cfg),
+    }
+
+
+def _enc_layer_defs(cfg: ModelConfig) -> Dict:
+    acfg = _attn_cfg(cfg, causal=False)
+    acfg = dataclasses.replace(acfg, rope_theta=None)
+    return {
+        "attn": ATT.attn_defs(acfg),
+        "mlp": MLP.plain_defs(cfg.d_model, cfg.d_ff),
+        "norm1": _norm_defs(cfg.d_model, cfg),
+        "norm2": _norm_defs(cfg.d_model, cfg),
+    }
+
+
+def _dec_layer_defs(cfg: ModelConfig) -> Dict:
+    acfg = dataclasses.replace(_attn_cfg(cfg), rope_theta=None)
+    return {
+        "self_attn": ATT.attn_defs(acfg),
+        "cross_attn": ATT.cross_defs(acfg),
+        "mlp": MLP.plain_defs(cfg.d_model, cfg.d_ff),
+        "norm1": _norm_defs(cfg.d_model, cfg),
+        "norm2": _norm_defs(cfg.d_model, cfg),
+        "norm3": _norm_defs(cfg.d_model, cfg),
+    }
+
+
+def _ssm_layer_defs(cfg: ModelConfig) -> Dict:
+    return {"ssm": SSM.ssm_defs(_ssm_cfg(cfg)),
+            "norm1": _norm_defs(cfg.d_model, cfg)}
+
+
+def model_defs(cfg: ModelConfig, max_seq: int = 4096) -> Dict:
+    d, v = cfg.d_model, cfg.vocab_
+    defs: Dict[str, Any] = {
+        # 1/sqrt(d) keeps tied-head logits unit-scale; tied inputs are
+        # re-scaled by sqrt(d) in _embed (gemma convention).
+        "embed": C.ParamDef((v, d), ("vocab", "embed"), scale=d ** -0.5),
+        "final_norm": _norm_defs(d, cfg),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = C.ParamDef((d, v), ("embed", "vocab"))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.global_every > 1:
+            ng, nl, tail = _gemma_groups(cfg)
+            local = _dense_layer_defs(cfg, _attn_cfg(
+                cfg, window=cfg.window_size, theta=cfg.rope_theta_local))
+            glob = _dense_layer_defs(cfg, _attn_cfg(cfg))
+            defs["groups"] = C.stack_tree(
+                {"locals": C.stack_tree(local, nl), "global": glob}, ng)
+            if tail:
+                defs["tail"] = C.stack_tree(local, tail)
+        else:
+            defs["layers"] = C.stack_tree(
+                _dense_layer_defs(cfg, _attn_cfg(cfg)), cfg.n_layers)
+    elif fam == "moe":
+        nd = cfg.n_dense_layers
+        if nd:
+            defs["dense_layers"] = C.stack_tree(_moe_dense_layer_defs(cfg), nd)
+        defs["layers"] = C.stack_tree(_moe_layer_defs(cfg), cfg.n_layers - nd)
+    elif fam == "audio":
+        defs["enc_layers"] = C.stack_tree(_enc_layer_defs(cfg), cfg.enc_layers)
+        defs["enc_norm"] = _norm_defs(d, cfg)
+        defs["dec_layers"] = C.stack_tree(_dec_layer_defs(cfg), cfg.n_layers)
+        defs["dec_pos"] = C.ParamDef((max_seq, d), (None, "embed"), scale=0.01)
+    elif fam == "ssm":
+        defs["layers"] = C.stack_tree(_ssm_layer_defs(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        ng = _zamba_groups(cfg)
+        defs["layers"] = C.stack_tree(_ssm_layer_defs(cfg), cfg.n_layers)
+        defs["shared"] = _dense_layer_defs(cfg, _attn_cfg(cfg))
+    else:
+        raise ValueError(fam)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, remat: bool):
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else fn
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return SH.constrain(x, "batch", "act_seq", "act_embed")
+
+
+def _reshard_residual(x: jax.Array) -> jax.Array:
+    """Keep the residual stream sequence-sharded between blocks."""
+    return SH.constrain(x, "batch", "act_seq", "act_embed")
+
+
+def _head(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = _apply_norm(params["final_norm"], x, cfg)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return SH.constrain(logits, "batch", None, "vocab")
+
+
+def _dense_layer_fwd(lp, x, cfg: ModelConfig, acfg: ATT.AttnConfig):
+    h = ATT.forward(lp["attn"], _apply_norm(lp["norm1"], x, cfg), acfg)
+    x = _reshard_residual(x + h)
+    h = MLP.gated_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg), cfg.act)
+    return _reshard_residual(x + h)
+
+
+def _moe_layer_fwd(lp, x, cfg: ModelConfig):
+    if cfg.use_mla:
+        h = MLA.forward(lp["attn"], _apply_norm(lp["norm1"], x, cfg), _mla_cfg(cfg))
+    else:
+        h = ATT.forward(lp["attn"], _apply_norm(lp["norm1"], x, cfg), _attn_cfg(cfg))
+    x = _reshard_residual(x + h)
+    h, aux = MOE.forward(lp["moe"], _apply_norm(lp["norm2"], x, cfg), _moe_cfg(cfg))
+    return _reshard_residual(x + h), aux
+
+
+def _moe_dense_layer_fwd(lp, x, cfg: ModelConfig):
+    if cfg.use_mla:
+        h = MLA.forward(lp["attn"], _apply_norm(lp["norm1"], x, cfg), _mla_cfg(cfg))
+    else:
+        h = ATT.forward(lp["attn"], _apply_norm(lp["norm1"], x, cfg), _attn_cfg(cfg))
+    x = _reshard_residual(x + h)
+    h = MLP.gated_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg), cfg.act)
+    return _reshard_residual(x + h)
+
+
+def _ssm_layer_fwd(lp, x, cfg: ModelConfig):
+    return _reshard_residual(
+        x + SSM.forward(lp["ssm"], _apply_norm(lp["norm1"], x, cfg), _ssm_cfg(cfg)))
+
+
+def _scan(fn, params_stack, x, remat: bool):
+    def body(carry, lp):
+        return fn(lp, carry), None
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, params_stack)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V), aux_loss scalar)."""
+    tokens = batch["tokens"]
+    aux = jnp.float32(0.0)
+    fam = cfg.family
+
+    if fam == "audio":
+        enc = batch["frames"].astype(cfg.jdtype)  # (B, enc_seq, D) stub
+        enc = enc + C.sinusoidal_pos(enc.shape[1], cfg.d_model).astype(enc.dtype)
+        acfg_e = dataclasses.replace(_attn_cfg(cfg, causal=False), rope_theta=None)
+        enc = _scan(lambda lp, h: _enc_dec_enc_fwd(lp, h, cfg, acfg_e),
+                    params["enc_layers"], enc, remat)
+        enc = _apply_norm(params["enc_norm"], enc, cfg)
+
+        x = _embed(params, cfg, tokens)
+        s = x.shape[1]
+        x = x + params["dec_pos"][:s][None].astype(x.dtype)
+        acfg_d = dataclasses.replace(_attn_cfg(cfg), rope_theta=None)
+
+        def dec_body(carry, lp):
+            return _dec_layer_fwd(lp, carry, enc, cfg, acfg_d), None
+
+        x, _ = jax.lax.scan(_maybe_remat(dec_body, remat),
+                            x, params["dec_layers"])
+        return _head(params, cfg, x), aux
+
+    x = _embed(params, cfg, tokens)
+    if fam == "vlm":
+        patches = batch["patches"].astype(x.dtype)   # (B, P, D) stub
+        x = jnp.concatenate([patches, x], axis=1)
+
+    if fam in ("dense", "vlm"):
+        if cfg.global_every > 1:
+            ng, nl, tail = _gemma_groups(cfg)
+            a_local = _attn_cfg(cfg, window=cfg.window_size,
+                                theta=cfg.rope_theta_local)
+            a_glob = _attn_cfg(cfg)
+
+            def group_body(carry, gp):
+                h = _scan(lambda lp, hh: _dense_layer_fwd(lp, hh, cfg, a_local),
+                          gp["locals"], carry, remat)
+                h = _dense_layer_fwd(gp["global"], h, cfg, a_glob)
+                return h, None
+
+            x, _ = jax.lax.scan(group_body, x, params["groups"])
+            if tail:
+                x = _scan(lambda lp, hh: _dense_layer_fwd(lp, hh, cfg, a_local),
+                          params["tail"], x, remat)
+        else:
+            acfg = _attn_cfg(cfg)
+            x = _scan(lambda lp, hh: _dense_layer_fwd(lp, hh, cfg, acfg),
+                      params["layers"], x, remat)
+    elif fam == "moe":
+        if cfg.n_dense_layers:
+            x = _scan(lambda lp, hh: _moe_dense_layer_fwd(lp, hh, cfg),
+                      params["dense_layers"], x, remat)
+
+        def moe_body(carry, lp):
+            h, a = carry
+            h2, aux_l = _moe_layer_fwd(lp, h, cfg)
+            return (h2, a + aux_l), None
+
+        (x, aux), _ = jax.lax.scan(_maybe_remat(moe_body, remat),
+                                   (x, aux), params["layers"])
+    elif fam == "ssm":
+        x = _scan(lambda lp, hh: _ssm_layer_fwd(lp, hh, cfg),
+                  params["layers"], x, remat)
+    elif fam == "hybrid":
+        ng = _zamba_groups(cfg)
+        ge = cfg.attn_every
+        shared = params["shared"]
+        acfg = _attn_cfg(cfg)
+        grouped = jax.tree.map(
+            lambda a: a.reshape((ng, ge) + a.shape[1:]), params["layers"])
+
+        def hyb_body(carry, gp):
+            h = _scan(lambda lp, hh: _ssm_layer_fwd(lp, hh, cfg), gp, carry, remat)
+            h = _dense_layer_fwd(shared, h, cfg, acfg)
+            return h, None
+
+        x, _ = jax.lax.scan(hyb_body, x, grouped)
+    else:
+        raise ValueError(fam)
+
+    return _head(params, cfg, x), aux
+
+
+def _enc_dec_enc_fwd(lp, x, cfg: ModelConfig, acfg: ATT.AttnConfig):
+    h = ATT.forward(lp["attn"], _apply_norm(lp["norm1"], x, cfg), acfg)
+    x = x + h
+    h = MLP.plain_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg))
+    return x + h
+
+
+def _dec_layer_fwd(lp, x, enc, cfg: ModelConfig, acfg: ATT.AttnConfig):
+    x = x + ATT.forward(lp["self_attn"], _apply_norm(lp["norm1"], x, cfg), acfg)
+    x = x + ATT.cross_forward(lp["cross_attn"],
+                              _apply_norm(lp["norm2"], x, cfg), enc, acfg)
+    x = x + MLP.plain_forward(lp["mlp"], _apply_norm(lp["norm3"], x, cfg))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    fam = cfg.family
+    pos = C.ParamDef((), (), init="zeros", dtype=jnp.int32)
+    if fam in ("dense", "vlm"):
+        if cfg.global_every > 1:
+            ng, nl, tail = _gemma_groups(cfg)
+            a_local = _attn_cfg(cfg, window=cfg.window_size,
+                                theta=cfg.rope_theta_local)
+            a_glob = _attn_cfg(cfg)
+            w = min(cfg.window_size, max_len)
+            d = {"groups": C.stack_tree({
+                "locals": C.stack_tree(ATT.ring_cache_defs(a_local, batch, w), nl),
+                "global": ATT.cache_defs(a_glob, batch, max_len)}, ng),
+                "pos": pos}
+            if tail:
+                d["tail"] = C.stack_tree(
+                    ATT.ring_cache_defs(a_local, batch, w), tail)
+            return d
+        acfg = _attn_cfg(cfg)
+        return {"layers": C.stack_tree(
+            ATT.cache_defs(acfg, batch, max_len), cfg.n_layers), "pos": pos}
+    if fam == "moe":
+        sub = (MLA.cache_defs(_mla_cfg(cfg), batch, max_len) if cfg.use_mla
+               else ATT.cache_defs(_attn_cfg(cfg), batch, max_len))
+        d = {"layers": C.stack_tree(sub, cfg.n_layers - cfg.n_dense_layers),
+             "pos": pos}
+        if cfg.n_dense_layers:
+            d["dense_layers"] = C.stack_tree(sub, cfg.n_dense_layers)
+        return d
+    if fam == "audio":
+        acfg = dataclasses.replace(_attn_cfg(cfg), rope_theta=None)
+        return {
+            "layers": C.stack_tree(ATT.cache_defs(acfg, batch, max_len),
+                                   cfg.n_layers),
+            "cross": C.stack_tree(ATT.cross_cache_defs(acfg, batch, cfg.enc_seq),
+                                  cfg.n_layers),
+            "pos": pos,
+        }
+    if fam == "ssm":
+        return {"layers": C.stack_tree(
+            SSM.cache_defs(_ssm_cfg(cfg), batch), cfg.n_layers), "pos": pos}
+    if fam == "hybrid":
+        ng = _zamba_groups(cfg)
+        return {
+            "layers": C.stack_tree(SSM.cache_defs(_ssm_cfg(cfg), batch),
+                                   cfg.n_layers),
+            "shared_kv": C.stack_tree(
+                ATT.cache_defs(_attn_cfg(cfg), batch, max_len), ng),
+            "pos": pos,
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Prefill  (fills caches over the prompt, returns last-position logits)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Dict,
+            frames: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    fam = cfg.family
+    x = _embed(params, cfg, tokens)
+    if fam == "vlm" and patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+
+    if fam in ("dense", "vlm"):
+        if cfg.global_every > 1:
+            ng, nl, tail = _gemma_groups(cfg)
+            a_local = _attn_cfg(cfg, window=cfg.window_size,
+                                theta=cfg.rope_theta_local)
+            a_glob = _attn_cfg(cfg)
+            w = cache["groups"]["locals"]["k"].shape[3]
+
+            def group_body(carry, xs):
+                h = carry
+                gp, gc = xs
+
+                def loc_body(hh, xs2):
+                    lp, lc = xs2
+                    o, nc = ATT_ring_layer_prefill(lp, hh, cfg, a_local, lc, w)
+                    return o, nc
+
+                h, new_loc = jax.lax.scan(loc_body, h, (gp["locals"], gc["locals"]))
+                o, new_glob = _layer_prefill(gp["global"], h, cfg, a_glob,
+                                             gc["global"])
+                return o, {"locals": new_loc, "global": new_glob}
+
+            x, new_groups = jax.lax.scan(group_body, x,
+                                         (params["groups"], cache["groups"]))
+            new_cache = {"groups": new_groups, "pos": jnp.int32(s)}
+            if tail:
+                def tail_body(hh, xs2):
+                    lp, lc = xs2
+                    return ATT_ring_layer_prefill(lp, hh, cfg, a_local, lc, w)
+
+                x, new_tail = jax.lax.scan(tail_body, x,
+                                           (params["tail"], cache["tail"]))
+                new_cache["tail"] = new_tail
+            return _last_logits(params, cfg, x), new_cache
+
+        acfg = _attn_cfg(cfg)
+
+        def body(carry, xs):
+            lp, lc = xs
+            return _layer_prefill(lp, carry, cfg, acfg, lc)
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        return _last_logits(params, cfg, x), {"layers": new_layers,
+                                              "pos": jnp.int32(s)}
+
+    if fam == "moe":
+        new_cache = {"pos": jnp.int32(s)}
+        if cfg.n_dense_layers:
+            def dbody(carry, xs):
+                lp, lc = xs
+                return _moe_dense_prefill(lp, carry, cfg, lc)
+            x, nd = jax.lax.scan(dbody, x,
+                                 (params["dense_layers"], cache["dense_layers"]))
+            new_cache["dense_layers"] = nd
+
+        def mbody(carry, xs):
+            lp, lc = xs
+            return _moe_layer_prefill(lp, carry, cfg, lc)
+
+        x, nl_ = jax.lax.scan(mbody, x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = nl_
+        return _last_logits(params, cfg, x), new_cache
+
+    if fam == "audio":
+        enc = frames.astype(cfg.jdtype)
+        enc = enc + C.sinusoidal_pos(enc.shape[1], cfg.d_model).astype(enc.dtype)
+        acfg_e = dataclasses.replace(_attn_cfg(cfg, causal=False), rope_theta=None)
+        enc = _scan(lambda lp, hh: _enc_dec_enc_fwd(lp, hh, cfg, acfg_e),
+                    params["enc_layers"], enc, False)
+        enc = _apply_norm(params["enc_norm"], enc, cfg)
+        acfg = dataclasses.replace(_attn_cfg(cfg), rope_theta=None)
+        x = x + params["dec_pos"][:s][None].astype(x.dtype)
+
+        def body(carry, xs):
+            lp, lc = xs
+            h = carry
+            hn = _apply_norm(lp["norm1"], h, cfg)
+            o, new_self = ATT.prefill(lp["self_attn"], hn, acfg, lc)
+            h = h + o
+            cross_kv = ATT.cross_fill(lp["cross_attn"], enc, acfg)
+            h = h + ATT.cross_decode(lp["cross_attn"],
+                                     _apply_norm(lp["norm2"], h, cfg), acfg,
+                                     cross_kv)
+            h = h + MLP.plain_forward(lp["mlp"], _apply_norm(lp["norm3"], h, cfg))
+            return h, (new_self,
+                       jax.tree.map(lambda a: a.astype(cfg.jdtype), cross_kv))
+
+        x, (new_self, new_cross) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["layers"]))
+        return _last_logits(params, cfg, x), {
+            "layers": new_self, "cross": new_cross, "pos": jnp.int32(s)}
+
+    if fam == "ssm":
+        def body(carry, xs):
+            lp, lc = xs
+            hn = _apply_norm(lp["norm1"], carry, cfg)
+            o, nc = SSM.forward(lp["ssm"], hn, _ssm_cfg(cfg), return_cache=True)
+            return carry + o, nc
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        return _last_logits(params, cfg, x), {"layers": new_layers,
+                                              "pos": jnp.int32(s)}
+
+    if fam == "hybrid":
+        ng = _zamba_groups(cfg)
+        ge = cfg.attn_every
+        acfg = _attn_cfg(cfg)
+        shared = params["shared"]
+        grouped = jax.tree.map(
+            lambda a: a.reshape((ng, ge) + a.shape[1:]), params["layers"])
+
+        def group_body(carry, xs):
+            gp, kv = xs
+            h = carry
+
+            def mbody(hh, lp):
+                hn = _apply_norm(lp["norm1"], hh, cfg)
+                o, nc = SSM.forward(lp["ssm"], hn, _ssm_cfg(cfg), return_cache=True)
+                return hh + o, nc
+
+            h, ssm_caches = jax.lax.scan(mbody, h, gp)
+            o, new_kv = _layer_prefill(shared, h, cfg, acfg, kv)
+            return o, (ssm_caches, new_kv)
+
+        x, (ssm_caches, new_kv) = jax.lax.scan(
+            group_body, x, (grouped, cache["shared_kv"]))
+        ssm_caches = jax.tree.map(
+            lambda a: a.reshape((ng * ge,) + a.shape[2:]), ssm_caches)
+        return _last_logits(params, cfg, x), {
+            "layers": ssm_caches, "shared_kv": new_kv, "pos": jnp.int32(s)}
+
+    raise ValueError(fam)
+
+
+def _last_logits(params, cfg, x):
+    return _head(params, cfg, x[:, -1:, :])[:, 0]
+
+
+def _layer_prefill(lp, x, cfg, acfg, lc):
+    hn = _apply_norm(lp["norm1"], x, cfg)
+    o, nc = ATT.prefill(lp["attn"], hn, acfg, lc)
+    x = x + o
+    x = x + MLP.gated_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg), cfg.act)
+    return x, nc
+
+
+def ATT_ring_layer_prefill(lp, x, cfg, acfg, lc, w):
+    hn = _apply_norm(lp["norm1"], x, cfg)
+    o, nc = ATT.ring_prefill(lp["attn"], hn, acfg, lc, w)
+    x = x + o
+    x = x + MLP.gated_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg), cfg.act)
+    return x, nc
+
+
+def _moe_layer_prefill(lp, x, cfg, lc):
+    hn = _apply_norm(lp["norm1"], x, cfg)
+    if cfg.use_mla:
+        o, nc = MLA.prefill(lp["attn"], hn, _mla_cfg(cfg), lc)
+    else:
+        o, nc = ATT.prefill(lp["attn"], hn, _attn_cfg(cfg), lc)
+    x = x + o
+    h, _ = MOE.forward(lp["moe"], _apply_norm(lp["norm2"], x, cfg), _moe_cfg(cfg))
+    return x + h, nc
+
+
+def _moe_dense_prefill(lp, x, cfg, lc):
+    hn = _apply_norm(lp["norm1"], x, cfg)
+    if cfg.use_mla:
+        o, nc = MLA.prefill(lp["attn"], hn, _mla_cfg(cfg), lc)
+    else:
+        o, nc = ATT.prefill(lp["attn"], hn, _attn_cfg(cfg), lc)
+    x = x + o
+    x = x + MLP.gated_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg), cfg.act)
+    return x, nc
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache: Dict
+                ) -> Tuple[jax.Array, Dict]:
+    """tokens: (B, 1) int32. Returns (logits (B, V), new cache)."""
+    fam = cfg.family
+    pos = cache["pos"]
+    x = _embed(params, cfg, tokens)
+
+    if fam in ("dense", "vlm"):
+        if cfg.global_every > 1:
+            ng, nl, tail = _gemma_groups(cfg)
+            a_local = _attn_cfg(cfg, window=cfg.window_size,
+                                theta=cfg.rope_theta_local)
+            a_glob = _attn_cfg(cfg)
+            w = cache["groups"]["locals"]["k"].shape[3]
+
+            def group_body(carry, xs):
+                gp, gc = xs
+
+                def loc_body(hh, xs2):
+                    lp, lc = xs2
+                    return _ring_layer_decode(lp, hh, cfg, a_local, lc, pos, w)
+
+                h, new_loc = jax.lax.scan(loc_body, carry,
+                                          (gp["locals"], gc["locals"]))
+                o, new_glob = _layer_decode(gp["global"], h, cfg, a_glob,
+                                            gc["global"], pos)
+                return o, {"locals": new_loc, "global": new_glob}
+
+            x, new_groups = jax.lax.scan(group_body, x,
+                                         (params["groups"], cache["groups"]))
+            out = {"groups": new_groups, "pos": pos + 1}
+            if tail:
+                def tail_body(hh, xs2):
+                    lp, lc = xs2
+                    return _ring_layer_decode(lp, hh, cfg, a_local, lc, pos, w)
+                x, new_tail = jax.lax.scan(tail_body, x,
+                                           (params["tail"], cache["tail"]))
+                out["tail"] = new_tail
+            return _head(params, cfg, x)[:, 0], out
+
+        acfg = _attn_cfg(cfg)
+
+        def body(carry, xs):
+            lp, lc = xs
+            return _layer_decode(lp, carry, cfg, acfg, lc, pos)
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        return _head(params, cfg, x)[:, 0], {"layers": new_layers, "pos": pos + 1}
+
+    if fam == "moe":
+        out = {"pos": pos + 1}
+        if cfg.n_dense_layers:
+            def dbody(carry, xs):
+                lp, lc = xs
+                return _moe_dense_decode(lp, carry, cfg, lc, pos)
+            x, nd = jax.lax.scan(dbody, x,
+                                 (params["dense_layers"], cache["dense_layers"]))
+            out["dense_layers"] = nd
+
+        def mbody(carry, xs):
+            lp, lc = xs
+            return _moe_layer_decode(lp, carry, cfg, lc, pos)
+
+        x, nl_ = jax.lax.scan(mbody, x, (params["layers"], cache["layers"]))
+        out["layers"] = nl_
+        return _head(params, cfg, x)[:, 0], out
+
+    if fam == "audio":
+        acfg = dataclasses.replace(_attn_cfg(cfg), rope_theta=None)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, axis=0)[None].astype(x.dtype)
+
+        def body(carry, xs):
+            lp, lc, cc = xs
+            h = carry
+            o, ns = ATT.decode_step(lp["self_attn"],
+                                    _apply_norm(lp["norm1"], h, cfg), acfg, lc, pos)
+            h = h + o
+            h = h + ATT.cross_decode(lp["cross_attn"],
+                                     _apply_norm(lp["norm2"], h, cfg), acfg, cc)
+            h = h + MLP.plain_forward(lp["mlp"], _apply_norm(lp["norm3"], h, cfg))
+            return h, ns
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["layers"], cache["cross"]))
+        return _head(params, cfg, x)[:, 0], {
+            "layers": new_self, "cross": cache["cross"], "pos": pos + 1}
+
+    if fam == "ssm":
+        def body(carry, xs):
+            lp, lc = xs
+            hn = _apply_norm(lp["norm1"], carry, cfg)
+            o, nc = SSM.decode_step(lp["ssm"], hn, _ssm_cfg(cfg), lc)
+            return carry + o, nc
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        return _head(params, cfg, x)[:, 0], {"layers": new_layers, "pos": pos + 1}
+
+    if fam == "hybrid":
+        ng = _zamba_groups(cfg)
+        ge = cfg.attn_every
+        acfg = _attn_cfg(cfg)
+        shared = params["shared"]
+        grouped = jax.tree.map(
+            lambda a: a.reshape((ng, ge) + a.shape[1:]), params["layers"])
+        gcache = jax.tree.map(
+            lambda a: a.reshape((ng, ge) + a.shape[1:]), cache["layers"])
+
+        def group_body(carry, xs):
+            gp, gc, kv = xs
+
+            def mbody(hh, xs2):
+                lp, lc = xs2
+                hn = _apply_norm(lp["norm1"], hh, cfg)
+                o, nc = SSM.decode_step(lp["ssm"], hn, _ssm_cfg(cfg), lc)
+                return hh + o, nc
+
+            h, ssm_caches = jax.lax.scan(mbody, carry, (gp, gc))
+            o, new_kv = _layer_decode(shared, h, cfg, acfg, kv, pos)
+            return o, (ssm_caches, new_kv)
+
+        x, (ssm_caches, new_kv) = jax.lax.scan(
+            group_body, x, (grouped, gcache, cache["shared_kv"]))
+        ssm_caches = jax.tree.map(
+            lambda a: a.reshape((ng * ge,) + a.shape[2:]), ssm_caches)
+        return _head(params, cfg, x)[:, 0], {
+            "layers": ssm_caches, "shared_kv": new_kv, "pos": pos + 1}
+
+    raise ValueError(fam)
+
+
+def _layer_decode(lp, x, cfg, acfg, lc, pos):
+    hn = _apply_norm(lp["norm1"], x, cfg)
+    o, nc = ATT.decode_step(lp["attn"], hn, acfg, lc, pos)
+    x = x + o
+    x = x + MLP.gated_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg), cfg.act)
+    return x, nc
+
+
+def _ring_layer_decode(lp, x, cfg, acfg, lc, pos, w):
+    hn = _apply_norm(lp["norm1"], x, cfg)
+    o, nc = ATT.ring_decode_step(lp["attn"], hn, acfg, lc, pos, w)
+    x = x + o
+    x = x + MLP.gated_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg), cfg.act)
+    return x, nc
+
+
+def _moe_layer_decode(lp, x, cfg, lc, pos):
+    hn = _apply_norm(lp["norm1"], x, cfg)
+    if cfg.use_mla:
+        o, nc = MLA.decode_step(lp["attn"], hn, _mla_cfg(cfg), lc, pos)
+    else:
+        o, nc = ATT.decode_step(lp["attn"], hn, _attn_cfg(cfg), lc, pos)
+    x = x + o
+    h, _ = MOE.forward(lp["moe"], _apply_norm(lp["norm2"], x, cfg), _moe_cfg(cfg))
+    return x + h, nc
+
+
+def _moe_dense_decode(lp, x, cfg, lc, pos):
+    hn = _apply_norm(lp["norm1"], x, cfg)
+    if cfg.use_mla:
+        o, nc = MLA.decode_step(lp["attn"], hn, _mla_cfg(cfg), lc, pos)
+    else:
+        o, nc = ATT.decode_step(lp["attn"], hn, _attn_cfg(cfg), lc, pos)
+    x = x + o
+    x = x + MLP.gated_forward(lp["mlp"], _apply_norm(lp["norm2"], x, cfg), cfg.act)
+    return x, nc

@@ -1,0 +1,145 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and KV are projected through low-rank latents; only the compressed KV
+latent (kv_lora_rank) + the shared decoupled RoPE key (rope_dim) are cached at
+decode time — the memory win that makes 128-head attention serveable.
+
+Shapes (V3): d=7168, H=128, q_lora=1536, kv_lora=512, qk_nope=128, rope=64,
+v_head=128.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as SH
+from repro.models import common as C
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10_000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    @property
+    def scale(self) -> float:
+        return self.qk_dim ** -0.5
+
+
+def mla_defs(cfg: MLAConfig) -> Dict[str, C.ParamDef]:
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "w_dq": C.ParamDef((d, cfg.q_lora_rank), ("embed", None)),
+        "q_norm": C.ParamDef((cfg.q_lora_rank,), (None,), init="zeros"),
+        "w_uq": C.ParamDef((cfg.q_lora_rank, h, cfg.qk_dim), (None, "heads", None)),
+        "w_dkv": C.ParamDef((d, cfg.kv_lora_rank), ("embed", None)),
+        "kv_norm": C.ParamDef((cfg.kv_lora_rank,), (None,), init="zeros"),
+        "w_uk": C.ParamDef((cfg.kv_lora_rank, h, cfg.qk_nope_dim), (None, "heads", None)),
+        "w_uv": C.ParamDef((cfg.kv_lora_rank, h, cfg.v_head_dim), (None, "heads", None)),
+        "w_kr": C.ParamDef((d, cfg.qk_rope_dim), ("embed", None)),
+        "wo": C.ParamDef((h, cfg.v_head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def _queries(p, x, cfg: MLAConfig, positions):
+    cq = C.rmsnorm(C.dense(x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    cos, sin = C.rope_tables(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = C.apply_rope(q_rope, cos, sin)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _latent_kv(p, x, cfg: MLAConfig, positions):
+    """Compressed latent c_kv (B,S,R) + decoupled rope key (B,S,rope)."""
+    c_kv = C.rmsnorm(C.dense(x, p["w_dkv"]), p["kv_norm"])
+    k_rope = C.dense(x, p["w_kr"])[:, :, None, :]  # (B,S,1,rope)
+    cos, sin = C.rope_tables(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = C.apply_rope(k_rope, cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _attend(q, c_kv, k_rope, p, cfg: MLAConfig, bias):
+    """q: (B,Sq,H,qk); c_kv: (B,Sk,R); k_rope: (B,Sk,rope)."""
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"])
+    v = jnp.einsum("btr,rhv->bthv", c_kv, p["w_uv"])
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    s_nope = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    scores = (s_nope + s_rope).astype(jnp.float32) * cfg.scale + bias
+    scores = SH.constrain(scores, "batch", "heads", None, None)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthv->bshv", probs, v)
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+
+
+def forward(p, x: jax.Array, cfg: MLAConfig,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = _queries(p, x, cfg, positions)
+    q = SH.constrain(q, "batch", None, "heads", None)
+    c_kv, k_rope = _latent_kv(p, x, cfg, positions)
+    causal = (positions[:, :, None] >= positions[:, None, :])
+    bias = jnp.where(causal, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+    return _attend(q, c_kv, k_rope, p, cfg, bias)
+
+
+def cache_defs(cfg: MLAConfig, batch: int, max_len: int) -> Dict[str, C.ParamDef]:
+    return {
+        "c_kv": C.ParamDef((batch, max_len, cfg.kv_lora_rank),
+                           ("batch", "act_seq", None), init="zeros"),
+        "k_rope": C.ParamDef((batch, max_len, cfg.qk_rope_dim),
+                             ("batch", "act_seq", None), init="zeros"),
+    }
+
+
+def prefill(p, x, cfg: MLAConfig, cache):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latent_kv(p, x, cfg, positions)
+    causal = (positions[:, :, None] >= positions[:, None, :])
+    bias = jnp.where(causal, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+    out = _attend(q, c_kv, k_rope, p, cfg, bias)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0)),
+    }
+    return out, cache
+
+
+def decode_step(p, x, cfg: MLAConfig, cache, pos):
+    """x: (B,1,D); caches only the 512+64-dim latents (the MLA win)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _queries(p, x, cfg, positions)
+    c_kv_new, k_rope_new = _latent_kv(p, x, cfg, positions)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    s_max = c_kv.shape[1]
+    valid = (jnp.arange(s_max)[None, :] <= pos)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None, None, :]
+    out = _attend(q, c_kv, k_rope, p, cfg, bias)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,43 @@
+"""Feed-forward blocks: gated SiLU (llama family) and plain GELU (whisper)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as SH
+from repro.models import common as C
+
+
+def gated_defs(d_model: int, d_ff: int) -> Dict[str, C.ParamDef]:
+    return {
+        "w_gate": C.ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_up": C.ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_down": C.ParamDef((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def gated_forward(p, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = C.dense(x, p["w_gate"])
+    u = C.dense(x, p["w_up"])
+    g = SH.constrain(g, "batch", None, "mlp")
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return C.dense((a * u).astype(x.dtype), p["w_down"])
+
+
+def plain_defs(d_model: int, d_ff: int) -> Dict[str, C.ParamDef]:
+    return {
+        "w_in": C.ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "b_in": C.ParamDef((d_ff,), ("mlp",), init="zeros"),
+        "w_out": C.ParamDef((d_ff, d_model), ("mlp", "embed")),
+        "b_out": C.ParamDef((d_model,), ("embed",), init="zeros"),
+    }
+
+
+def plain_forward(p, x: jax.Array) -> jax.Array:
+    h = C.dense(x, p["w_in"], p["b_in"])
+    h = SH.constrain(h, "batch", None, "mlp")
+    h = jax.nn.gelu(h, approximate=True).astype(x.dtype)
+    return C.dense(h, p["w_out"], p["b_out"])

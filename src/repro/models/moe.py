@@ -1,0 +1,126 @@
+"""Mixture-of-Experts: GShard-style capacity routing with expert parallelism.
+
+Experts live on the "expert" logical axis (→ TP/"model" mesh axis), tokens on
+the batch/DP axes; the dispatch/combine einsums contract across both, which
+XLA lowers to the all-to-all / all-gather pattern of classic GShard EP.
+
+Routing: softmax-over-logits top-k with probability renormalization
+(DeepSeek-V3's sigmoid+group-bias routing is approximated by softmax top-k;
+MoE capacity semantics, shared experts and expert parallelism are faithful —
+the deviation is noted in DESIGN.md).
+
+Group dimension: tokens route within their own sequence (G = batch dim), the
+standard way to bound the dispatch tensor and keep routing local.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as SH
+from repro.models import common as C
+from repro.models import mlp as MLP
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int            # routed experts
+    top_k: int
+    expert_ff: int            # per-expert hidden dim
+    n_shared: int = 0         # shared (always-on) experts
+    shared_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+
+    @property
+    def shared_dim(self) -> int:
+        return (self.shared_ff or self.expert_ff) * max(self.n_shared, 0)
+
+
+def moe_defs(cfg: MoEConfig) -> Dict[str, C.ParamDef]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    defs = {
+        "router": C.ParamDef((d, e), ("embed", None), dtype=jnp.float32),
+        # EP (model axis) + FSDP (data axis on d): measured best of three
+        # layouts — EP-only replication doesn't fit deepseek's 656B expert
+        # params; full-EP (experts over data x model) makes GSPMD replicate
+        # tokens (862s of collectives).  See EXPERIMENTS.md §Perf iters 3-6.
+        "w_gate": C.ParamDef((e, d, f), ("expert", "embed", None)),
+        "w_up": C.ParamDef((e, d, f), ("expert", "embed", None)),
+        "w_down": C.ParamDef((e, f, d), ("expert", None, "embed")),
+    }
+    if cfg.n_shared > 0:
+        defs["shared"] = MLP.gated_defs(d, cfg.shared_dim)
+    return defs
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(np.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor
+                    / cfg.n_experts))
+    return max(c, cfg.top_k)
+
+
+def route(router_w: jax.Array, x: jax.Array, cfg: MoEConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (G, S, D) -> (weights (G,S,k), idx (G,S,k), aux_loss scalar)."""
+    # bf16 operands + f32 accumulation: materializing x in f32 promotes the
+    # whole residual stream's collectives to f32 (EXPERIMENTS.md §Perf iter 7)
+    logits = jnp.einsum("gsd,de->gse", x, router_w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], cfg.n_experts, dtype=jnp.float32), axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return weights.astype(x.dtype), idx, aux
+
+
+def forward(p, x: jax.Array, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D). Returns (out, aux_loss). B is the routing group dim."""
+    g, s, d = x.shape
+    cap = _capacity(s, cfg)
+    weights, idx, aux = route(p["router"], x, cfg)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.int32)  # (G,S,k,E)
+    flat = onehot.reshape(g, s * cfg.top_k, cfg.n_experts)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - 1                  # (G,S*k,E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(g, s, cfg.top_k)
+    keep = pos < cap
+
+    # dispatch (G, S, E, C) — sharded: G on batch axes, E on "expert".
+    # Every contraction below is strictly 2-operand: a 3-operand einsum here
+    # lets XLA materialize a (G,S,E,C,k) intermediate — observed as a
+    # multi-TiB temp in the deepseek train_4k dry-run (EXPERIMENTS.md §Perf).
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                            dtype=x.dtype)[..., :cap]             # (G,S,k,C)
+    oh = onehot.astype(x.dtype)
+    disp = jnp.einsum("gske,gskc->gsec", oh, pos_oh)              # (G,S,E,C)
+    disp = SH.constrain(disp, "batch", None, "expert", None)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp, x)
+    expert_in = SH.constrain(expert_in, "batch", "expert", None, None)
+
+    gate = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    act = (jax.nn.silu(gate) * up).astype(x.dtype)
+    expert_out = jnp.einsum("gecf,efd->gecd", act, p["w_down"])
+    expert_out = SH.constrain(expert_out, "batch", "expert", None, None)
+
+    w_oh = oh * weights[..., None]                                # (G,S,k,E)
+    combine = jnp.einsum("gske,gskc->gsec", w_oh, pos_oh)         # (G,S,E,C)
+    combine = SH.constrain(combine, "batch", None, "expert", None)
+    out = jnp.einsum("gsec,gecd->gsd", combine, expert_out)
+    out = SH.constrain(out, "batch", "act_seq", "act_embed")
+
+    if cfg.n_shared > 0:
+        out = out + MLP.gated_forward(p["shared"], x)
+    return out, aux

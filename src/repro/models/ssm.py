@@ -1,0 +1,265 @@
+"""Mamba2 — State Space Duality (SSD) blocks, chunked (arXiv:2405.21060).
+
+Train/prefill uses the chunked dual form: intra-chunk attention-like einsums
+(MXU-friendly) + an associative scan over chunk states (log-depth, no
+sequential bottleneck).  Decode carries the (B, H, N, P) SSM state and the
+depthwise-conv tail — O(1) per token, which is why mamba2/zamba2 run the
+long_500k shape that quadratic attention cannot.
+
+Layout: x_inner (B, S, H, P) with H = d_inner/headdim SSM heads on the
+"heads" (TP) logical axis; B/C projections are per-group (G groups, G=1 here)
+and replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as SH
+from repro.models import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128          # N
+    headdim: int = 64           # P
+    expand: int = 2
+    n_groups: int = 1           # G
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_proj_dim(self) -> int:
+        # z, x_inner, B, C, dt
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+def ssm_defs(cfg: SSMConfig) -> Dict[str, C.ParamDef]:
+    d = cfg.d_model
+    return {
+        "in_proj": C.ParamDef((d, cfg.in_proj_dim), ("embed", "mlp")),
+        "conv_w": C.ParamDef((cfg.conv_width, cfg.conv_channels), (None, "mlp"),
+                             scale=0.2),
+        "conv_b": C.ParamDef((cfg.conv_channels,), ("mlp",), init="zeros"),
+        "a_log": C.ParamDef((cfg.n_heads,), ("heads",), init="zeros",
+                            dtype=jnp.float32),
+        "dt_bias": C.ParamDef((cfg.n_heads,), ("heads",), init="zeros",
+                              dtype=jnp.float32),
+        "d_skip": C.ParamDef((cfg.n_heads,), ("heads",), init="ones",
+                             dtype=jnp.float32),
+        "norm_w": C.ParamDef((cfg.d_inner,), ("mlp",), init="zeros"),
+        "out_proj": C.ParamDef((cfg.d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(proj: jax.Array, cfg: SSMConfig):
+    di, gn, h = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * gn]   # conv input: x_inner ‖ B ‖ C
+    dt = proj[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc: jax.Array, cfg: SSMConfig):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    x = xbc[..., :di]
+    b = xbc[..., di: di + gn]
+    c = xbc[..., di + gn:]
+    return x, b, c
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W: (B,S,C) -> (B,S,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    s = xbc.shape[1]
+    out = sum(pad[:, i: i + s, :] * w[i][None, None, :] for i in range(width))
+    return jax.nn.silu((out + bias[None, None, :]).astype(jnp.float32)
+                       ).astype(xbc.dtype)
+
+
+def _dt_activation(dt: jax.Array, dt_bias: jax.Array, cfg: SSMConfig) -> jax.Array:
+    return jax.nn.softplus(dt.astype(jnp.float32) + dt_bias[None, None, :])
+
+
+def _ssd_chunked(x, dt, a, b, c, cfg: SSMConfig,
+                 init_state: Optional[jax.Array] = None):
+    """SSD dual form.
+
+    x: (B,S,H,P) f32; dt: (B,S,H) f32; a: (H,) f32 (negative);
+    b, c: (B,S,G,N) f32.  Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = cfg.chunk
+    assert s % q == 0, f"seq {s} % chunk {q} != 0"
+    nc = s // q
+    hg = h // g  # heads per group
+
+    # expand groups to heads
+    bh = jnp.repeat(b, hg, axis=2)  # (B,S,H,N)
+    ch = jnp.repeat(c, hg, axis=2)
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = bh.reshape(bsz, nc, q, h, n)
+    cc = ch.reshape(bsz, nc, q, h, n)
+
+    da = dtc * a[None, None, None, :]                   # (B,Nc,Q,H) ≤ 0
+    cs = jnp.cumsum(da, axis=2)                         # within-chunk cumsum
+    x_dt = xc * dtc[..., None]
+
+    # intra-chunk (attention-like, lower-triangular decay kernel)
+    li = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # (B,Nc,Q,Q,H) i,j
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    y_intra = jnp.einsum("bcihn,bcjhn,bcijh,bcjhp->bcihp",
+                         cc[..., :, :], bc, l_mat, x_dt)
+
+    # chunk states
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)       # (B,Nc,Q,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", bc, decay_to_end, x_dt)
+    lam = jnp.exp(cs[:, :, -1, :])                      # (B,Nc,H)
+
+    # inter-chunk recurrence: associative scan over (Λ, S)
+    def combine(e1, e2):
+        l1, s1 = e1
+        l2, s2 = e2
+        return l1 * l2, s1 * l2[..., None, None] + s2
+
+    lam_s, st_s = jax.lax.associative_scan(combine, (lam, states), axis=1)
+    if init_state is None:
+        prev = jnp.concatenate(
+            [jnp.zeros_like(st_s[:, :1]), st_s[:, :-1]], axis=1)
+    else:
+        # incorporate an incoming state (prefill continuation)
+        shifted = jnp.concatenate(
+            [jnp.zeros_like(st_s[:, :1]), st_s[:, :-1]], axis=1)
+        lam_prev = jnp.concatenate(
+            [jnp.ones_like(lam_s[:, :1]), lam_s[:, :-1]], axis=1)
+        prev = shifted + init_state[:, None] * lam_prev[..., None, None]
+
+    y_inter = jnp.einsum("bcihn,bchnp,bcih->bcihp",
+                         cc, prev, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    final = st_s[:, -1]
+    if init_state is not None:
+        final = final + init_state * lam_s[:, -1][..., None, None]
+    return y, final
+
+
+def forward(p, x: jax.Array, cfg: SSMConfig,
+            return_cache: bool = False):
+    """Full-sequence mamba2 block (train / prefill). x: (B,S,D).
+
+    With return_cache=True also returns the decode cache (final SSM state +
+    the conv tail), i.e. this doubles as `prefill`.
+    """
+    s_orig = x.shape[1]
+    pad = (-s_orig) % cfg.chunk
+    if pad:
+        # causal: trailing zero-pad never influences earlier outputs; the
+        # final SSM state however would pick up extra decay, so caching
+        # requires an aligned length.
+        assert not return_cache, "prefill length must be a chunk multiple"
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    proj = C.dense(x, p["in_proj"])
+    z, xbc, dt = _split_proj(proj, cfg)
+    conv_tail = xbc[:, -(cfg.conv_width - 1):, :]
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xi, b, c = _split_xbc(xbc, cfg)
+
+    bsz, s, _ = x.shape
+    h, pd, g, n = cfg.n_heads, cfg.headdim, cfg.n_groups, cfg.d_state
+    xi = xi.reshape(bsz, s, h, pd).astype(jnp.float32)
+    xi = SH.constrain(xi, "batch", None, "heads", None)
+    b = b.reshape(bsz, s, g, n).astype(jnp.float32)
+    c = c.reshape(bsz, s, g, n).astype(jnp.float32)
+    dtv = _dt_activation(dt, p["dt_bias"], cfg)
+    a = -jnp.exp(p["a_log"])
+
+    y, state = _ssd_chunked(xi, dtv, a, b, c, cfg)
+    y = y + xi * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner).astype(x.dtype)
+    y = C.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  p["norm_w"])
+    out = C.dense(y, p["out_proj"])
+    if pad:
+        out = out[:, :s_orig]
+    if return_cache:
+        return out, {"state": state, "conv": conv_tail}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent form)
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg: SSMConfig, batch: int) -> Dict[str, C.ParamDef]:
+    return {
+        "state": C.ParamDef((batch, cfg.n_heads, cfg.d_state, cfg.headdim),
+                            ("batch", "heads", None, None), init="zeros",
+                            dtype=jnp.float32),
+        "conv": C.ParamDef((batch, cfg.conv_width - 1, cfg.conv_channels),
+                           ("batch", None, "mlp"), init="zeros"),
+    }
+
+
+def decode_step(p, x: jax.Array, cfg: SSMConfig, cache):
+    """One token. x: (B,1,D); cache: {state (B,H,N,P), conv (B,W-1,C)}."""
+    bsz = x.shape[0]
+    proj = C.dense(x, p["in_proj"])
+    z, xbc, dt = _split_proj(proj, cfg)
+
+    # conv with cached tail
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,W,C)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc_act = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    conv_cache = window[:, 1:, :]
+
+    xi, b, c = _split_xbc(xbc_act, cfg)
+    h, pd, g, n = cfg.n_heads, cfg.headdim, cfg.n_groups, cfg.d_state
+    xi = xi.reshape(bsz, h, pd).astype(jnp.float32)
+    b = b.reshape(bsz, g, n).astype(jnp.float32)
+    c = c.reshape(bsz, g, n).astype(jnp.float32)
+    hg = h // g
+    bhh = jnp.repeat(b, hg, axis=1)   # (B,H,N)
+    chh = jnp.repeat(c, hg, axis=1)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dtv * a[None, :])    # (B,H)
+
+    state = cache["state"] * da[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", bhh, xi * dtv[..., None])
+    y = jnp.einsum("bhn,bhnp->bhp", chh, state) + \
+        xi * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = C.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  p["norm_w"])
+    out = C.dense(y, p["out_proj"])
+    return out, {"state": state, "conv": conv_cache}

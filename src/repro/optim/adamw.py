@@ -1,0 +1,153 @@
+"""Sharded AdamW with optional 8-bit (blockwise-quantized) moment states.
+
+Optimizer states inherit the parameter sharding (ZeRO-style: with FSDP rules
+active, params AND moments are sharded over the "data" axis, so a 671B-param
+model's Adam states fit a 16 GB/chip pod slice — see EXPERIMENTS.md §Dry-run).
+
+8-bit mode stores m/v as int8 with a per-block (128 elems) f32 absmax scale —
+the standard 8-bit-Adam trick, here used to fit deepseek-v3 training state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_bits: int = 32          # 32 or 8
+    block: int = 128              # 8-bit quantization block
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Blockwise-quantized int8 tensor (shape/npad are static aux data)."""
+    q: Any             # int8, padded-flat (nblocks, block)
+    scale: Any         # f32 (nblocks, 1)
+    shape: Tuple[int, ...] = ()
+    npad: int = 0
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape, self.npad)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+
+def quantizable(shape: Tuple[int, ...], block: int) -> bool:
+    """Blockwise-int8 along the LAST axis keeps the tensor's own shape (and
+    therefore its sharding): dequantize is elementwise, no resharding.  A
+    flat-blocks layout instead forces a cross-sharding reshape that GSPMD can
+    only realize by replicating — observed as multi-TiB temps in the
+    deepseek-v3 dry-run (EXPERIMENTS.md §Perf iteration 2)."""
+    return len(shape) >= 1 and shape[-1] % block == 0 and shape[-1] >= block
+
+
+def _quantize(x: jax.Array, block: int) -> QTensor:
+    shape = x.shape
+    blocks = x.reshape(shape[:-1] + (shape[-1] // block, block))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return QTensor(q.reshape(shape), scale.astype(jnp.float32)[..., 0],
+                   shape, 0)
+
+
+def _dequantize(t: QTensor) -> jax.Array:
+    shape = t.shape
+    block = shape[-1] // t.scale.shape[-1]
+    blocks = t.q.astype(jnp.float32).reshape(
+        shape[:-1] + (t.scale.shape[-1], block))
+    return (blocks * t.scale[..., None]).reshape(shape)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any     # pytree of f32 or QTensor
+    v: Any
+
+
+def init(params, cfg: AdamWConfig) -> AdamState:
+    def zeros_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.state_bits == 8 and quantizable(p.shape, cfg.block):
+            return _quantize(z, cfg.block)
+        return z
+    return AdamState(step=jnp.int32(0),
+                     m=jax.tree.map(zeros_like, params),
+                     v=jax.tree.map(zeros_like, params))
+
+
+def _global_norm(grads) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(params, grads, state: AdamState, cfg: AdamWConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_q = lambda x: isinstance(x, QTensor)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _dequantize(m) if is_q(m) else m
+        # v is stored in sqrt-domain when quantized: halves the dynamic
+        # range so blockwise int8 doesn't zero small second moments
+        vf = jnp.square(_dequantize(v)) if is_q(v) else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        upd_ = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        if cfg.state_bits == 8:
+            # residual quantization noise can still inflate 1/sqrt(v);
+            # bound the per-element update (bitsandbytes-style safety)
+            upd_ = jnp.clip(upd_, -10.0, 10.0)
+        pf = p.astype(jnp.float32)
+        pf = pf - cfg.lr * (upd_ + cfg.weight_decay * pf)
+        m2 = _quantize(mf, cfg.block) if is_q(m) else mf
+        v2 = _quantize(jnp.sqrt(vf), cfg.block) if is_q(v) else vf
+        return pf.astype(p.dtype), m2, v2
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m, is_leaf=is_q)
+    flat_v = jax.tree.leaves(state.v, is_leaf=is_q)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(td, [o[0] for o in out])
+    new_m = jax.tree.unflatten(td, [o[1] for o in out])
+    new_v = jax.tree.unflatten(td, [o[2] for o in out])
+    return new_p, AdamState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+def state_axes(param_axes, cfg: AdamWConfig):
+    """Logical axes tree for the optimizer state (mirrors params)."""
+    if cfg.state_bits == 8:
+        # quantized blocks are flat; shard nothing (already tiny) —
+        # blockwise layout doesn't map onto the tensor's logical axes.
+        q_axes = QTensor(q=(None, None), scale=(None, None), shape=(), npad=0)
+        return AdamState(step=(),
+                         m=jax.tree.map(lambda _: q_axes, param_axes,
+                                        is_leaf=lambda t: isinstance(t, tuple)),
+                         v=jax.tree.map(lambda _: q_axes, param_axes,
+                                        is_leaf=lambda t: isinstance(t, tuple)))
+    return AdamState(step=(),
+                     m=param_axes,
+                     v=param_axes)

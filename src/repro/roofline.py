@@ -1,0 +1,345 @@
+"""Roofline analysis from compiled HLO — the dry-run's perf report.
+
+XLA's HloCostAnalysis visits a while body ONCE (verified empirically: a
+10-layer scan reports 1 layer of FLOPs), so we parse the optimized HLO
+ourselves and walk the call graph, multiplying while bodies by their
+`backend_config known_trip_count`:
+
+  * FLOPs: every `dot` op contributes 2 · |result| · |contracted dims|
+    (dimension numbers parsed from the op line).
+  * HBM bytes: for each top-level op of a non-fused computation we count
+    operand + result bytes; a fusion's internals live in registers/VMEM, so
+    only the fusion op's own operands/results hit HBM — and a fusion operand
+    that the fused computation merely dynamic-slices (the scan-over-stacked-
+    layers pattern) is charged only its sliced window, not the full stack.
+  * Collective bytes: all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute, counted as bytes crossing links per device
+    (all-reduce counts 2× its operand: reduce-scatter + all-gather phases).
+
+Terms (per device, seconds):
+  compute    = flops / PEAK_FLOPS
+  memory     = hbm_bytes / HBM_BW
+  collective = coll_bytes / ICI_BW
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_CALL_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES = ("parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "call", "conditional", "after-all",
+               "iota", "partition-id", "replica-id")
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def type_elems_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _operands(line: str, op: str) -> List[str]:
+    m = re.search(r"\b" + re.escape(op) + r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    return [o.strip().lstrip("%") for o in m.group(1).split(",") if o.strip()]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    symtab: Dict[str, str] = dataclasses.field(default_factory=dict)
+    ops: List[Tuple[str, str, str, List[str], str]] = \
+        dataclasses.field(default_factory=list)  # (var, type, op, operands, line)
+    params: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def parse(self):
+        for line in self.lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            var, type_str, op = m.group(1), m.group(2), m.group(3)
+            self.symtab[var] = type_str
+            opnds = _operands(line, op)
+            self.ops.append((var, type_str, op, opnds, line))
+            if op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", line)
+                if pm:
+                    self.params[var] = int(pm.group(1))
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _HDR_RE.match(line)
+        if m and (line.startswith("ENTRY") or not line.startswith(" ")):
+            cur = m.group(1)
+            comps[cur] = Computation(cur, [])
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].lines.append(line)
+    for c in comps.values():
+        c.parse()
+    return comps
+
+
+def _dot_flops(c: Computation) -> float:
+    flops = 0.0
+    for var, type_str, op, opnds, line in c.ops:
+        if op != "dot":
+            continue
+        dims = type_elems_dims(type_str)
+        n_out = 1
+        for d in (dims or []):
+            n_out *= d
+        k = 1
+        cm = _CONTRACT_RE.search(line)
+        if cm and opnds:
+            lhs_dims = type_elems_dims(c.symtab.get(opnds[0], ""))
+            if lhs_dims is not None and cm.group(1):
+                for ci in cm.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(lhs_dims):
+                        k *= lhs_dims[ci]
+        flops += 2.0 * n_out * k
+    return flops
+
+
+def _fusion_param_effective_bytes(c: Computation) -> Dict[int, float]:
+    """For a fused computation: params that are only dynamic-sliced count as
+    their window size, not their full size."""
+    eff: Dict[int, float] = {}
+    uses: Dict[str, List[Tuple[str, str]]] = {}
+    for var, type_str, op, opnds, line in c.ops:
+        for o in opnds:
+            uses.setdefault(o, []).append((op, type_str))
+    for pname, pidx in c.params.items():
+        u = uses.get(pname, [])
+        if u and all(op in ("dynamic-slice", "dynamic-update-slice", "slice",
+                            "gather") for op, _ in u):
+            eff[pidx] = sum(float(type_bytes(t)) for _, t in u)
+    return eff
+
+
+def _comp_costs(c: Computation, fusion_eff: Dict[str, Dict[int, float]],
+                is_fusion_body: bool):
+    """(flops, hbm_bytes, coll_bytes_by_kind, calls)."""
+    flops = _dot_flops(c)
+    hbm = 0.0
+    coll: Dict[str, float] = {}
+    calls: List[Tuple[str, float]] = []
+    for var, type_str, op, opnds, line in c.ops:
+        res_bytes = type_bytes(type_str)
+        if op in COLLECTIVES:
+            factor = 2.0 if op == "all-reduce" else 1.0
+            coll[op] = coll.get(op, 0.0) + factor * res_bytes
+        if op == "while":
+            trips = 1.0
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trips = float(tm.group(1))
+            bm, cm = _CALL_RE.search(line), _COND_RE.search(line)
+            if bm:
+                calls.append((bm.group(1), trips))
+            if cm:
+                calls.append((cm.group(1), trips))
+            continue
+        if op in ("call", "fusion"):
+            bm = _CALL_RE.search(line)
+            if bm:
+                calls.append((bm.group(1), 1.0))
+        if op == "conditional":
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    calls.append((b.strip().lstrip("%"), 1.0))
+
+        if is_fusion_body:
+            continue  # internals are VMEM/registers
+        if op in ("dynamic-slice", "gather", "slice"):
+            hbm += 2.0 * res_bytes
+        elif op == "dynamic-update-slice":
+            upd = res_bytes
+            if len(opnds) >= 2 and opnds[1] in c.symtab:
+                upd = type_bytes(c.symtab[opnds[1]])
+            hbm += 2.0 * upd
+        elif op == "fusion":
+            bm = _CALL_RE.search(line)
+            callee_eff = fusion_eff.get(bm.group(1), {}) if bm else {}
+            hbm += res_bytes
+            for i, o in enumerate(opnds):
+                if i in callee_eff:
+                    hbm += callee_eff[i]
+                elif o in c.symtab:
+                    hbm += type_bytes(c.symtab[o])
+        elif op not in _SKIP_BYTES and op not in COLLECTIVES:
+            hbm += res_bytes + sum(
+                type_bytes(c.symtab[o]) for o in opnds if o in c.symtab)
+        elif op in COLLECTIVES:
+            hbm += 2.0 * res_bytes
+    return flops, hbm, coll, calls
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps = _split_computations(hlo)
+
+    fusion_bodies = set()
+    for c in comps.values():
+        for var, type_str, op, opnds, line in c.ops:
+            if op == "fusion":
+                m = _CALL_RE.search(line)
+                if m:
+                    fusion_bodies.add(m.group(1))
+
+    fusion_eff = {n: _fusion_param_effective_bytes(comps[n])
+                  for n in fusion_bodies if n in comps}
+
+    costs = {n: _comp_costs(c, fusion_eff, n in fusion_bodies)
+             for n, c in comps.items()}
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None and comps:
+        entry = max(comps, key=lambda n: len(costs[n][3]))
+
+    totals = {"flops": 0.0, "hbm_bytes": 0.0}
+    coll: Dict[str, float] = {}
+    stack: List[str] = []
+
+    def visit(name: str, mult: float):
+        if name not in comps or name in stack or mult <= 0:
+            return
+        f, h, cl, calls = costs[name]
+        totals["flops"] += mult * f
+        totals["hbm_bytes"] += mult * h
+        for k, v in cl.items():
+            coll[k] = coll.get(k, 0.0) + mult * v
+        stack.append(name)
+        for callee, m2 in calls:
+            visit(callee, mult * m2)
+        stack.pop()
+
+    if entry:
+        visit(entry, 1.0)
+    totals["collective_bytes"] = sum(coll.values())
+    totals["collective_breakdown"] = coll
+    return totals
+
+
+# ---------------------------------------------------------------------------
+# Cell report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_total: float
+    xla_flops_reported: float
+    memory_analysis: Dict[str, float]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_compiled = self.flops_per_dev * self.n_devices
+        return self.model_flops_total / total_compiled if total_compiled else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOP throughput at the bound, as a fraction of peak."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        from repro.launch.mesh import PEAK_FLOPS_BF16
+        ach = self.model_flops_total / (self.n_devices * t)
+        return ach / PEAK_FLOPS_BF16
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["useful_flops_ratio"] = self.useful_flops_ratio
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def analyze_cell(arch: str, shape: str, mesh_name: str, n_devices: int,
+                 hlo: str, cost: Dict[str, float],
+                 mem: Dict[str, float], model_flops_total: float) -> CellReport:
+    from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+    parsed = analyze_hlo(hlo)
+    flops = parsed["flops"]
+    hbm = parsed["hbm_bytes"]
+    coll = parsed["collective_bytes"]
+    return CellReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_dev=flops, hbm_bytes_per_dev=hbm, coll_bytes_per_dev=coll,
+        coll_breakdown=parsed["collective_breakdown"],
+        t_compute=flops / PEAK_FLOPS_BF16,
+        t_memory=hbm / HBM_BW,
+        t_collective=coll / ICI_BW,
+        model_flops_total=model_flops_total,
+        xla_flops_reported=float(cost.get("flops", 0.0)),
+        memory_analysis=mem,
+    )

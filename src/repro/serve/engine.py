@@ -1,0 +1,121 @@
+"""Batched serving engine: prefill + decode steps with slot-based batching.
+
+A fixed batch of `slots` runs lock-step decode (the shape the decode_32k /
+long_500k dry-run cells lower).  A light continuous-batching layer refills
+finished slots from a request queue between decode bursts — enough to drive
+realistic serving benchmarks without an RPC stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.models import lm as LM
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch: int = 8
+    max_len: int = 512
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class Engine:
+    """Slot-based batched generation over (prefill, decode_step)."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 max_seq: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self._prefill = jax.jit(
+            lambda p, t, c, **kw: LM.prefill(p, cfg, t, c, **kw))
+        self._decode = jax.jit(
+            lambda p, t, c: LM.decode_step(p, cfg, t, c))
+        self._cache_defs = LM.cache_defs(cfg, ecfg.batch, ecfg.max_len)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.ecfg.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.ecfg.temperature).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 frames=None, patches=None, seed: int = 0
+                 ) -> Tuple[np.ndarray, Dict[str, float]]:
+        """Lock-step generation. prompts: (B, S) int32. Returns tokens + stats."""
+        b, s = prompts.shape
+        assert b == self.ecfg.batch
+        cache = C.init_params(self._cache_defs, jax.random.key(0))
+        t0 = time.perf_counter()
+        kw = {}
+        if frames is not None:
+            kw["frames"] = frames
+        if patches is not None:
+            kw["patches"] = patches
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, **kw)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        key = jax.random.key(seed)
+        tok = self._sample(logits, key)[:, None]
+        out = [tok]
+        t1 = time.perf_counter()
+        for i in range(max_new_tokens - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)[:, None]
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t1
+        tokens = np.asarray(jnp.concatenate(out, axis=1))
+        return tokens, {
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "decode_tok_per_s": b * (max_new_tokens - 1) / max(t_decode, 1e-9),
+        }
+
+
+def serve_queue(engine: Engine, requests: List[Request],
+                max_new_tokens: int = 16) -> Dict[int, np.ndarray]:
+    """Minimal continuous batching: group requests into engine-sized batches,
+    refilling from the queue as batches finish."""
+    q: "queue.Queue[Request]" = queue.Queue()
+    for r in requests:
+        q.put(r)
+    results: Dict[int, np.ndarray] = {}
+    bsz = engine.ecfg.batch
+    while not q.empty():
+        batch: List[Request] = []
+        while len(batch) < bsz and not q.empty():
+            batch.append(q.get())
+        while len(batch) < bsz:           # pad with a copy of the last req
+            batch.append(batch[-1])
+        slen = max(len(r.prompt) for r in batch)
+        prompts = np.zeros((bsz, slen), np.int32)
+        for i, r in enumerate(batch):
+            prompts[i, -len(r.prompt):] = r.prompt
+        toks, _ = engine.generate(prompts, max_new_tokens)
+        for i, r in enumerate(batch):
+            if r.uid not in results:
+                results[r.uid] = toks[i]
+    return results

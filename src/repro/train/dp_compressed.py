@@ -1,0 +1,76 @@
+"""Explicit-DP training step with int8 gradient compression.
+
+With pjit, the DP gradient reduction is implicit (fused into the backward)
+and cannot be compressed.  This variant shard_maps the grad computation over
+the DP axes, quantizes local grads to int8 with error feedback, reduces, and
+applies AdamW — ~4× less DP traffic for bf16/f32 grads.  The residual is
+carried in the optimizer state, so long-run updates stay unbiased
+(tests/test_ckpt_compress.py::test_error_feedback_unbiased_over_time, and
+the end-to-end check in tests/test_compressed_dp.py).
+
+Use when the DP axis rides slow links (the cross-pod "pod" axis): per-pod
+gradients compress before crossing DCN.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.optim import adamw as OPT
+from repro.optim import compress as GC
+from repro.train import step as TS
+
+
+def make_compressed_dp_step(cfg: ModelConfig, mesh: Mesh,
+                            opt_cfg: Optional[OPT.AdamWConfig] = None,
+                            dp_axes: Tuple[str, ...] = ("data",),
+                            remat: bool = False) -> Callable:
+    """Returns step(params, opt_state, residual, batch) ->
+    (params, opt_state, residual, metrics).  Params replicated over dp_axes
+    (pure DP; compose with TP by keeping "model" out of dp_axes)."""
+    opt_cfg = opt_cfg or OPT.AdamWConfig()
+    loss_fn = TS.make_loss_fn(cfg, remat=remat)
+
+    def local_grads(params, batch):
+        (loss, extras), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, grads
+
+    def step(params, opt_state, residual, batch):
+        def inner(params, residual, batch):
+            loss, grads = local_grads(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            mean_grads, new_residual = GC.compress_psum(
+                grads, residual, dp_axes)
+            loss = jax.lax.pmean(loss, dp_axes[0])
+            for ax in dp_axes[1:]:
+                loss = jax.lax.pmean(loss, ax)
+            return loss, mean_grads, new_residual
+
+        replicated = P()
+        batch_spec = jax.tree.map(lambda _: P(dp_axes), batch)
+        sharded = shard_map(
+            inner, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: replicated, params),
+                      jax.tree.map(lambda _: replicated, residual),
+                      batch_spec),
+            out_specs=(replicated,
+                       jax.tree.map(lambda _: replicated, params),
+                       jax.tree.map(lambda _: replicated, residual)),
+            check_rep=False)
+        loss, grads, residual = sharded(params, residual, batch)
+        params, opt_state, om = OPT.update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, residual, {"loss": loss, **om}
+
+    return jax.jit(step)
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,73 @@
+"""train_step factory: CE loss, remat'd layer scans, AdamW, aux losses.
+
+The returned step is a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for jax.jit with explicit in/out shardings (launch/dryrun.py) or
+plain jit on one host (tests/examples).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as SH
+from repro.configs.base import ModelConfig
+from repro.models import lm as LM
+from repro.optim import adamw as OPT
+
+IGNORE = -1  # label value that is masked out of the loss (vlm patch prefix)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over valid positions. logits (B,S,V); labels (B,S) int32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels != IGNORE).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, remat: bool = True,
+                 aux_weight: float = 0.01):
+    def loss_fn(params, batch):
+        logits, aux = LM.forward(params, cfg, batch, remat=remat)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            # patch prefix positions carry no next-token target
+            pad = jnp.full(
+                (labels.shape[0], cfg.n_patches), IGNORE, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        ce = cross_entropy(logits, labels)
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[OPT.AdamWConfig] = None,
+                    remat: bool = True) -> Callable:
+    opt_cfg = opt_cfg or OPT.AdamWConfig()
+    loss_fn = make_loss_fn(cfg, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        (loss, extras), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = OPT.update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **extras, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg, remat=False)
+
+    def eval_step(params, batch):
+        loss, extras = loss_fn(params, batch)
+        return {"loss": loss, **extras}
+
+    return eval_step

@@ -1,0 +1,80 @@
+"""Serving-path correctness: prefill + decode_step must reproduce the
+train-time forward's next-token logits for every family."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_config, reduced
+from repro.models import common as C
+from repro.models import lm as LM
+
+B, S = 2, 32
+
+TOL = {  # bf16 accumulation/fusion-order differences between the two jits
+    "dense": 0.03, "vlm": 0.03, "audio": 0.03,
+    "moe": 0.03, "ssm": 0.10, "hybrid": 0.25,
+}
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced(get_config(arch))
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    key = jax.random.key(1)
+    P = cfg.n_patches if cfg.family == "vlm" else 0
+    defs = LM.model_defs(cfg, max_seq=S + 8 + P)
+    params = C.init_params(defs, jax.random.key(0))
+    toks = jax.random.randint(key, (B, S + 2), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    kw = {}
+    if cfg.family == "audio":
+        batch["frames"] = kw["frames"] = jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32) * 0.1
+    if cfg.family == "vlm":
+        batch["patches"] = kw["patches"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.float32) * 0.1
+
+    logits_full, _ = LM.forward(params, cfg, batch)
+    cache = C.init_params(LM.cache_defs(cfg, B, S + 8 + P), jax.random.key(2))
+    lp, cache = LM.prefill(params, cfg, toks[:, :S], cache, **kw)
+    tol = TOL[cfg.family]
+    err_p = float(jnp.max(jnp.abs(lp - logits_full[:, P + S - 1])))
+    assert err_p <= tol, f"prefill mismatch {err_p}"
+    # two decode steps
+    ld, cache = LM.decode_step(params, cfg, toks[:, S:S + 1], cache)
+    err_d = float(jnp.max(jnp.abs(ld - logits_full[:, P + S])))
+    assert err_d <= max(tol, 1e-6) * 4 + tol, f"decode mismatch {err_d}"
+    ld2, cache = LM.decode_step(params, cfg, toks[:, S + 1:S + 2], cache)
+    err_d2 = float(jnp.max(jnp.abs(ld2 - logits_full[:, P + S + 1])))
+    assert err_d2 <= max(tol, 1e-6) * 4 + tol, f"decode2 mismatch {err_d2}"
+
+
+def test_gemma_ring_cache_bounded():
+    """gemma3 local layers keep a window-sized ring cache regardless of
+    max_len — the long_500k enabler."""
+    cfg = reduced(get_config("gemma3-27b"))
+    cdefs = LM.cache_defs(cfg, batch=1, max_len=4096)
+    local_k = cdefs["groups"]["locals"]["k"]
+    assert local_k.shape[3] == cfg.window_size  # ring, not max_len
+    glob_k = cdefs["groups"]["global"]["k"]
+    assert glob_k.shape[2] == 4096              # globals keep full length
+
+
+def test_mla_cache_is_compressed():
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    cdefs = LM.cache_defs(cfg, batch=1, max_len=1024)
+    leaf_names = set(cdefs["layers"].keys())
+    assert leaf_names == {"c_kv", "k_rope"}     # latents only, no full K/V
+    assert cdefs["layers"]["c_kv"].shape[-1] == cfg.kv_lora_rank
+
+
+def test_ssm_cache_is_constant_size():
+    cfg = reduced(get_config("mamba2-1.3b"))
+    c1 = LM.cache_defs(cfg, batch=1, max_len=64)
+    c2 = LM.cache_defs(cfg, batch=1, max_len=65536)
+    assert c1["layers"]["state"].shape == c2["layers"]["state"].shape

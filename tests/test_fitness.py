@@ -1,0 +1,62 @@
+"""FFM tests: LUT (faithful ROM) vs arithmetic (TPU-native) fitness modes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fitness as F
+from repro.core import ga as G
+
+
+@pytest.mark.parametrize("name", ["F1", "F2", "F3"])
+@pytest.mark.parametrize("m", [20, 26])
+def test_lut_matches_arith_within_quantization(name, m):
+    problem = F.PROBLEMS[name]
+    c = m // 2
+    t = F.build_tables(problem, m)
+    spec = F.ArithSpec.for_problem(problem)
+    rng = np.random.default_rng(0)
+    px = jnp.asarray(rng.integers(0, 1 << c, 256), jnp.int32)
+    qx = jnp.asarray(rng.integers(0, 1 << c, 256), jnp.int32)
+    y_lut = np.asarray(F.lut_fitness(px, qx, t)).astype(np.float64) / 2.0 ** t.frac_bits
+    y_ari = np.asarray(F.arith_fitness(px.astype(jnp.uint32),
+                                       qx.astype(jnp.uint32), c, spec))
+    scale = np.maximum(np.abs(y_ari), 1.0)
+    # quantization: frac_bits rounding + γ table addressing granularity
+    tol = (2.0 ** -t.frac_bits) * 4 + (2.0 ** t.delta_shift) * 2.0 ** -t.frac_bits
+    assert np.max(np.abs(y_lut - y_ari) / scale) < max(tol, 1e-2)
+
+
+def test_tables_fixed_point_autoscale():
+    t1 = F.build_tables(F.F1, 26)   # F1 spans ±6.9e10 -> negative frac bits
+    assert t1.frac_bits < 0
+    t3 = F.build_tables(F.F3, 20)   # F3 small range -> fractional precision
+    assert t3.frac_bits > 0
+    assert t3.gamma_t is not None   # sqrt needs the third ROM
+    t2 = F.build_tables(F.F2, 20)
+    assert t2.gamma_t is None       # identity γ -> ROM elided (paper's F1/F2)
+
+
+def test_decode_domain_mapping():
+    v = F.decode(jnp.asarray([0, (1 << 10) - 1]), 10, (-128.0, 127.0))
+    np.testing.assert_allclose(np.asarray(v), [-128.0, 127.0], rtol=1e-6)
+
+
+@pytest.mark.parametrize("name,n,m,k", [("F1", 32, 26, 100),
+                                        ("F3", 64, 20, 100)])
+def test_paper_convergence_claims(name, n, m, k):
+    """Paper Figs. 11–12: F1 (N=32, m=26) reaches its global minimum within
+    100 generations; F3 (N=64, m=20) gets near zero."""
+    problem = F.PROBLEMS[name]
+    best = np.inf
+    for seed in (1, 2, 3):
+        cfg = G.GAConfig(n=n, c=m // 2, v=2, mutation_rate=0.05, seed=seed,
+                         mode="lut")
+        t = F.build_tables(problem, m)
+        out = G.run(cfg, G.make_lut_fitness(t), k)
+        best = min(best, float(out.best_y) / 2.0 ** t.frac_bits)
+    if name == "F1":
+        target = float(problem.f(np.array(0.0), np.array(-4096.0)))
+        assert best <= target * 0.98  # within 2% of the global minimum
+    else:
+        assert best < 2.0             # near zero (grid-limited)

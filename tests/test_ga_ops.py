@@ -1,0 +1,108 @@
+"""Property tests on the GA operators (paper Secs. 3.2–3.4 invariants)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fitness as F
+from repro.core import ga as G
+
+
+def _cfg(n=32, c=10, v=2, mr=0.05, minimize=True, seed=0, mode="arith"):
+    return G.GAConfig(n=n, c=c, v=v, mutation_rate=mr, minimize=minimize,
+                      seed=seed, mode=mode)
+
+
+@given(st.integers(2, 6), st.integers(4, 14), st.integers(1, 3),
+       st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_generation_preserves_population_shape_and_width(log_n, c, v, seed):
+    n = 2 ** log_n
+    cfg = _cfg(n=n, c=c, v=v, seed=seed)
+    fit = G.make_blackbox_fitness(
+        lambda p: jnp.sum(p * p, axis=-1), c, [(-1, 1)] * v)
+    st_ = G.init_state(cfg)
+    st2, y = G.generation(st_, cfg, fit)
+    assert st2.x.shape == (n, v)
+    assert y.shape == (n,)
+    # no gene exceeds its c-bit width (the paper's m-bit registers)
+    assert int(jnp.max(st2.x)) < (1 << c)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_crossover_bit_conservation(seed):
+    """Single-point crossover: at EVERY bit position, the multiset of bits
+    across each offspring pair equals the parent pair's (Eqs. 15–20)."""
+    cfg = _cfg(n=64, c=12, seed=seed)
+    st_ = G.init_state(cfg)
+    w = st_.x  # any population serves as "selected parents"
+    z, _ = G._crossover(w, st_.cross_lfsr, cfg)
+    w1, w2 = np.asarray(w[0::2]), np.asarray(w[1::2])
+    z1, z2 = np.asarray(z[0::2]), np.asarray(z[1::2])
+    # XOR-sum per position is conserved iff bits are swapped, never invented
+    np.testing.assert_array_equal(w1 ^ w2, z1 ^ z2)
+    # and each offspring bit comes from one of the two parents
+    assert ((z1 & ~(w1 | w2)) == 0).all()
+    assert ((z2 & ~(w1 | w2)) == 0).all()
+
+
+@given(st.integers(0, 10_000), st.floats(0.01, 0.5))
+@settings(max_examples=20, deadline=None)
+def test_mutation_touches_exactly_first_p(seed, mr):
+    cfg = _cfg(n=64, c=12, seed=seed, mr=mr)
+    st_ = G.init_state(cfg)
+    z = st_.x
+    x2, _ = G._mutate(z, st_.mut_lfsr, cfg)
+    changed = np.asarray((x2 != z).any(axis=1))
+    assert not changed[cfg.p:].any(), "only the first P individuals mutate"
+    # mutation is XOR: applying the same random word again restores z
+    # (Eq. 6/21 is an involution)
+    mut2, _ = G._mutate(x2, st_.mut_lfsr, cfg)
+    # same draw because we reuse the same starting lfsr state
+    np.testing.assert_array_equal(np.asarray(mut2), np.asarray(z))
+
+
+@given(st.integers(0, 10_000), st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_selection_winner_is_better(seed, minimize):
+    cfg = _cfg(n=32, c=10, seed=seed, minimize=minimize)
+    st_ = G.init_state(cfg)
+    fit = G.make_blackbox_fitness(
+        lambda p: jnp.sum(p, axis=-1), cfg.c, [(-1, 1)] * cfg.v)
+    y = fit(st_.x)
+    w, _ = G._select(st_.x, y, st_.sel_lfsr, cfg)
+    yw = fit(w)
+    # every selected chromosome's fitness exists in the population and the
+    # winner of each tournament is at least as good as the median loser odds:
+    # directly recompute the tournament to check the comparator
+    from repro.core import lfsr as L
+    sel2 = L.steps(st_.sel_lfsr, cfg.steps_per_draw)
+    i1 = np.asarray(L.truncate(sel2[0], cfg.idx_bits)).astype(int)
+    i2 = np.asarray(L.truncate(sel2[1], cfg.idx_bits)).astype(int)
+    yn = np.asarray(y)
+    expect = np.where(
+        (yn[i1] <= yn[i2]) if minimize else (yn[i1] >= yn[i2]), i1, i2)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(st_.x)[expect])
+
+
+def test_run_is_deterministic():
+    cfg = _cfg(n=32, c=10, seed=7, mode="arith")
+    fit = G.fitness_for_problem(F.F3, cfg)
+    a = G.run(cfg, fit, 50)
+    b = G.run(cfg, fit, 50)
+    np.testing.assert_array_equal(np.asarray(a.state.x), np.asarray(b.state.x))
+    assert float(a.best_y) == float(b.best_y)
+
+
+def test_maximize_mode():
+    cfg = _cfg(n=64, c=10, seed=3, minimize=False, mode="arith")
+    # maximize -(x^2+y^2) -> best at 0
+    fit = G.make_blackbox_fitness(
+        lambda p: -jnp.sum(p * p, axis=-1), cfg.c, [(-1, 1)] * 2)
+    out = G.run(cfg, fit, 100)
+    assert float(out.best_y) > -0.05

@@ -1,0 +1,69 @@
+"""LFSR unit + property tests (the paper's randomness source)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lfsr
+
+
+@given(st.lists(st.integers(1, 2**32 - 1), min_size=1, max_size=32),
+       st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_matches_numpy_reference(seeds, n):
+    s = jnp.asarray(np.array(seeds, np.uint32))
+    got = np.asarray(lfsr.steps(s, n))
+    want = lfsr.np_steps(np.array(seeds, np.uint32), n)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(1, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_nonzero_state_stays_nonzero(seed):
+    s = jnp.asarray(np.array([seed], np.uint32))
+    out = np.asarray(lfsr.steps(s, 128))
+    assert out[0] != 0
+
+
+def test_zero_is_absorbing():
+    # degenerate all-zero register never escapes — why seeds must be nonzero
+    s = jnp.zeros((1,), jnp.uint32)
+    assert int(lfsr.steps(s, 10)[0]) == 0
+
+
+@given(st.lists(st.integers(1, 2**32 - 1), min_size=1, max_size=8),
+       st.integers(1, 200))
+@settings(max_examples=20, deadline=None)
+def test_leap_equals_iterated_steps(seeds, t):
+    s = jnp.asarray(np.array(seeds, np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(lfsr.leap(s, t)), np.asarray(lfsr.steps(s, t)))
+
+
+@given(st.integers(1, 2**32 - 1), st.integers(1, 31))
+@settings(max_examples=30, deadline=None)
+def test_truncate_keeps_msbs(seed, bits):
+    s = jnp.asarray(np.array([seed], np.uint32))
+    r = int(lfsr.truncate(s, bits)[0])
+    assert r == seed >> (32 - bits)
+    assert r < (1 << bits)
+
+
+def test_seeds_distinct_and_nonzero():
+    s = np.asarray(lfsr.seeds(42, 4096))
+    assert (s != 0).all()
+    assert len(np.unique(s)) == 4096
+
+
+def test_long_period_no_short_cycle():
+    # the polynomial is primitive-ish: no cycle within 2^12 steps
+    s0 = np.array([0xACE1], np.uint32)
+    seen = set()
+    s = s0.copy()
+    for _ in range(4096):
+        key = int(s[0])
+        assert key not in seen
+        seen.add(key)
+        s = lfsr.np_step(s)

@@ -1,0 +1,83 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, reduced
+config, one forward + one train step on CPU; shapes + no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_config, list_archs, reduced
+from repro.models import common as C
+from repro.models import lm as LM
+from repro.optim import adamw as OPT
+from repro.train import step as TS
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32) * 0.1
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.float32) * 0.1
+    return batch
+
+
+def test_registry_has_all_ten():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    defs = LM.model_defs(cfg, max_seq=S)
+    params = C.init_params(defs, jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+
+    logits, aux = LM.forward(params, cfg, batch)
+    expect_s = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, expect_s, cfg.vocab_)
+    assert not bool(jnp.isnan(logits).any()), "NaN logits"
+
+    ts = jax.jit(TS.make_train_step(cfg))
+    opt = OPT.init(params, OPT.AdamWConfig())
+    p2, o2, m = ts(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["loss"]) < 2.0 * np.log(cfg.vocab_) + 5
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(p2)[0]
+    assert not np.array_equal(np.asarray(l0), np.asarray(l1))
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_full_config_param_counts_sane(arch):
+    """Analytic parameter counts should be in the advertised ballpark."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "minitron-8b": (7e9, 10.5e9),
+        "yi-34b": (30e9, 40e9),
+        "qwen1.5-32b": (29e9, 40e9),
+        "gemma3-27b": (24e9, 32e9),
+        # the ASSIGNED config (48L x 64e x 1408ff) is bigger than the
+        # hf Moonlight (27L); we implement the assignment as specified
+        "moonshot-v1-16b-a3b": (24e9, 32e9),
+        "deepseek-v3-671b": (6.0e11, 7.4e11),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+        "pixtral-12b": (10e9, 15e9),
+        "mamba2-1.3b": (1.0e9, 1.8e9),
+        "zamba2-2.7b": (2.2e9, 3.6e9),
+    }[arch]
+    assert expected[0] < n < expected[1], f"{arch}: {n:.3e}"
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("deepseek-v3-671b")
+    assert cfg.active_param_count() < 0.1 * cfg.param_count()
