@@ -1,0 +1,43 @@
+"""`repro.ga` backend matrix: generations/sec per backend on one spec.
+
+One canonical spec (F3, N=64, m=20, arith) runs through every registered
+backend; the derived column is a JSON object so downstream tooling can
+scrape per-backend throughput.  The islands row uses 8 islands (total
+chromosome throughput is islands × gens/s); on CPU the fused row runs the
+Pallas kernel in interpret mode, so its absolute number only means something
+on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from benchmarks.ga_common import time_call
+from repro import ga
+
+K = 100
+N_ISLANDS = 8
+
+
+def run():
+    base = ga.paper_spec("F3", n=64, m=20, mode="arith", mutation_rate=0.02,
+                         seed=1, generations=K)
+    rows = []
+    for backend in sorted(ga.BACKENDS):
+        spec = base if backend != "islands" else \
+            dataclasses.replace(base, n_islands=N_ISLANDS)
+        eng = ga.Engine(spec, backend)
+        out = eng.run()           # compile + warm caches
+        iters = 1 if backend in ("fused", "eager") else 3  # interpret is slow
+        dt, out = time_call(eng.run, warmup=0, iters=iters)
+        gens = out.generations * max(spec.n_islands, spec.n_repeats)
+        payload = json.dumps({"backend": out.backend,
+                              "gens_per_s": round(gens / dt, 1),
+                              "best": round(out.best_fitness, 4),
+                              "n": spec.n,
+                              "islands": spec.n_islands},
+                             separators=(",", ":"))
+        # islands rounds K up to whole migration epochs — divide by what ran
+        rows.append((f"engine_{backend}", dt / out.generations * 1e6, payload))
+    return rows

@@ -1,4 +1,5 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities (engine-based benchmarks build a GASpec via
+`bench_engine` and time `Engine.run` — compilation is cached per Engine)."""
 
 from __future__ import annotations
 
@@ -7,6 +8,19 @@ from typing import Callable, Tuple
 
 import jax
 import numpy as np
+
+
+def bench_engine(problem: str, n: int, m: int, generations: int,
+                 mode: str = "lut", backend: str = "reference",
+                 mutation_rate: float = 0.02, seed: int = 1, **kw):
+    """An Engine warmed up (compiled) for timing loops."""
+    from repro import ga
+    spec = ga.paper_spec(problem, n=n, m=m, mode=mode,
+                         mutation_rate=mutation_rate, seed=seed,
+                         generations=generations, **kw)
+    eng = ga.Engine(spec, backend)
+    eng.run()   # compile + warm caches
+    return eng
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5

@@ -1,16 +1,21 @@
 """Paper Figs. 11-12: convergence curves for F1 (N=32, m=26) and F3
 (N=64, m=20), averaged over seeds; derived value = generations to reach the
-paper's reported convergence point."""
+paper's reported convergence point.
+
+The per-seed replication is the engine's `n_repeats` batch mode — the
+paper's Table 3 accuracy-study methodology (repeat the run R times, report
+hit statistics) in ONE vmapped launch per problem."""
 
 from __future__ import annotations
 
 import time
 
-import jax
 import numpy as np
 
+from repro import ga
 from repro.core import fitness as F
-from repro.core import ga as G
+
+R = 10   # seeds, vmapped into one scan
 
 
 def _gens_to(traj, target):
@@ -20,33 +25,29 @@ def _gens_to(traj, target):
 
 def run():
     rows = []
-    t0 = time.perf_counter()
     # F1: global min at x=-4096
+    t0 = time.perf_counter()
     target1 = float(F.F1.f(np.array(0.0), np.array(-4096.0))) * 0.98
-    gens = []
-    for seed in range(10):
-        cfg = G.GAConfig(n=32, c=13, v=2, mutation_rate=0.05, seed=seed,
-                         mode="lut")
-        t = F.build_tables(F.F1, 26)
-        out = G.run(cfg, G.make_lut_fitness(t), 100)
-        traj = np.asarray(out.traj_best) / 2.0 ** t.frac_bits
-        gens.append(_gens_to(traj, target1))
+    spec1 = ga.paper_spec("F1", n=32, m=26, mode="lut", mutation_rate=0.05,
+                          seed=0, generations=100, n_repeats=R)
+    out1 = ga.solve(spec1, backend="reference")
+    per_rep = out1.extras["per_repeat_traj_best"] / spec1.fitness_scale()
+    gens = [_gens_to(per_rep[r], target1) for r in range(R)]
     ok = [g for g in gens if g >= 0]
     rows.append(("convergence_F1_N32_m26",
                  (time.perf_counter() - t0) * 1e5,
                  f"median_gens_to_min={int(np.median(ok)) if ok else -1},"
-                 f"hit_rate={len(ok)}/10"))
+                 f"hit_rate={len(ok)}/{R}"))
     # F3
     t0 = time.perf_counter()
-    gens = []
-    for seed in range(10):
-        cfg = G.GAConfig(n=64, c=10, v=2, mutation_rate=0.05, seed=seed,
-                         mode="arith")
-        out = G.run(cfg, G.fitness_for_problem(F.F3, cfg), 100)
-        gens.append(_gens_to(np.asarray(out.traj_best), 1.0))
+    spec3 = ga.paper_spec("F3", n=64, m=20, mode="arith", mutation_rate=0.05,
+                          seed=0, generations=100, n_repeats=R)
+    out3 = ga.solve(spec3, backend="reference")
+    per_rep = out3.extras["per_repeat_traj_best"]
+    gens = [_gens_to(per_rep[r], 1.0) for r in range(R)]
     ok = [g for g in gens if g >= 0]
     rows.append(("convergence_F3_N64_m20",
                  (time.perf_counter() - t0) * 1e5,
                  f"median_gens_to_near_zero={int(np.median(ok)) if ok else -1},"
-                 f"hit_rate={len(ok)}/10"))
+                 f"hit_rate={len(ok)}/{R}"))
     return rows

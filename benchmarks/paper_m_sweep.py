@@ -6,11 +6,7 @@ should be nearly m-invariant — which is itself a finding we record."""
 
 from __future__ import annotations
 
-import jax
-
-from benchmarks.ga_common import time_call
-from repro.core import fitness as F
-from repro.core import ga as G
+from benchmarks.ga_common import bench_engine, time_call
 
 K = 200
 
@@ -18,11 +14,8 @@ K = 200
 def run():
     rows = []
     for m in (20, 22, 24, 26, 28):
-        cfg = G.GAConfig(n=32, c=m // 2, v=2, mutation_rate=0.02, seed=1,
-                         mode="lut")
-        fit = G.fitness_for_problem(F.F3, cfg)
-        runner = jax.jit(lambda: G.run(cfg, fit, K))
-        dt, _ = time_call(runner, iters=3)
+        eng = bench_engine("F3", n=32, m=m, generations=K, mode="lut")
+        dt, _ = time_call(eng.run, iters=3)
         rows.append((f"m_sweep_m{m}", dt / K * 1e6,
                      f"gens_per_s={K/dt:.0f}"))
     return rows

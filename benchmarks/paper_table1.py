@@ -1,19 +1,14 @@
 """Paper Table 1: generations/s vs population size N (m=20).
 
 The FPGA reports ~16.8k gens/s at N=4 falling to ~11.5k at N=64 (50 MHz
-clock / 3).  We report the JAX engine's CPU wall-clock generations/s (a
-relative measure on this container) and the TPU roofline-bound generations/s
-from the dry-run (the deployable number).
+clock / 3).  We report the engine's CPU wall-clock generations/s through the
+`repro.ga` reference backend (a relative measure on this container) — the
+TPU roofline-bound generations/s comes from the dry-run.
 """
 
 from __future__ import annotations
 
-import jax
-import numpy as np
-
-from benchmarks.ga_common import time_call
-from repro.core import fitness as F
-from repro.core import ga as G
+from benchmarks.ga_common import bench_engine, time_call
 
 K = 200
 
@@ -21,12 +16,8 @@ K = 200
 def run():
     rows = []
     for n in (4, 8, 16, 32, 64):
-        cfg = G.GAConfig(n=n, c=10, v=2, mutation_rate=0.02, seed=1,
-                         mode="lut")
-        fit = G.fitness_for_problem(F.F3, cfg)
-        runner = jax.jit(lambda: G.run(cfg, fit, K))
-        dt, out = time_call(runner, iters=3)
-        gens_per_s = K / dt
+        eng = bench_engine("F3", n=n, m=20, generations=K, mode="lut")
+        dt, _ = time_call(eng.run, iters=3)
         rows.append((f"table1_N{n}", dt / K * 1e6,
-                     f"gens_per_s={gens_per_s:.0f}"))
+                     f"gens_per_s={K/dt:.0f}"))
     return rows

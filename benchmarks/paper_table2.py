@@ -1,16 +1,14 @@
 """Paper Table 2: speedup over the sequential software GA.
 
 The paper compares its FPGA against prior FPGA GAs; the honest software
-analogue here is our vectorized engine (and fused kernel) vs a sequential
-NumPy GA at the same (N, k) settings the table uses."""
+analogue here is our vectorized engine (reference backend through
+`repro.ga`) vs a sequential NumPy GA at the same (N, k) settings the table
+uses."""
 
 from __future__ import annotations
 
-import jax
-
-from benchmarks.ga_common import numpy_sequential_ga, time_call
+from benchmarks.ga_common import bench_engine, numpy_sequential_ga, time_call
 from repro.core import fitness as F
-from repro.core import ga as G
 
 SETTINGS = [  # (ref, N, k) rows of Table 2
     ("vavouras09", 32, 100),
@@ -23,11 +21,8 @@ SETTINGS = [  # (ref, N, k) rows of Table 2
 def run():
     rows = []
     for ref, n, k in SETTINGS:
-        cfg = G.GAConfig(n=n, c=10, v=2, mutation_rate=0.02, seed=1,
-                         mode="arith")
-        fit = G.fitness_for_problem(F.F3, cfg)
-        runner = jax.jit(lambda: G.run(cfg, fit, k))
-        dt, _ = time_call(runner, iters=3)
+        eng = bench_engine("F3", n=n, m=20, generations=k, mode="arith")
+        dt, _ = time_call(eng.run, iters=3)
         t_seq, _ = numpy_sequential_ga(F.F3, n, 20, k)
         rows.append((f"table2_{ref}_N{n}_k{k}", dt * 1e6,
                      f"speedup_vs_sequential={t_seq/dt:.0f}x"))

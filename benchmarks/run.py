@@ -16,6 +16,7 @@ MODULES = [
     "benchmarks.paper_table2",       # Table 2: speedup vs sequential GA
     "benchmarks.paper_convergence",  # Figs 11-12: convergence
     "benchmarks.kernel_bench",       # fused kernel vs pure JAX
+    "benchmarks.engine_backends",    # repro.ga backend matrix (JSON rows)
     "benchmarks.lm_bench",           # LM substrate sanity
 ]
 

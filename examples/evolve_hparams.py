@@ -12,7 +12,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import evolve
 from repro.data.pipeline import DataConfig, DataIterator
 from repro.models import common as C
 from repro.models import lm as LM
@@ -72,13 +71,18 @@ def make_fitness():
 
 
 def main():
-    # small population/generations — each fitness eval trains a model
+    # small population/generations — each fitness eval trains a model.
+    # Built as a GASpec so the run rides the unified repro.ga engine
+    # (equivalently: repro.core.evolve(fitness, bounds, ...)).
+    from repro import ga
+
     fitness = make_fitness()
-    r = evolve(fitness, bounds=[(-4.0, -1.0), (0.0, 0.2)],
-               population=8, generations=5, bits_per_var=8,
-               mutation_rate=0.1, seed=1)
-    print(f"best hparams: log10_lr={r.best_params[0]:.2f} "
-          f"wd={r.best_params[1]:.3f}")
+    spec = ga.GASpec(fitness=fitness, bounds=((-4.0, -1.0), (0.0, 0.2)),
+                     n=8, bits_per_var=8, mutation_rate=0.1, seed=1,
+                     generations=5)
+    r = ga.solve(spec)
+    print(f"[backend={r.backend}] best hparams: "
+          f"log10_lr={r.best_params[0]:.2f} wd={r.best_params[1]:.3f}")
     print(f"best trial loss: {r.best_fitness:.4f}")
     assert 10.0 ** r.best_params[0] > 3e-4, "GA should avoid tiny LRs"
 

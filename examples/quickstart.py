@@ -1,32 +1,43 @@
-"""Quickstart: the paper's parallel GA in five lines, then the same engine
-as the framework's blackbox tuner.
+"""Quickstart: the paper's parallel GA through the unified `repro.ga` API,
+then the same engine as the framework's blackbox tuner.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import F1, F3, GAConfig, build_tables, evolve, run
-from repro.core import ga as G
+from repro import ga
+from repro.core import evolve
 
 
 def main():
     # --- 1. Reproduce the paper's F1 experiment (Fig. 11): N=32, m=26 ----
-    cfg = GAConfig(n=32, c=13, v=2, mutation_rate=0.05, seed=7, mode="lut")
-    tables = build_tables(F1, m=26)
-    out = run(cfg, G.make_lut_fitness(tables), k_generations=100)
-    best = float(out.best_y) / 2.0 ** tables.frac_bits
-    print(f"F1 best fitness after 100 generations: {best:.4g} "
-          f"(global minimum ≈ -6.897e10)")
-    print(f"decoded solution: {G.decode_best(out, cfg, F1.domain)}")
+    spec1 = ga.paper_spec("F1", n=32, m=26, mode="lut", mutation_rate=0.05,
+                          seed=7, generations=100)
+    out = ga.solve(spec1)
+    print(f"F1 best fitness after 100 generations: {out.best_fitness:.4g} "
+          f"(global minimum ≈ -6.897e10) [backend={out.backend}]")
+    print(f"decoded solution: {out.best_params}")
 
-    # --- 2. F3 with the TPU-native arithmetic fitness (Fig. 12) ----------
-    cfg3 = GAConfig(n=64, c=10, v=2, mutation_rate=0.05, seed=3, mode="arith")
-    out3 = run(cfg3, G.fitness_for_problem(F3, cfg3), 100)
-    print(f"F3 best: {float(out3.best_y):.4f} (optimum 0)")
+    # --- 2. F3 on every backend from the SAME spec -----------------------
+    spec3 = ga.paper_spec("F3", n=64, m=20, mode="arith", mutation_rate=0.05,
+                          seed=3, generations=100)
+    for backend in ("reference", "fused", "eager"):
+        r = ga.solve(spec3, backend=backend)
+        print(f"F3 [{backend:9s}] best: {r.best_fitness:.4f} (optimum 0)")
+    r = ga.solve(dataclasses.replace(spec3, n_islands=8), backend="islands")
+    print(f"F3 [islands x8] best: {r.best_fitness:.4f}")
 
-    # --- 3. The GA as a tuning service: minimize a 4-var blackbox --------
+    # --- 3. Swap the selection scheme, batch 8 seeds in one vmapped run --
+    r = ga.solve(dataclasses.replace(spec3, selection="tournament4",
+                                     n_repeats=8))
+    print(f"F3 [tournament4, 8 repeats] best: {r.best_fitness:.4f}, "
+          f"per-seed: {np.round(r.extras['per_repeat_best'], 3)}")
+
+    # --- 4. The GA as a tuning service: minimize a 4-var blackbox --------
     target = jnp.array([0.5, -1.0, 2.0, 0.0])
 
     def objective(p):          # (N, 4) -> (N,)

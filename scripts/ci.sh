@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification + a launch smoke of the unified GA engine.
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== engine smoke (reference backend, ~5s) =="
+timeout 120 python -m repro.launch.ga_run \
+    --problem F1 --n 16 --k 20 --backend reference
+
+echo "CI OK"

@@ -7,27 +7,28 @@ clip scales — can be handed to the full-parallel GA.  The evaluation function
 receives a whole population matrix at once (N, V) and returns (N,) scores, so
 model-based fitness (e.g. run 10 train steps per candidate) can itself be
 vmapped/pmapped by the caller.
+
+Since the `repro.ga` engine redesign this is a thin shim: the keyword
+surface is unchanged, but the run is a `GASpec` handed to `ga.solve`, which
+auto-routes to the eager backend when `jit_fitness=False`, the island
+backend when `n_islands > 1` (shard_mapped over `mesh` when given), and the
+reference scan otherwise.  Prefer building a `GASpec` directly in new code.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.core import fitness as F
-from repro.core import ga as G
-from repro.core import islands as ISL
 
 
 @dataclasses.dataclass
 class EvolveResult:
     best_params: np.ndarray     # [V] decoded
     best_fitness: float
-    traj_best: np.ndarray       # [K]
+    traj_best: np.ndarray       # [K] (island runs: one entry per epoch)
     traj_mean: np.ndarray       # [K]
 
 
@@ -43,6 +44,7 @@ def evolve(fn: Callable[[jax.Array], jax.Array],
            n_islands: int = 1,
            migrate_every: int = 16,
            jit_fitness: bool = True,
+           selection: str = "tournament",
            mesh=None) -> EvolveResult:
     """Minimize (or maximize) `fn` over box `bounds` with the parallel GA.
 
@@ -50,39 +52,23 @@ def evolve(fn: Callable[[jax.Array], jax.Array],
     fn is not traceable (e.g. it runs training trials) — the GA operators
     stay jitted, fitness runs eagerly.
     With n_islands > 1 the island model is used (sharded over `mesh` when
-    given, vmapped locally otherwise).
+    given, vmapped locally otherwise).  `selection` picks any registered
+    selection scheme (see repro.ga.SELECTION).
     """
-    v = len(bounds)
-    cfg = G.GAConfig(n=population, c=bits_per_var, v=v,
+    from repro import ga
+
+    # the island model always traces fitness (as it did pre-engine):
+    # jit_fitness=False only selects the eager driver for single-population
+    # runs, where a python loop is possible at all
+    spec = ga.GASpec(fitness=fn, bounds=tuple(tuple(b) for b in bounds),
+                     n=population, bits_per_var=bits_per_var,
                      mutation_rate=mutation_rate, minimize=minimize,
-                     seed=seed, mode="arith")
-    fit = G.make_blackbox_fitness(fn, bits_per_var, bounds)
-
-    if n_islands <= 1:
-        if jit_fitness:
-            out = jax.jit(lambda: G.run(cfg, fit, generations))()
-        else:
-            out = G.run_unjitted(cfg, fit, generations)
-        lo = np.array([b[0] for b in bounds])
-        hi = np.array([b[1] for b in bounds])
-        u = np.asarray(out.best_x) & cfg.var_mask
-        params = lo + u.astype(np.float64) * (hi - lo) / ((1 << bits_per_var) - 1)
-        return EvolveResult(params, float(out.best_y),
-                            np.asarray(out.traj_best), np.asarray(out.traj_mean))
-
-    icfg = ISL.IslandConfig(ga=cfg, n_islands=n_islands,
-                            migrate_every=migrate_every)
-    epochs = max(1, generations // migrate_every)
-    if mesh is not None:
-        states, best = ISL.run_sharded(icfg, fit, mesh, epochs)
-    else:
-        states, best = ISL.run_local(icfg, fit, epochs)
-    # recover best chromosome across islands
-    y = jax.vmap(fit)(states.x).astype(jnp.float32)
-    flat = y.reshape(-1)
-    idx = int(jnp.argmin(flat) if minimize else jnp.argmax(flat))
-    xi = np.asarray(states.x.reshape(-1, v)[idx]) & cfg.var_mask
-    lo = np.array([b[0] for b in bounds])
-    hi = np.array([b[1] for b in bounds])
-    params = lo + xi.astype(np.float64) * (hi - lo) / ((1 << bits_per_var) - 1)
-    return EvolveResult(params, float(flat[idx]), np.array([best]), np.array([]))
+                     seed=seed, generations=generations,
+                     n_islands=n_islands, migrate_every=migrate_every,
+                     jit_fitness=jit_fitness or n_islands > 1,
+                     selection=selection)
+    res = ga.solve(spec, mesh=mesh)
+    return EvolveResult(best_params=res.best_params,
+                        best_fitness=res.best_fitness,
+                        traj_best=res.traj_best,
+                        traj_mean=res.traj_mean)

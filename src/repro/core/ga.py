@@ -214,16 +214,25 @@ class GARun(NamedTuple):
     traj_mean: jax.Array   # [K] per-generation population mean
 
 
+GenerationFn = Callable[[GAState, GAConfig, FitnessFn],
+                        Tuple[GAState, jax.Array]]
+
+
 def run(cfg: GAConfig, fit: FitnessFn, k_generations: int,
-        state: Optional[GAState] = None) -> GARun:
+        state: Optional[GAState] = None,
+        generation_fn: GenerationFn = None) -> GARun:
+    """K-generation scan.  `generation_fn` swaps the operator pipeline
+    (defaults to the paper's tournament/single-point/XOR `generation`)."""
     if state is None:
         state = init_state(cfg)
+    if generation_fn is None:
+        generation_fn = generation
 
     neutral = jnp.float32(jnp.inf) if cfg.minimize else jnp.float32(-jnp.inf)
 
     def body(carry, _):
         st, by, bx = carry
-        st2, y = generation(st, cfg, fit)
+        st2, y = generation_fn(st, cfg, fit)
         yf = y.astype(jnp.float32)
         idx = jnp.argmin(yf) if cfg.minimize else jnp.argmax(yf)
         gen_best = yf[idx]
@@ -247,12 +256,16 @@ def generation_with_y(state: GAState, y: jax.Array, cfg: GAConfig) -> GAState:
 
 
 def run_unjitted(cfg: GAConfig, fit: FitnessFn, k_generations: int,
-                 state: Optional[GAState] = None) -> GARun:
+                 state: Optional[GAState] = None,
+                 apply_ops_fn=None) -> GARun:
     """Python-loop driver for fitness functions that cannot be traced.
-    The GA operators themselves stay jitted; only fitness runs eagerly."""
+    The GA operators themselves stay jitted; only fitness runs eagerly.
+    `apply_ops_fn(state, y, cfg) -> state` swaps the SM/CM/MM pipeline
+    (defaults to `generation_with_y`)."""
     if state is None:
         state = init_state(cfg)
-    step = jax.jit(functools.partial(generation_with_y, cfg=cfg))
+    step = jax.jit(functools.partial(apply_ops_fn or generation_with_y,
+                                     cfg=cfg))
     sign = 1.0 if cfg.minimize else -1.0
     best_y, best_x = np.inf, np.zeros((cfg.v,), np.uint32)
     tb, tm = [], []

@@ -71,9 +71,12 @@ def init_islands_fast(cfg: IslandConfig) -> G.GAState:
 
 
 def _local_generations(states: G.GAState, cfg: IslandConfig,
-                       fit: G.FitnessFn, gens: int) -> Tuple[G.GAState, jax.Array]:
-    """Run `gens` generations on a stack of islands; returns final fitness."""
-    step = functools.partial(G.generation, cfg=cfg.ga, fit=fit)
+                       fit: G.FitnessFn, gens: int,
+                       generation_fn=None) -> Tuple[G.GAState, jax.Array]:
+    """Run `gens` generations on a stack of islands; returns final fitness.
+    `generation_fn` swaps the operator pipeline (default: paper ops)."""
+    step = functools.partial(generation_fn or G.generation, cfg=cfg.ga,
+                             fit=fit)
 
     def one(st, _):
         st2, y = jax.vmap(lambda s: step(s))(st)
@@ -107,7 +110,8 @@ def _best_of(states: G.GAState, y: jax.Array, cfg: IslandConfig):
 # ---------------------------------------------------------------------------
 
 
-def make_sharded_step(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh
+def make_sharded_step(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
+                      generation_fn=None
                       ) -> Callable[[G.GAState], Tuple[G.GAState, jax.Array]]:
     """Build the jit/shard_map epoch step for the production mesh.
 
@@ -121,7 +125,8 @@ def make_sharded_step(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh
         return P(axes, *([None] * (x.ndim - 1)))
 
     def epoch(states: G.GAState) -> Tuple[G.GAState, jax.Array]:
-        states, y = _local_generations(states, cfg, fit, cfg.migrate_every)
+        states, y = _local_generations(states, cfg, fit, cfg.migrate_every,
+                                       generation_fn)
         elite_x, elite_y = _best_of(states, y, cfg)
         # ring-migrate elites to the next device along the *last* mesh axis,
         # composing rings across axes (pod ring at the wrap point).
@@ -133,7 +138,7 @@ def make_sharded_step(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh
             perm=[(i, (i + 1) % size_last) for i in range(size_last)])
         states = _splice_elites(states, y, shifted, cfg)
         del n_dev
-        return states, elite_y
+        return states, elite_x, elite_y
 
     state_specs = G.GAState(
         x=spec_for(jnp.zeros((1, 1, 1))),
@@ -143,12 +148,14 @@ def make_sharded_step(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh
         k=P(axes),
     )
     sharded = shard_map(epoch, mesh=mesh, in_specs=(state_specs,),
-                        out_specs=(state_specs, P(axes)), check_rep=False)
+                        out_specs=(state_specs, P(axes, None), P(axes)),
+                        check_rep=False)
     return jax.jit(sharded)
 
 
 def run_sharded(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
-                epochs: int, states: Optional[G.GAState] = None):
+                epochs: int, states: Optional[G.GAState] = None,
+                generation_fn=None):
     """Drive `epochs` migration epochs on the mesh; returns best over all."""
     if states is None:
         states = init_islands_fast(cfg)
@@ -159,10 +166,10 @@ def run_sharded(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
             lambda x: jax.device_put(x, NamedSharding(
                 mesh, P(cfg.axis_names, *([None] * (x.ndim - 1))))), states)
         del sharding
-    step = make_sharded_step(cfg, fit, mesh)
+    step = make_sharded_step(cfg, fit, mesh, generation_fn)
     best = None
     for _ in range(epochs):
-        states, elite_y = step(states)
+        states, _elite_x, elite_y = step(states)
         e = float(jnp.min(elite_y) if cfg.ga.minimize else jnp.max(elite_y))
         best = e if best is None else (min(best, e) if cfg.ga.minimize else max(best, e))
     return states, best
@@ -173,22 +180,31 @@ def run_sharded(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 
-def run_local(cfg: IslandConfig, fit: G.FitnessFn, epochs: int,
-              states: Optional[G.GAState] = None):
-    if states is None:
-        states = init_islands_fast(cfg)
+def make_local_step(cfg: IslandConfig, fit: G.FitnessFn, generation_fn=None):
+    """Jitted epoch for a single-host island stack: `migrate_every` local
+    generations + one on-host ring migration.  Shared by `run_local` and the
+    engine's islands backend.  Returns (states, elite_x, elite_y)."""
 
     @jax.jit
     def epoch(states):
-        states, y = _local_generations(states, cfg, fit, cfg.migrate_every)
+        states, y = _local_generations(states, cfg, fit, cfg.migrate_every,
+                                       generation_fn)
         elite_x, elite_y = _best_of(states, y, cfg)
         shifted = jnp.roll(elite_x, 1, axis=0)  # on-host ring
         states = _splice_elites(states, y, shifted, cfg)
-        return states, elite_y
+        return states, elite_x, elite_y
 
+    return epoch
+
+
+def run_local(cfg: IslandConfig, fit: G.FitnessFn, epochs: int,
+              states: Optional[G.GAState] = None, generation_fn=None):
+    if states is None:
+        states = init_islands_fast(cfg)
+    epoch = make_local_step(cfg, fit, generation_fn)
     best = None
     for _ in range(epochs):
-        states, elite_y = epoch(states)
+        states, _elite_x, elite_y = epoch(states)
         e = float(jnp.min(elite_y) if cfg.ga.minimize else jnp.max(elite_y))
         best = e if best is None else (min(best, e) if cfg.ga.minimize else max(best, e))
     return states, best

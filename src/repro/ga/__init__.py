@@ -1,0 +1,69 @@
+"""`repro.ga` — the public GA engine API (one spec, four backends).
+
+The paper's contribution is a single full-parallel datapath (FFM→SM→CM→MM)
+that scales by swapping hardware arrangements.  This package is that idea as
+an API: a frozen :class:`GASpec` describes *what* to solve (problem,
+encoding, operator pipeline, run policy) and the :class:`Engine` decides
+*how*, via a backend registry:
+
+    ============  =====================================================
+    backend       execution
+    ============  =====================================================
+    reference     pure-JAX `lax.scan` — any operators, lut or arith FFM,
+                  vmapped `n_repeats` replicas in one scan
+    fused         one Pallas kernel per generation (VMEM-resident state,
+                  MXU one-hot tournaments); arith FFM, paper pipeline,
+                  power-of-two N <= 1024; bit-identical to reference
+    islands       island model with ring migration; shard_mapped over a
+                  device mesh when one is given
+    eager         python-loop driver for non-traceable fitness
+                  (operators stay jitted)
+    ============  =====================================================
+
+Typical use::
+
+    from repro import ga
+
+    result = ga.solve(ga.GASpec(problem="F1", n=32, bits_per_var=13,
+                                mode="lut", generations=100))
+    result = ga.solve(ga.paper_spec("F3", n=64, m=20, mode="arith"),
+                      backend="fused")
+
+Operator stages are pluggable protocols with registries
+(`ga.SELECTION` / `ga.CROSSOVER` / `ga.MUTATION`; see
+:mod:`repro.ga.operators`), chunked streaming + checkpoint/resume live on
+:meth:`Engine.run_chunked`.
+
+Old call sites map onto this API as follows (the old entry points remain as
+thin shims):
+
+    core.ga.run(cfg, fit, k)            -> solve(spec, backend="reference")
+    core.ga.run_unjitted(cfg, fit, k)   -> solve(spec, backend="eager")
+                                           (spec.jit_fitness=False)
+    kernels.ops.ga_run_kernel(...)      -> solve(spec, backend="fused")
+    islands.run_local/run_sharded(...)  -> solve(spec, backend="islands")
+                                           (spec.n_islands>1[, mesh=...])
+    core.evolve.evolve(fn, bounds)      -> unchanged signature, now a
+                                           GASpec + Engine underneath
+"""
+
+from repro.ga.spec import GASpec, paper_spec
+from repro.ga.operators import (CROSSOVER, MUTATION, PAPER_PIPELINE,
+                                SELECTION, CrossoverOp, MutationOp,
+                                SelectionOp, make_apply_ops, make_generation,
+                                register_crossover, register_mutation,
+                                register_selection)
+from repro.ga.backends import BACKENDS, Backend, Segment
+from repro.ga.engine import (BackendUnsupported, Engine, EngineResult,
+                             capability_matrix, resolve_backend, solve)
+
+__all__ = [
+    "GASpec", "paper_spec",
+    "Engine", "EngineResult", "solve", "resolve_backend",
+    "capability_matrix", "BackendUnsupported",
+    "BACKENDS", "Backend", "Segment",
+    "SELECTION", "CROSSOVER", "MUTATION", "PAPER_PIPELINE",
+    "SelectionOp", "CrossoverOp", "MutationOp",
+    "register_selection", "register_crossover", "register_mutation",
+    "make_generation", "make_apply_ops",
+]

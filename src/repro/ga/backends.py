@@ -1,0 +1,368 @@
+"""Engine backends — four executions of the same `GASpec` datapath.
+
+  reference  pure-JAX `lax.scan` (the faithful port in repro.core.ga);
+             supports every operator combination and vmapped `n_repeats`.
+  fused      the Pallas one-kernel-per-generation path (repro.kernels);
+             paper pipeline only, arith FFM, power-of-two N <= 1024.
+             `n_repeats` replicas map onto the kernel's island grid axis.
+  islands    vmapped island model with ring migration (repro.core.islands),
+             shard_mapped over a mesh when one is provided.
+  eager      python-loop driver for non-traceable fitness functions
+             (operators stay jitted; fitness runs eagerly).
+
+Each backend implements `supports(spec)` (capability check → reason string or
+None), `init(spec)` (backend-native state pytree) and `segment(state, gens)`
+(advance `gens` generations, returning the new state + telemetry).  The
+Engine composes segments into full runs, chunked streaming and
+checkpoint/resume — so every backend gets those features for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ga as G
+from repro.core import islands as ISL
+from repro.ga import operators as OPS
+from repro.ga.spec import GASpec
+from repro.kernels import ga_step as _ga_step
+
+
+@dataclasses.dataclass
+class Segment:
+    """Telemetry for one contiguous block of generations (raw fitness units).
+
+    traj arrays have one entry per generation, except the islands backend
+    where the unit is one migration epoch (`migrate_every` generations).
+    """
+
+    state: Any
+    best_y: float
+    best_x: np.ndarray          # uint32[V]
+    traj_best: np.ndarray
+    traj_mean: np.ndarray
+    gens: int
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _better_f(minimize: bool):
+    return min if minimize else max
+
+
+def _arg_best(y: np.ndarray, minimize: bool) -> int:
+    return int(np.argmin(y) if minimize else np.argmax(y))
+
+
+def _stack_states(cfg: G.GAConfig, n_replicas: int):
+    """Replica r is seeded `seed + r` — replica 0 reproduces the solo run
+    bit-exactly (asserted in tests), and the splitmix seed hash decorrelates
+    consecutive integers."""
+    states = [G.init_state(dataclasses.replace(cfg, seed=cfg.seed + r))
+              for r in range(n_replicas)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+class Backend:
+    """One execution strategy for a GASpec."""
+
+    name = "?"
+
+    def __init__(self, spec: GASpec, *, mesh=None, interpret=None):
+        self.spec = spec
+        self.cfg = spec.ga_config()
+        self.mesh = mesh
+        self.interpret = interpret
+        self._cache: Dict[int, Any] = {}   # gens -> jitted segment runner
+
+    @staticmethod
+    def supports(spec: GASpec, mesh=None) -> Optional[str]:
+        """None if the spec can run on this backend, else the reason why not."""
+        raise NotImplementedError
+
+    def init(self):
+        raise NotImplementedError
+
+    def segment(self, state, gens: int) -> Segment:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# reference — pure-JAX scan, any operators, vmapped repeats
+# ---------------------------------------------------------------------------
+
+
+class ReferenceBackend(Backend):
+    name = "reference"
+
+    def __init__(self, spec, **kw):
+        super().__init__(spec, **kw)
+        self.fit = spec.fitness_fn()
+        self.gen_fn = OPS.make_generation(spec.selection, spec.crossover,
+                                          spec.mutation)
+
+    @staticmethod
+    def supports(spec: GASpec, mesh=None) -> Optional[str]:
+        if not spec.jit_fitness:
+            return "fitness is not traceable (jit_fitness=False); use 'eager'"
+        if spec.n_islands > 1:
+            return "n_islands > 1; use the 'islands' backend"
+        return None
+
+    def init(self):
+        if self.spec.n_repeats == 1:
+            return G.init_state(self.cfg)
+        return _stack_states(self.cfg, self.spec.n_repeats)
+
+    def _runner(self, gens: int):
+        if gens not in self._cache:
+            one = lambda st: G.run(self.cfg, self.fit, gens, st, self.gen_fn)
+            fn = one if self.spec.n_repeats == 1 else jax.vmap(one)
+            self._cache[gens] = jax.jit(fn)
+        return self._cache[gens]
+
+    def segment(self, state, gens: int) -> Segment:
+        out: G.GARun = self._runner(gens)(state)
+        mini = self.spec.minimize
+        if self.spec.n_repeats == 1:
+            return Segment(state=out.state, best_y=float(out.best_y),
+                           best_x=np.asarray(out.best_x),
+                           traj_best=np.asarray(out.traj_best),
+                           traj_mean=np.asarray(out.traj_mean), gens=gens)
+        per_rep = np.asarray(out.best_y)                       # [R]
+        r = _arg_best(per_rep, mini)
+        tb = np.asarray(out.traj_best)                         # [R, gens]
+        reduce = np.min if mini else np.max
+        return Segment(state=out.state, best_y=float(per_rep[r]),
+                       best_x=np.asarray(out.best_x)[r],
+                       traj_best=reduce(tb, axis=0),
+                       traj_mean=np.asarray(out.traj_mean).mean(axis=0),
+                       gens=gens,
+                       extras={"per_repeat_best": per_rep,
+                               "per_repeat_traj_best": tb})
+
+
+# ---------------------------------------------------------------------------
+# fused — the Pallas kernel, scanned with best/trajectory tracking
+# ---------------------------------------------------------------------------
+
+
+class FusedBackend(Backend):
+    name = "fused"
+
+    def __init__(self, spec, **kw):
+        super().__init__(spec, **kw)
+        self.arith = spec.arith_spec()
+        if self.interpret is None:
+            self.interpret = jax.default_backend() != "tpu"
+
+    @staticmethod
+    def supports(spec: GASpec, mesh=None) -> Optional[str]:
+        if not spec.jit_fitness:
+            return "fitness is not traceable (jit_fitness=False); use 'eager'"
+        if spec.mode != "arith":
+            return ("Pallas kernel requires mode='arith' — LUT gathers stay "
+                    "on the XLA path ('reference')")
+        if spec.problem is None or spec.arith_spec() is None:
+            return "fused FFM needs a closed-form paper problem (ArithSpec)"
+        if spec.n & (spec.n - 1):
+            return f"fused kernel requires power-of-two N (got {spec.n})"
+        if spec.n > 1024:
+            return (f"N={spec.n} > 1024: the (N, N) one-hot tournament "
+                    "matrices must fit VMEM; use islands/reference")
+        if not spec.uses_paper_pipeline:
+            return ("fused kernel hardwires the paper pipeline "
+                    "(tournament/single_point/xor); other operators run on "
+                    "'reference'")
+        if spec.n_islands > 1:
+            return "migration is not fused; use the 'islands' backend"
+        return None
+
+    def init(self):
+        # replicas ride the kernel's island grid axis (leading dim)
+        return _stack_states(self.cfg, self.spec.n_repeats)
+
+    def _runner(self, gens: int):
+        if gens in self._cache:
+            return self._cache[gens]
+        cfg, arith, interp = self.cfg, self.arith, self.interpret
+        mini = self.spec.minimize
+
+        @jax.jit
+        def go(states: G.GAState):
+            neutral = jnp.full((states.x.shape[0],),
+                               jnp.inf if mini else -jnp.inf, jnp.float32)
+
+            def body(carry, _):
+                x, sel, cross, mut, by, bx = carry
+                x2, sel2, cross2, mut2, y = _ga_step.ga_generation_kernel(
+                    x, sel, cross, mut, cfg=cfg, spec=arith,
+                    interpret=interp)
+                # y is the fitness of x (pre-update) — same convention as
+                # the reference scan, so trajectories align bit-for-bit.
+                idx = (jnp.argmin(y, axis=1) if mini
+                       else jnp.argmax(y, axis=1))
+                ii = jnp.arange(x.shape[0])
+                gen_best = y[ii, idx]
+                better = gen_best < by if mini else gen_best > by
+                by2 = jnp.where(better, gen_best, by)
+                bx2 = jnp.where(better[:, None], x[ii, idx], bx)
+                carry = (x2, sel2, cross2, mut2, by2, bx2)
+                tb = jnp.min(gen_best) if mini else jnp.max(gen_best)
+                return carry, (tb, jnp.mean(y))
+
+            init = (states.x, states.sel_lfsr, states.cross_lfsr,
+                    states.mut_lfsr, neutral,
+                    jnp.zeros((states.x.shape[0], cfg.v), jnp.uint32))
+            (x, sel, cross, mut, by, bx), (tb, tm) = jax.lax.scan(
+                body, init, None, length=gens)
+            return G.GAState(x, sel, cross, mut, states.k + gens), by, bx, tb, tm
+
+        self._cache[gens] = go
+        return go
+
+    def segment(self, state, gens: int) -> Segment:
+        states, by, bx, tb, tm = self._runner(gens)(state)
+        per_rep = np.asarray(by)
+        r = _arg_best(per_rep, self.spec.minimize)
+        return Segment(state=states, best_y=float(per_rep[r]),
+                       best_x=np.asarray(bx)[r],
+                       traj_best=np.asarray(tb), traj_mean=np.asarray(tm),
+                       gens=gens,
+                       extras={"per_repeat_best": per_rep})
+
+
+# ---------------------------------------------------------------------------
+# islands — vmapped / shard_mapped island model with ring migration
+# ---------------------------------------------------------------------------
+
+
+class IslandsBackend(Backend):
+    name = "islands"
+
+    def __init__(self, spec, **kw):
+        super().__init__(spec, **kw)
+        self.fit = spec.fitness_fn()
+        self.gen_fn = OPS.make_generation(spec.selection, spec.crossover,
+                                          spec.mutation)
+        self.icfg = ISL.IslandConfig(ga=self.cfg,
+                                     n_islands=spec.n_islands,
+                                     migrate_every=spec.migrate_every)
+
+    @staticmethod
+    def supports(spec: GASpec, mesh=None) -> Optional[str]:
+        if not spec.jit_fitness:
+            return "fitness is not traceable (jit_fitness=False); use 'eager'"
+        if spec.n_repeats > 1:
+            return "n_repeats is redundant with islands; raise n_islands"
+        return None
+
+    def init(self):
+        states = ISL.init_islands_fast(self.icfg)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            axes = self.icfg.axis_names
+            states = jax.tree.map(
+                lambda x: jax.device_put(x, NamedSharding(
+                    self.mesh, P(axes, *([None] * (x.ndim - 1))))), states)
+        return states
+
+    def _epoch(self):
+        if "epoch" in self._cache:
+            return self._cache["epoch"]
+        if self.mesh is not None:
+            step = ISL.make_sharded_step(self.icfg, self.fit, self.mesh,
+                                         self.gen_fn)
+        else:
+            step = ISL.make_local_step(self.icfg, self.fit, self.gen_fn)
+        self._cache["epoch"] = step
+        return step
+
+    def segment(self, state, gens: int) -> Segment:
+        epochs = max(1, math.ceil(gens / self.icfg.migrate_every))
+        step = self._epoch()
+        mini = self.spec.minimize
+        better = _better_f(mini)
+        best_y, best_x = None, None
+        tb, tm = [], []
+        for _ in range(epochs):
+            state, elite_x, elite_y = step(state)
+            ey = np.asarray(elite_y)
+            i = _arg_best(ey, mini)
+            if best_y is None or better(ey[i], best_y) == ey[i]:
+                best_y, best_x = float(ey[i]), np.asarray(elite_x)[i]
+            tb.append(float(ey[i]))
+            tm.append(float(ey.mean()))
+        return Segment(state=state, best_y=best_y, best_x=best_x,
+                       traj_best=np.asarray(tb), traj_mean=np.asarray(tm),
+                       gens=epochs * self.icfg.migrate_every,
+                       extras={"telemetry_unit_gens": self.icfg.migrate_every,
+                               "n_islands": self.icfg.n_islands})
+
+
+# ---------------------------------------------------------------------------
+# eager — python generation loop for non-traceable fitness
+# ---------------------------------------------------------------------------
+
+
+class EagerBackend(Backend):
+    name = "eager"
+
+    def __init__(self, spec, **kw):
+        super().__init__(spec, **kw)
+        self.fit = spec.fitness_fn()
+        self.apply_ops = OPS.make_apply_ops(spec.selection, spec.crossover,
+                                            spec.mutation)
+
+    @staticmethod
+    def supports(spec: GASpec, mesh=None) -> Optional[str]:
+        if spec.n_islands > 1:
+            return "eager driver has no migration; use 'islands'"
+        return None
+
+    def init(self):
+        if self.spec.n_repeats == 1:
+            return G.init_state(self.cfg)
+        return _stack_states(self.cfg, self.spec.n_repeats)
+
+    def segment(self, state, gens: int) -> Segment:
+        R = self.spec.n_repeats
+        mini = self.spec.minimize
+        if R == 1:
+            out = G.run_unjitted(self.cfg, self.fit, gens, state,
+                                 apply_ops_fn=self.apply_ops)
+            return Segment(state=out.state, best_y=float(out.best_y),
+                           best_x=np.asarray(out.best_x),
+                           traj_best=np.asarray(out.traj_best),
+                           traj_mean=np.asarray(out.traj_mean), gens=gens)
+        outs = []
+        for r in range(R):
+            st_r = jax.tree.map(lambda a: a[r], state)
+            cfg_r = dataclasses.replace(self.cfg, seed=self.cfg.seed + r)
+            outs.append(G.run_unjitted(cfg_r, self.fit, gens, st_r,
+                                       apply_ops_fn=self.apply_ops))
+        state = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[o.state for o in outs])
+        per_rep = np.array([float(o.best_y) for o in outs])
+        i = _arg_best(per_rep, mini)
+        tb = np.stack([np.asarray(o.traj_best) for o in outs])
+        reduce = np.min if mini else np.max
+        return Segment(state=state, best_y=float(per_rep[i]),
+                       best_x=np.asarray(outs[i].best_x),
+                       traj_best=reduce(tb, axis=0),
+                       traj_mean=np.stack([np.asarray(o.traj_mean)
+                                           for o in outs]).mean(axis=0),
+                       gens=gens, extras={"per_repeat_best": per_rep})
+
+
+BACKENDS: Dict[str, type] = {
+    ReferenceBackend.name: ReferenceBackend,
+    FusedBackend.name: FusedBackend,
+    IslandsBackend.name: IslandsBackend,
+    EagerBackend.name: EagerBackend,
+}

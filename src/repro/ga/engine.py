@@ -1,0 +1,225 @@
+"""The Engine: one entry point for every GA execution strategy.
+
+    from repro import ga
+
+    spec = ga.GASpec(problem="F3", n=64, bits_per_var=10, generations=100)
+    result = ga.solve(spec)                      # auto-picks a backend
+    result = ga.solve(spec, backend="fused")     # or pin one explicitly
+
+Backend selection (`backend="auto"`) walks the capability matrix: eager when
+the fitness is not traceable, islands when the spec asks for them, fused on
+TPU when the kernel's constraints hold, reference otherwise.  Pinning an
+unsupported backend warns and falls back gracefully instead of crashing.
+
+Streaming + checkpointing:
+
+    eng = ga.Engine(spec)
+    for tele in eng.run_chunked(chunk_generations=25, ckpt_dir="/tmp/ga"):
+        print(tele["gens_done"], tele["best_fitness"])
+
+Each chunk persists the full backend-native GAState through
+`repro.ckpt.checkpoint`, so a killed run resumes from the last chunk
+(`resume=True`, the default).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint as CKPT
+from repro.ga.backends import BACKENDS, Backend, Segment
+from repro.ga.spec import GASpec
+
+
+class BackendUnsupported(ValueError):
+    """Raised when no backend can run a spec."""
+
+
+def capability_matrix(spec: GASpec, mesh=None) -> Dict[str, Optional[str]]:
+    """Backend name -> None (supported) or the reason it cannot run."""
+    return {name: cls.supports(spec, mesh)
+            for name, cls in BACKENDS.items()}
+
+
+def _auto_order(spec: GASpec):
+    if not spec.jit_fitness:
+        return ["eager"]
+    order = []
+    if spec.n_islands > 1:
+        order.append("islands")
+    if jax.default_backend() == "tpu":
+        order.append("fused")   # the fast path where the MXU gathers pay off
+    order += ["reference", "islands", "eager"]
+    return order
+
+
+def resolve_backend(spec: GASpec, backend: str = "auto",
+                    mesh=None) -> str:
+    """Pick the backend name for a spec, with graceful fallback."""
+    caps = capability_matrix(spec, mesh)
+    if backend != "auto":
+        if backend not in BACKENDS:
+            raise BackendUnsupported(
+                f"unknown backend {backend!r}; registered: {sorted(BACKENDS)}")
+        reason = caps[backend]
+        if reason is None:
+            return backend
+        fallback = next((n for n in _auto_order(spec) if caps[n] is None),
+                        None)
+        if fallback is None:
+            raise BackendUnsupported(
+                f"backend {backend!r} cannot run this spec ({reason}) and "
+                f"no fallback applies: {caps}")
+        warnings.warn(f"backend {backend!r} cannot run this spec ({reason}); "
+                      f"falling back to {fallback!r}", stacklevel=3)
+        return fallback
+    for name in _auto_order(spec):
+        if caps[name] is None:
+            return name
+    raise BackendUnsupported(f"no backend supports this spec: {caps}")
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Uniform result across backends (fitness in real units — lut-mode
+    fixed-point scaling is already divided out)."""
+
+    spec: GASpec
+    backend: str
+    best_fitness: float
+    best_x: np.ndarray            # uint32[V] chromosome
+    best_params: np.ndarray       # float64[V] decoded variables
+    traj_best: np.ndarray
+    traj_mean: np.ndarray
+    generations: int
+    wall_s: float
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Engine:
+    """A spec bound to a backend, with cached compiled runners."""
+
+    def __init__(self, spec: GASpec, backend: str = "auto", *,
+                 mesh=None, interpret: Optional[bool] = None):
+        self.spec = spec
+        self.backend_name = resolve_backend(spec, backend, mesh)
+        self.backend: Backend = BACKENDS[self.backend_name](
+            spec, mesh=mesh, interpret=interpret)
+
+    def init_state(self):
+        return self.backend.init()
+
+    def _result(self, seg: Segment, wall_s: float) -> EngineResult:
+        scale = self.spec.fitness_scale()
+        return EngineResult(
+            spec=self.spec, backend=self.backend_name,
+            best_fitness=seg.best_y / scale,
+            best_x=np.asarray(seg.best_x, np.uint32),
+            best_params=self.spec.decode(seg.best_x),
+            traj_best=np.asarray(seg.traj_best) / scale,
+            traj_mean=np.asarray(seg.traj_mean) / scale,
+            generations=seg.gens, wall_s=wall_s, extras=seg.extras)
+
+    def run(self, generations: Optional[int] = None,
+            state=None) -> EngineResult:
+        gens = generations or self.spec.generations
+        t0 = time.perf_counter()
+        if state is None:
+            state = self.init_state()
+        seg = self.backend.segment(state, gens)
+        jax.block_until_ready(jax.tree.leaves(seg.state))
+        return self._result(seg, time.perf_counter() - t0)
+
+    def run_chunked(self, *, chunk_generations: Optional[int] = None,
+                    generations: Optional[int] = None,
+                    ckpt_dir: Optional[str] = None,
+                    resume: bool = True) -> Iterator[Dict[str, Any]]:
+        """Stream the run chunk by chunk, yielding per-chunk telemetry.
+
+        With `ckpt_dir`, each chunk checkpoints the backend-native state; a
+        restarted run with the same spec/ckpt_dir resumes at the last chunk.
+        """
+        total = generations or self.spec.generations
+        chunk = chunk_generations or max(1, total // 10)
+        scale = self.spec.fitness_scale()
+        mini = self.spec.minimize
+
+        state = self.init_state()
+        done, chunk_idx = 0, 0
+        best_y: Optional[float] = None
+        best_x = None
+        if ckpt_dir and resume:
+            step = CKPT.latest_step(ckpt_dir)
+            if step is not None:
+                state, extra = CKPT.restore(ckpt_dir, step, state)
+                ck_backend = extra.get("backend")
+                if ck_backend is not None and ck_backend != self.backend_name:
+                    raise ValueError(
+                        f"checkpoint in {ckpt_dir} was written by the "
+                        f"{ck_backend!r} backend; resuming it with "
+                        f"{self.backend_name!r} would load a mismatched "
+                        "state layout — rerun with the original backend or "
+                        "a fresh ckpt_dir")
+                done = int(extra["gens_done"])
+                chunk_idx = int(extra.get("chunk_idx", 0))
+                best_y = float(extra["best_y"])
+                best_x = np.asarray(extra["best_x"], np.uint32)
+
+        if done >= total and best_y is not None:
+            # resumed a finished run: surface the stored result instead of
+            # yielding nothing
+            yield {
+                "chunk": chunk_idx, "gens_done": done, "gens_total": total,
+                "chunk_gens": 0, "chunk_best": best_y / scale,
+                "best_fitness": best_y / scale,
+                "best_params": self.spec.decode(best_x),
+                "traj_best": np.empty((0,)), "wall_s": 0.0,
+                "gens_per_s": 0.0, "backend": self.backend_name,
+                "already_complete": True,
+            }
+            return
+
+        while done < total:
+            t0 = time.perf_counter()
+            seg = self.backend.segment(state, min(chunk, total - done))
+            jax.block_until_ready(jax.tree.leaves(seg.state))
+            dt = time.perf_counter() - t0
+            state = seg.state
+            done += seg.gens
+            chunk_idx += 1
+            if best_y is None or (seg.best_y < best_y if mini
+                                  else seg.best_y > best_y):
+                best_y, best_x = seg.best_y, np.asarray(seg.best_x)
+            if ckpt_dir:
+                CKPT.save(ckpt_dir, step=done, tree=state,
+                          extra={"gens_done": done, "chunk_idx": chunk_idx,
+                                 "best_y": float(best_y),
+                                 "best_x": [int(v) for v in best_x],
+                                 "backend": self.backend_name})
+            yield {
+                "chunk": chunk_idx,
+                "gens_done": done,
+                "gens_total": total,
+                "chunk_gens": seg.gens,
+                "chunk_best": seg.best_y / scale,
+                "best_fitness": best_y / scale,
+                "best_params": self.spec.decode(best_x),
+                "traj_best": np.asarray(seg.traj_best) / scale,
+                "wall_s": dt,
+                "gens_per_s": seg.gens / dt if dt > 0 else float("inf"),
+                "backend": self.backend_name,
+            }
+
+
+def solve(spec: GASpec, backend: str = "auto", *,
+          generations: Optional[int] = None, mesh=None,
+          interpret: Optional[bool] = None) -> EngineResult:
+    """Run a GASpec end to end and return the uniform result."""
+    return Engine(spec, backend, mesh=mesh,
+                  interpret=interpret).run(generations)

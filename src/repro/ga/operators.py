@@ -1,0 +1,191 @@
+"""Pluggable GA operator stages (SM / CM / MM) with registries.
+
+The paper's datapath hardwires one operator per stage (2-way tournament,
+single-point crossover, XOR mutation).  The GA-survey literature treats the
+choice of selection scheme and variation operators as the main quality lever,
+so the engine makes each stage a protocol + registry:
+
+  * ``SelectionOp(x, y, sel_lfsr, cfg) -> (w, sel_lfsr')``
+  * ``CrossoverOp(w, cross_lfsr, cfg) -> (z, cross_lfsr')``
+  * ``MutationOp(z, mut_lfsr, cfg)   -> (x', mut_lfsr')``
+
+All operators consume the same LFSR banks as the paper's modules, so GAState
+layout (and checkpoints) are identical whichever combination is selected.
+Register your own with the ``register_*`` decorators; every registered
+selection scheme is runnable through ``repro.ga.solve`` on the reference,
+islands and eager backends (the fused Pallas backend implements the paper's
+fixed pipeline only — the capability check routes other combinations to the
+reference backend).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ga as G
+from repro.core import lfsr
+from repro.core import selection as SEL
+from repro.core.ga import GAConfig, GAState
+
+
+class SelectionOp(Protocol):
+    def __call__(self, x: jax.Array, y: jax.Array, sel_lfsr: jax.Array,
+                 cfg: GAConfig) -> Tuple[jax.Array, jax.Array]: ...
+
+
+class CrossoverOp(Protocol):
+    def __call__(self, w: jax.Array, cross_lfsr: jax.Array,
+                 cfg: GAConfig) -> Tuple[jax.Array, jax.Array]: ...
+
+
+class MutationOp(Protocol):
+    def __call__(self, z: jax.Array, mut_lfsr: jax.Array,
+                 cfg: GAConfig) -> Tuple[jax.Array, jax.Array]: ...
+
+
+SELECTION: Dict[str, SelectionOp] = {}
+CROSSOVER: Dict[str, CrossoverOp] = {}
+MUTATION: Dict[str, MutationOp] = {}
+
+
+def register_selection(name: str):
+    def deco(fn):
+        SELECTION[name] = fn
+        return fn
+    return deco
+
+
+def register_crossover(name: str):
+    def deco(fn):
+        CROSSOVER[name] = fn
+        return fn
+    return deco
+
+
+def register_mutation(name: str):
+    def deco(fn):
+        MUTATION[name] = fn
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Built-in selection schemes (paper SM + the Sec. 2 survey variants)
+# ---------------------------------------------------------------------------
+
+SELECTION["tournament"] = SEL.tournament        # the paper's hardware SM
+SELECTION["tournament4"] = SEL.tournament_k     # k=4, stronger pressure
+SELECTION["roulette"] = SEL.roulette            # fitness-proportional
+SELECTION["rank"] = SEL.rank                    # linear-rank
+SELECTION["tournament_elite"] = SEL.with_elitism(SEL.tournament, n_elite=1)
+
+
+# ---------------------------------------------------------------------------
+# Built-in crossover operators
+# ---------------------------------------------------------------------------
+
+@register_crossover("single_point")
+def single_point(w, cross_lfsr, cfg: GAConfig):
+    """The paper's CM: mask-shift single-point crossover (Eqs. 12-20)."""
+    return G._crossover(w, cross_lfsr, cfg)
+
+
+@register_crossover("uniform")
+def uniform(w, cross_lfsr, cfg: GAConfig):
+    """Uniform crossover: each bit of each offspring pair is swapped
+    independently with p=1/2, using the pair's CM LFSR word as the mask.
+    Bit-conserving like the paper's CM (same XOR-sum invariant)."""
+    cross_lfsr, r = lfsr.draw(cross_lfsr, cfg.steps_per_draw)   # [V, N/2]
+    m = (r & jnp.uint32(cfg.var_mask)).T                        # [N/2, V]
+    w1, w2 = w[0::2], w[1::2]
+    z1 = (w1 & m) | (w2 & ~m)
+    z2 = (w2 & m) | (w1 & ~m)
+    z = jnp.stack([z1, z2], axis=1).reshape(cfg.n, cfg.v)
+    return z, cross_lfsr
+
+
+@register_crossover("none")
+def no_crossover(w, cross_lfsr, cfg: GAConfig):
+    """Pass-through CM (selection + mutation only)."""
+    return w, cross_lfsr
+
+
+# ---------------------------------------------------------------------------
+# Built-in mutation operators
+# ---------------------------------------------------------------------------
+
+@register_mutation("xor")
+def xor_first_p(z, mut_lfsr, cfg: GAConfig):
+    """The paper's MM: XOR the first P individuals with LFSR words."""
+    return G._mutate(z, mut_lfsr, cfg)
+
+
+@register_mutation("none")
+def no_mutation(z, mut_lfsr, cfg: GAConfig):
+    """Pass-through MM."""
+    return z, mut_lfsr
+
+
+# ---------------------------------------------------------------------------
+# Pipeline composition
+# ---------------------------------------------------------------------------
+
+PAPER_PIPELINE = ("tournament", "single_point", "xor")
+
+
+def resolve(selection: str, crossover: str, mutation: str
+            ) -> Tuple[SelectionOp, CrossoverOp, MutationOp]:
+    try:
+        return (SELECTION[selection], CROSSOVER[crossover],
+                MUTATION[mutation])
+    except KeyError as e:
+        registry = {"selection": SELECTION, "crossover": CROSSOVER,
+                    "mutation": MUTATION}
+        for kind, reg in registry.items():
+            name = {"selection": selection, "crossover": crossover,
+                    "mutation": mutation}[kind]
+            if name not in reg:
+                raise ValueError(
+                    f"unknown {kind} operator {name!r}; registered: "
+                    f"{sorted(reg)}") from e
+        raise
+
+
+def make_generation(selection: str = "tournament",
+                    crossover: str = "single_point",
+                    mutation: str = "xor") -> Callable:
+    """Build a ``generation_fn(state, cfg, fit) -> (state', y)`` from named
+    operators — drop-in for `repro.core.ga.generation` in `G.run`,
+    `islands.run_local` / `run_sharded`, and the engine backends."""
+    sel, cx, mu = resolve(selection, crossover, mutation)
+    if (selection, crossover, mutation) == PAPER_PIPELINE:
+        return G.generation   # identical pipeline; keep the core fast path
+
+    def generation_fn(state: GAState, cfg: GAConfig, fit: G.FitnessFn):
+        y = fit(state.x)
+        w, sel_lfsr = sel(state.x, y, state.sel_lfsr, cfg)
+        z, cross_lfsr = cx(w, state.cross_lfsr, cfg)
+        x_new, mut_lfsr = mu(z, state.mut_lfsr, cfg)
+        return GAState(x_new, sel_lfsr, cross_lfsr, mut_lfsr,
+                       state.k + 1), y
+
+    return generation_fn
+
+
+def make_apply_ops(selection: str = "tournament",
+                   crossover: str = "single_point",
+                   mutation: str = "xor") -> Callable:
+    """Build ``apply_ops(state, y, cfg) -> state'`` (fitness supplied by the
+    caller) — the eager-backend analogue of `G.generation_with_y`."""
+    sel, cx, mu = resolve(selection, crossover, mutation)
+
+    def apply_ops(state: GAState, y: jax.Array, cfg: GAConfig) -> GAState:
+        w, sel_lfsr = sel(state.x, y, state.sel_lfsr, cfg)
+        z, cross_lfsr = cx(w, state.cross_lfsr, cfg)
+        x_new, mut_lfsr = mu(z, state.mut_lfsr, cfg)
+        return GAState(x_new, sel_lfsr, cross_lfsr, mut_lfsr, state.k + 1)
+
+    return apply_ops

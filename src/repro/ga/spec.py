@@ -1,0 +1,148 @@
+"""`GASpec` — one frozen description of a GA run.
+
+A spec bundles everything the four divergent drivers used to take through
+ad-hoc plumbing: the problem (a paper benchmark or a blackbox fitness over a
+box), the chromosome encoding, the operator pipeline, and the run policy
+(generations, repeats, islands).  Every backend consumes the same spec, so
+swapping `"reference"` ↔ `"fused"` ↔ `"islands"` ↔ `"eager"` is a string,
+not a rewrite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import fitness as F
+from repro.core import ga as G
+from repro.ga import operators as OPS
+
+
+@dataclasses.dataclass(frozen=True)
+class GASpec:
+    """Problem + encoding + operator choices + run policy (all frozen).
+
+    Exactly one of ``problem`` (a paper benchmark name, "F1"/"F2"/"F3") or
+    ``fitness`` (a batch blackbox ``(N, V) float32 -> (N,)`` with ``bounds``)
+    must be set.
+    """
+
+    # ---- problem --------------------------------------------------------
+    problem: Optional[str] = None
+    fitness: Optional[Callable] = None
+    bounds: Optional[Tuple[Tuple[float, float], ...]] = None
+
+    # ---- encoding -------------------------------------------------------
+    n: int = 32                    # population size N (even)
+    bits_per_var: int = 10         # c (paper: m/2)
+    n_vars: Optional[int] = None   # V; default 2 (paper) or len(bounds)
+    mode: str = "arith"            # FFM mode: "lut" (ROMs) | "arith" (VPU)
+
+    # ---- operators ------------------------------------------------------
+    selection: str = "tournament"
+    crossover: str = "single_point"
+    mutation: str = "xor"
+    mutation_rate: float = 0.02
+    minimize: bool = True
+    steps_per_draw: int = 3
+
+    # ---- run policy -----------------------------------------------------
+    generations: int = 100
+    seed: int = 1
+    n_repeats: int = 1             # independent vmapped replicas (Table 3)
+    n_islands: int = 1             # >1 -> island model with migration
+    migrate_every: int = 16
+    jit_fitness: bool = True       # False -> fitness not traceable (eager)
+
+    def __post_init__(self):
+        if (self.problem is None) == (self.fitness is None):
+            raise ValueError("set exactly one of problem= or fitness=")
+        if self.problem is not None and self.problem not in F.PROBLEMS:
+            raise ValueError(f"unknown problem {self.problem!r}; "
+                             f"choose from {sorted(F.PROBLEMS)}")
+        if self.fitness is not None and self.bounds is None:
+            raise ValueError("blackbox fitness requires bounds=")
+        if self.bounds is not None:
+            object.__setattr__(self, "bounds",
+                               tuple((float(lo), float(hi))
+                                     for lo, hi in self.bounds))
+        if self.mode not in ("lut", "arith"):
+            raise ValueError(f"mode must be 'lut' or 'arith', got {self.mode!r}")
+        # operator names must exist — fail at spec build, not mid-run
+        OPS.resolve(self.selection, self.crossover, self.mutation)
+        for field, lo in (("n", 2), ("bits_per_var", 1), ("generations", 1),
+                          ("n_repeats", 1), ("n_islands", 1),
+                          ("migrate_every", 1)):
+            if getattr(self, field) < lo:
+                raise ValueError(f"{field} must be >= {lo}")
+
+    # ---- derived --------------------------------------------------------
+
+    @property
+    def v(self) -> int:
+        if self.n_vars is not None:
+            return self.n_vars
+        return len(self.bounds) if self.bounds is not None else 2
+
+    @property
+    def uses_paper_pipeline(self) -> bool:
+        return (self.selection, self.crossover,
+                self.mutation) == OPS.PAPER_PIPELINE
+
+    def ga_config(self) -> G.GAConfig:
+        return G.GAConfig(n=self.n, c=self.bits_per_var, v=self.v,
+                          mutation_rate=self.mutation_rate,
+                          minimize=self.minimize,
+                          steps_per_draw=self.steps_per_draw,
+                          seed=self.seed, mode=self.mode)
+
+    def problem_obj(self) -> Optional[F.Problem]:
+        return F.PROBLEMS[self.problem] if self.problem is not None else None
+
+    def arith_spec(self) -> Optional[F.ArithSpec]:
+        """Closed-form fitness for the fused kernel (problems only)."""
+        p = self.problem_obj()
+        if p is None:
+            return None
+        try:
+            return F.ArithSpec.for_problem(p)
+        except ValueError:
+            return None
+
+    def fitness_fn(self) -> G.FitnessFn:
+        cfg = self.ga_config()
+        if self.problem is not None:
+            return G.fitness_for_problem(self.problem_obj(), cfg)
+        return G.make_blackbox_fitness(self.fitness, self.bits_per_var,
+                                       self.bounds)
+
+    def fitness_scale(self) -> float:
+        """Raw-fitness units per real unit (lut mode is fixed-point)."""
+        if self.problem is not None and self.mode == "lut":
+            t = F.build_tables(self.problem_obj(), 2 * self.bits_per_var)
+            return 2.0 ** t.frac_bits
+        return 1.0
+
+    def var_domains(self) -> Tuple[Tuple[float, float], ...]:
+        """Per-variable decode range."""
+        if self.bounds is not None:
+            return self.bounds
+        return (self.problem_obj().domain,) * self.v
+
+    def decode(self, x: np.ndarray) -> np.ndarray:
+        """Decode a uint32[V] chromosome to real variable values."""
+        u = np.asarray(x, np.uint64) & np.uint64((1 << self.bits_per_var) - 1)
+        doms = self.var_domains()
+        lo = np.array([d[0] for d in doms])
+        hi = np.array([d[1] for d in doms])
+        return lo + u.astype(np.float64) * (hi - lo) / \
+            ((1 << self.bits_per_var) - 1)
+
+
+def paper_spec(problem: str = "F3", n: int = 32, m: int = 20,
+               mode: str = "lut", **kw) -> GASpec:
+    """The paper's experiment grid as a spec: chromosome m = 2c bits."""
+    return GASpec(problem=problem, n=n, bits_per_var=m // 2, n_vars=2,
+                  mode=mode, **kw)

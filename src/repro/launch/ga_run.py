@@ -1,15 +1,20 @@
 """GA launcher — run the paper's experiments from the command line.
 
     PYTHONPATH=src python -m repro.launch.ga_run --problem F1 --n 32 --m 26
+    PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --backend fused
     PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --islands 16
+    PYTHONPATH=src python -m repro.launch.ga_run --selection roulette \
+        --backend reference --repeats 8
+
+Any registered backend (reference | fused | islands | eager | auto) and any
+registered selection scheme work from one spec; `--kernel` is kept as a
+deprecated alias for `--backend fused`.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
 import numpy as np
 
 
@@ -17,54 +22,72 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--problem", default="F3", choices=["F1", "F2", "F3"])
     ap.add_argument("--n", type=int, default=32)
-    ap.add_argument("--m", type=int, default=20)
-    ap.add_argument("--k", type=int, default=100)
+    ap.add_argument("--m", type=int, default=20,
+                    help="chromosome bits (2 variables of m/2 bits)")
+    ap.add_argument("--k", type=int, default=100, help="generations")
     ap.add_argument("--mode", default="lut", choices=["lut", "arith"])
     ap.add_argument("--mutation-rate", type=float, default=0.02)
-    ap.add_argument("--islands", type=int, default=0)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "reference", "fused", "islands",
+                             "eager"])
+    ap.add_argument("--selection", default="tournament",
+                    help="registered selection scheme (see repro.ga.SELECTION)")
+    ap.add_argument("--islands", type=int, default=0,
+                    help=">1 runs the island model (implies --backend islands)")
+    ap.add_argument("--migrate-every", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="independent replicas vmapped into one run")
     ap.add_argument("--kernel", action="store_true",
-                    help="use the fused Pallas generation kernel")
+                    help="deprecated: same as --backend fused")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="stream telemetry every CHUNK generations")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint/resume directory for chunked runs")
     ap.add_argument("--seed", type=int, default=1)
     args = ap.parse_args()
 
-    from repro.core import fitness as F
-    from repro.core import ga as G
-    from repro.core import islands as ISL
+    from repro import ga
 
-    problem = F.PROBLEMS[args.problem]
-    cfg = G.GAConfig(n=args.n, c=args.m // 2, v=2,
-                     mutation_rate=args.mutation_rate, seed=args.seed,
-                     mode=args.mode)
-    fit = G.fitness_for_problem(problem, cfg)
-
-    t0 = time.perf_counter()
+    backend = args.backend
     if args.kernel:
-        from repro.kernels import ops
-        spec = F.ArithSpec.for_problem(problem)
-        icfg = ISL.IslandConfig(ga=cfg, n_islands=max(args.islands, 1))
-        st = ISL.init_islands_fast(icfg)
-        st, best = ops.ga_run_kernel(st, args.k, cfg=cfg, spec=spec)
-        jax.block_until_ready(best)
-        dt = time.perf_counter() - t0
-        print(f"[kernel] best per island: {np.asarray(best)}")
-    elif args.islands > 1:
-        icfg = ISL.IslandConfig(ga=cfg, n_islands=args.islands)
-        st, best = ISL.run_local(icfg, fit, max(1, args.k // icfg.migrate_every))
-        dt = time.perf_counter() - t0
-        print(f"[islands x{args.islands}] best: {best}")
-    else:
-        out = jax.jit(lambda: G.run(cfg, fit, args.k))()
-        jax.block_until_ready(out.best_y)
-        dt = time.perf_counter() - t0
-        scale = 1.0
-        if args.mode == "lut":
-            scale = 2.0 ** F.build_tables(problem, args.m).frac_bits
-        print(f"best fitness: {float(out.best_y)/scale:.4f}")
-        print(f"decoded vars: {G.decode_best(out, cfg, problem.domain)}")
-        print(f"trajectory (best/gen, every 10): "
-              f"{np.asarray(out.traj_best)[::10]/scale}")
-    gens = args.k * max(args.islands, 1)
-    print(f"{dt*1e3:.1f} ms total -> {gens/dt:.0f} generations/s (CPU wall)")
+        backend = "fused"
+    n_islands = max(args.islands, 1)
+    if n_islands > 1 and backend == "auto":
+        backend = "islands"
+    mode = args.mode
+    if backend == "fused" and mode == "lut":
+        mode = "arith"   # the kernel's FFM is arithmetic-only
+
+    spec = ga.paper_spec(args.problem, n=args.n, m=args.m, mode=mode,
+                         mutation_rate=args.mutation_rate, seed=args.seed,
+                         generations=args.k, n_islands=n_islands,
+                         migrate_every=args.migrate_every,
+                         n_repeats=args.repeats, selection=args.selection)
+
+    if args.chunk > 0:
+        eng = ga.Engine(spec, backend)
+        last = None
+        for tele in eng.run_chunked(chunk_generations=args.chunk,
+                                    ckpt_dir=args.ckpt_dir):
+            print(f"[{tele['backend']}] chunk {tele['chunk']}: "
+                  f"{tele['gens_done']}/{tele['gens_total']} gens, "
+                  f"best={tele['best_fitness']:.4f}, "
+                  f"{tele['gens_per_s']:.0f} gens/s")
+            last = tele
+        if last is not None:
+            print(f"decoded vars: {np.round(last['best_params'], 4)}")
+        return
+
+    out = ga.solve(spec, backend=backend)
+    print(f"backend: {out.backend}")
+    print(f"best fitness: {out.best_fitness:.4f}")
+    print(f"decoded vars: {np.round(out.best_params, 4)}")
+    traj = np.asarray(out.traj_best)
+    if traj.size:
+        print(f"trajectory (best, every 10 entries): {traj[::10]}")
+    total_gens = out.generations * max(n_islands, args.repeats, 1)
+    print(f"{out.wall_s*1e3:.1f} ms total -> {total_gens/out.wall_s:.0f} "
+          f"generations/s (wall)")
 
 
 if __name__ == "__main__":

@@ -76,10 +76,42 @@ def type_elems_dims(type_str: str) -> Optional[List[int]]:
 
 
 def _operands(line: str, op: str) -> List[str]:
-    m = re.search(r"\b" + re.escape(op) + r"\(([^)]*)\)", line)
+    """Operand *names* of `op` in an HLO instruction line.
+
+    Operands are printed as `f32[128,128]{1,0} %name` — commas appear inside
+    shape brackets too, so split at depth-0 commas only, drop `/*index=k*/`
+    comments, and keep the trailing `%name` token of each operand.
+    """
+    m = re.search(r"\b" + re.escape(op) + r"\(", line)
     if not m:
         return []
-    return [o.strip().lstrip("%") for o in m.group(1).split(",") if o.strip()]
+    depth_paren, depth_brack = 1, 0
+    args, cur = [], []
+    for ch in line[m.end():]:
+        if ch == "(":
+            depth_paren += 1
+        elif ch == ")":
+            depth_paren -= 1
+            if depth_paren == 0:
+                break
+        elif ch in "[{":
+            depth_brack += 1
+        elif ch in "]}":
+            depth_brack -= 1
+        if ch == "," and depth_paren == 1 and depth_brack == 0:
+            args.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        args.append("".join(cur))
+    names = []
+    for a in args:
+        a = re.sub(r"/\*.*?\*/", "", a).strip()
+        if not a:
+            continue
+        names.append(a.split()[-1].lstrip("%"))
+    return names
 
 
 @dataclasses.dataclass

@@ -1,0 +1,230 @@
+"""The unified `repro.ga` Engine API: backend parity, operator registry,
+capability checks / fallback, vmapped repeats, chunked checkpoint/resume."""
+
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import ga
+from repro.core import ga as G
+
+
+def _spec(**kw):
+    base = dict(problem="F3", n=32, bits_per_var=10, mode="arith",
+                mutation_rate=0.05, seed=11, generations=20)
+    base.update(kw)
+    return ga.GASpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# Backend parity: the fused Pallas kernel must be bit-identical to the
+# pure-JAX reference scan (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("problem", ["F1", "F3"])
+def test_reference_vs_fused_bit_exact(problem):
+    spec = _spec(problem=problem, n=64, generations=4)
+    ref = ga.Engine(spec, "reference")
+    fus = ga.Engine(spec, "fused")
+    seg_r = ref.backend.segment(ref.init_state(), 4)
+    seg_f = fus.backend.segment(fus.init_state(), 4)
+    # populations and every LFSR bank after 4 generations: bit-exact
+    np.testing.assert_array_equal(np.asarray(seg_f.state.x)[0],
+                                  np.asarray(seg_r.state.x))
+    np.testing.assert_array_equal(np.asarray(seg_f.state.sel_lfsr)[0],
+                                  np.asarray(seg_r.state.sel_lfsr))
+    np.testing.assert_array_equal(np.asarray(seg_f.state.cross_lfsr)[0],
+                                  np.asarray(seg_r.state.cross_lfsr))
+    np.testing.assert_array_equal(np.asarray(seg_f.state.mut_lfsr)[0],
+                                  np.asarray(seg_r.state.mut_lfsr))
+    # identical trajectories and best chromosome
+    np.testing.assert_array_equal(seg_f.traj_best, seg_r.traj_best)
+    np.testing.assert_array_equal(seg_f.best_x, seg_r.best_x)
+    assert seg_f.best_y == seg_r.best_y
+
+
+def test_all_four_backends_from_one_spec():
+    """Acceptance: one spec object runs F1 and F3 on every backend."""
+    for problem, thresh in (("F1", -6.0e10), ("F3", 3.0)):
+        spec = _spec(problem=problem, n=64, generations=60)
+        results = {b: ga.solve(spec, backend=b) for b in sorted(ga.BACKENDS)}
+        for b, r in results.items():
+            assert r.backend == b
+            assert np.isfinite(r.best_fitness), (problem, b)
+            assert r.best_fitness < thresh, (problem, b, r.best_fitness)
+            assert r.best_params.shape == (2,)
+        # the jitted paths agree exactly; eager fitness runs op-by-op so
+        # XLA's fusion/FMA choices may differ by float ulps
+        assert results["reference"].best_fitness == \
+            results["fused"].best_fitness
+        assert results["reference"].best_fitness == pytest.approx(
+            results["eager"].best_fitness, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Operator registry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ga.SELECTION))
+def test_every_selection_variant_runs_under_solve(name):
+    r = ga.solve(_spec(selection=name, generations=30), backend="reference")
+    assert np.isfinite(r.best_fitness)
+    assert r.best_fitness < 10.0   # all schemes make progress on F3
+
+
+def test_custom_registered_selection_runs():
+    @ga.register_selection("_test_random")
+    def random_selection(x, y, sel_lfsr, cfg):
+        from repro.core import lfsr
+        sel_lfsr, r = lfsr.draw(sel_lfsr, cfg.steps_per_draw)
+        i = lfsr.truncate(r[0], cfg.idx_bits).astype(np.int32) % cfg.n
+        return x[i], sel_lfsr
+
+    try:
+        r = ga.solve(_spec(selection="_test_random"), backend="reference")
+        assert np.isfinite(r.best_fitness)
+    finally:
+        del ga.SELECTION["_test_random"]
+
+
+def test_unknown_operator_rejected_at_spec_build():
+    with pytest.raises(ValueError, match="unknown selection"):
+        _spec(selection="nope")
+
+
+def test_uniform_crossover_conserves_bits():
+    spec = _spec(crossover="uniform", mutation="none", generations=5)
+    eng = ga.Engine(spec, "reference")
+    st = eng.init_state()
+    y = eng.backend.fit(st.x)
+    cfg = spec.ga_config()
+    w, _ = ga.SELECTION["tournament"](st.x, y, st.sel_lfsr, cfg)
+    z, _ = ga.CROSSOVER["uniform"](w, st.cross_lfsr, cfg)
+    w1, w2 = np.asarray(w[0::2]), np.asarray(w[1::2])
+    z1, z2 = np.asarray(z[0::2]), np.asarray(z[1::2])
+    np.testing.assert_array_equal(w1 ^ w2, z1 ^ z2)
+
+
+# ---------------------------------------------------------------------------
+# Capability checks and fallback
+# ---------------------------------------------------------------------------
+
+
+def test_capability_matrix_and_fallback():
+    lut = _spec(mode="lut")
+    caps = ga.capability_matrix(lut)
+    assert caps["reference"] is None
+    assert "arith" in caps["fused"]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = ga.solve(lut, backend="fused")
+    assert r.backend == "reference"
+    assert any("falling back" in str(x.message) for x in w)
+
+    # non-pow2 N and oversize N are fused-incompatible
+    assert ga.capability_matrix(_spec(n=30))["fused"] is not None
+    assert ga.capability_matrix(_spec(n=2048))["fused"] is not None
+    # non-paper pipeline routes off the fused kernel
+    assert ga.capability_matrix(_spec(selection="rank"))["fused"] is not None
+    # eager fitness only runs on the eager backend
+    caps = ga.capability_matrix(_spec(jit_fitness=False))
+    assert caps["eager"] is None and caps["reference"] is not None
+    assert ga.resolve_backend(_spec(jit_fitness=False)) == "eager"
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ga.BackendUnsupported):
+        ga.solve(_spec(), backend="gpu_farm")
+
+
+# ---------------------------------------------------------------------------
+# Vmapped multi-seed repeats (paper Table 3 methodology)
+# ---------------------------------------------------------------------------
+
+
+def test_repeats_replica_zero_matches_solo_run():
+    spec = _spec(generations=25)
+    solo = ga.solve(spec, backend="reference")
+    rep = ga.solve(dataclasses.replace(spec, n_repeats=4),
+                   backend="reference")
+    per = rep.extras["per_repeat_best"]
+    assert per.shape == (4,)
+    assert float(per[0]) == solo.best_fitness
+    assert rep.best_fitness == float(np.min(per))
+    # replicas are decorrelated — not all identical
+    assert len(np.unique(per)) > 1
+
+
+def test_repeats_match_across_backends():
+    spec = _spec(n=32, generations=10, n_repeats=3)
+    r_ref = ga.solve(spec, backend="reference")
+    r_fus = ga.solve(spec, backend="fused")
+    np.testing.assert_array_equal(r_ref.extras["per_repeat_best"],
+                                  r_fus.extras["per_repeat_best"])
+
+
+# ---------------------------------------------------------------------------
+# Chunked streaming + checkpoint/resume
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_equals_straight_run(tmp_path):
+    spec = _spec(generations=40)
+    eng = ga.Engine(spec, "reference")
+    teles = list(eng.run_chunked(chunk_generations=10))
+    assert [t["gens_done"] for t in teles] == [10, 20, 30, 40]
+    straight = ga.solve(spec, backend="reference")
+    assert teles[-1]["best_fitness"] == straight.best_fitness
+
+
+def test_checkpoint_resume(tmp_path):
+    spec = _spec(generations=40)
+    ckpt = str(tmp_path / "ga_ck")
+    full = list(ga.Engine(spec, "reference").run_chunked(
+        chunk_generations=10))
+
+    it = ga.Engine(spec, "reference").run_chunked(chunk_generations=10,
+                                                  ckpt_dir=ckpt)
+    next(it), next(it)      # 20 generations, then "crash"
+    del it
+    resumed = list(ga.Engine(spec, "reference").run_chunked(
+        chunk_generations=10, ckpt_dir=ckpt))
+    assert [t["gens_done"] for t in resumed] == [30, 40]
+    assert resumed[-1]["best_fitness"] == full[-1]["best_fitness"]
+
+
+def test_islands_backend_chunks_by_epoch():
+    spec = _spec(n_islands=4, migrate_every=8, generations=32)
+    r = ga.solve(spec)   # auto routes to islands
+    assert r.backend == "islands"
+    assert r.generations == 32
+    assert len(r.traj_best) == 4   # one telemetry entry per migration epoch
+
+
+# ---------------------------------------------------------------------------
+# Result semantics
+# ---------------------------------------------------------------------------
+
+
+def test_lut_fixed_point_descaled():
+    spec = ga.paper_spec("F1", n=32, m=26, mode="lut", mutation_rate=0.05,
+                         seed=7, generations=100)
+    r = ga.solve(spec, backend="reference")
+    # real units, not fixed-point: the paper's global minimum ~ -6.897e10
+    assert r.best_fitness == pytest.approx(-6.897e10, rel=0.01)
+    assert r.best_params[1] == pytest.approx(-4096.0, abs=2.0)
+
+
+def test_old_entry_point_shim_matches_engine():
+    """G.run (old API) and ga.solve (new API) agree for the same config."""
+    spec = _spec(generations=30)
+    cfg = spec.ga_config()
+    old = G.run(cfg, spec.fitness_fn(), 30)
+    new = ga.solve(spec, backend="reference")
+    assert float(old.best_y) == new.best_fitness
+    np.testing.assert_array_equal(np.asarray(old.best_x), new.best_x)

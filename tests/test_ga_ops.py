@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_fallback import given, settings, st
 
 from repro.core import fitness as F
 from repro.core import ga as G
