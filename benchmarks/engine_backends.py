@@ -1,17 +1,25 @@
-"""`repro.ga` backend matrix: generations/sec per backend on one spec.
+"""`repro.ga` backend matrix: generations/sec per (topology × executor).
 
 One canonical spec (F3, N=64, m=20, arith) runs through every registered
 backend; the derived column is a JSON object so downstream tooling can
-scrape per-backend throughput.  The islands row uses 8 islands (total
-chromosome throughput is islands × gens/s); on CPU the fused row runs the
-Pallas kernel in interpret mode, so its absolute number only means something
-on TPU.
+scrape per-backend throughput.  Island-topology rows use 8 islands (total
+chromosome throughput is islands × gens/s); on CPU the fused rows run the
+Pallas kernel in interpret mode, so their absolute numbers only mean
+something on TPU.
+
+Standalone smoke mode for CI (1 tiny config per backend combo, JSON
+artifact so a composition regression fails fast):
+
+    PYTHONPATH=src python -m benchmarks.engine_backends --smoke \
+        --out artifacts/engine_backends.json
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
+import os
 
 from benchmarks.ga_common import time_call
 from repro import ga
@@ -19,25 +27,67 @@ from repro import ga
 K = 100
 N_ISLANDS = 8
 
+SMOKE = dict(n=16, m=16, generations=8, n_islands=2, migrate_every=4)
 
-def run():
-    base = ga.paper_spec("F3", n=64, m=20, mode="arith", mutation_rate=0.02,
-                         seed=1, generations=K)
+
+def _spec_for(backend: str, *, n: int, m: int, generations: int,
+              n_islands: int, migrate_every: int) -> ga.GASpec:
+    base = ga.paper_spec("F3", n=n, m=m, mode="arith", mutation_rate=0.02,
+                         seed=1, generations=generations,
+                         migrate_every=migrate_every)
+    if backend in ("islands", "fused-islands"):
+        return dataclasses.replace(base, n_islands=n_islands)
+    return base
+
+
+def run(smoke: bool = False):
+    sizes = SMOKE if smoke else dict(n=64, m=20, generations=K,
+                                     n_islands=N_ISLANDS, migrate_every=16)
     rows = []
     for backend in sorted(ga.BACKENDS):
-        spec = base if backend != "islands" else \
-            dataclasses.replace(base, n_islands=N_ISLANDS)
+        spec = _spec_for(backend, **sizes)
         eng = ga.Engine(spec, backend)
         out = eng.run()           # compile + warm caches
-        iters = 1 if backend in ("fused", "eager") else 3  # interpret is slow
+        # interpret-mode Pallas and the eager loop are slow; fewer iters
+        slow = backend in ("fused", "fused-islands", "eager")
+        iters = 1 if (slow or smoke) else 3
         dt, out = time_call(eng.run, warmup=0, iters=iters)
         gens = out.generations * max(spec.n_islands, spec.n_repeats)
         payload = json.dumps({"backend": out.backend,
+                              "executor": out.extras.get("executor", "-"),
+                              "topology": out.extras.get("topology", "-"),
                               "gens_per_s": round(gens / dt, 1),
                               "best": round(out.best_fitness, 4),
                               "n": spec.n,
-                              "islands": spec.n_islands},
+                              "islands": spec.n_islands,
+                              "migrations": out.extras.get("migrations", 0)},
                              separators=(",", ":"))
-        # islands rounds K up to whole migration epochs — divide by what ran
+        # island epochs round K up to whole migration epochs — divide by
+        # what actually ran
         rows.append((f"engine_{backend}", dt / out.generations * 1e6, payload))
     return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 tiny config per backend combo (CI regression "
+                         "gate; seconds, not minutes)")
+    ap.add_argument("--out", default=None,
+                    help="write the rows as a JSON artifact here")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        artifact = [{"name": name, "us_per_gen": round(us, 2),
+                     **json.loads(derived)} for name, us, derived in rows]
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

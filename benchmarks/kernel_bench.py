@@ -1,38 +1,43 @@
-"""Fused Pallas kernel vs pure-JAX GA path (interpret mode on CPU — the
-relative number is architecture-bound on TPU; see EXPERIMENTS.md §Perf)."""
+"""Fused Pallas executor vs pure-JAX reference executor at equal island
+count (interpret mode on CPU — the relative number is architecture-bound on
+TPU; see EXPERIMENTS.md §Perf).
+
+Both rows run through `repro.ga.Engine` as (executor × island_ring)
+compositions over 8 islands of 256; `migration="none"` with
+`migrate_every=K` makes each run one uninterrupted stepping block, so this
+isolates raw generation throughput (engine_backends.py covers the
+migrating compositions).
+"""
 
 from __future__ import annotations
 
-import functools
-
-import jax
-
 from benchmarks.ga_common import time_call
-from repro.core import fitness as F
-from repro.core import ga as G
-from repro.core import islands as ISL
-from repro.kernels import ops
+from repro import ga
 
 K = 50
+N_ISLANDS = 8
+N = 256
+
+
+def _engine(backend: str) -> ga.Engine:
+    spec = ga.paper_spec("F3", n=N, m=20, mode="arith", mutation_rate=0.02,
+                         seed=1, generations=K, n_islands=N_ISLANDS,
+                         migrate_every=K, migration="none")
+    eng = ga.Engine(spec, backend)
+    eng.run()    # compile + warm caches
+    return eng
 
 
 def run():
     rows = []
-    cfg = G.GAConfig(n=256, c=10, v=2, mutation_rate=0.02, seed=1,
-                     mode="arith")
-    spec = F.ArithSpec.for_problem(F.F3)
-    icfg = ISL.IslandConfig(ga=cfg, n_islands=8)
-    st = ISL.init_islands_fast(icfg)
+    fused = _engine("fused-islands")
+    dt_k, _ = time_call(fused.run, warmup=0, iters=2)
+    rows.append((f"kernel_fused_{N_ISLANDS}x{N}", dt_k / K * 1e6,
+                 f"island_gens_per_s={N_ISLANDS*K/dt_k:.0f}"))
 
-    kern = functools.partial(ops.ga_run_kernel, cfg=cfg, spec=spec)
-    dt_k, _ = time_call(lambda: kern(st, K), iters=2)
-    rows.append(("kernel_fused_8x256", dt_k / K * 1e6,
-                 f"island_gens_per_s={8*K/dt_k:.0f}"))
-
-    fit = G.fitness_for_problem(F.F3, cfg)
-    pure = jax.jit(lambda s: ISL._local_generations(s, icfg, fit, K))
-    dt_p, _ = time_call(lambda: pure(st), iters=2)
-    rows.append(("pure_jax_8x256", dt_p / K * 1e6,
-                 f"island_gens_per_s={8*K/dt_p:.0f},"
+    ref = _engine("islands")
+    dt_p, _ = time_call(ref.run, warmup=0, iters=2)
+    rows.append((f"pure_jax_{N_ISLANDS}x{N}", dt_p / K * 1e6,
+                 f"island_gens_per_s={N_ISLANDS*K/dt_p:.0f},"
                  f"kernel_speedup={dt_p/dt_k:.2f}x(cpu-interpret)"))
     return rows

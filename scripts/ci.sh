@@ -13,4 +13,10 @@ echo "== engine smoke (reference backend, ~5s) =="
 timeout 120 python -m repro.launch.ga_run \
     --problem F1 --n 16 --k 20 --backend reference
 
+echo "== backend-matrix smoke (1 tiny config per topology x executor combo) =="
+mkdir -p artifacts
+timeout 300 python -m benchmarks.engine_backends --smoke \
+    --out artifacts/engine_backends.json
+cat artifacts/engine_backends.json
+
 echo "CI OK"

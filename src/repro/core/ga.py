@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -218,11 +219,14 @@ GenerationFn = Callable[[GAState, GAConfig, FitnessFn],
                         Tuple[GAState, jax.Array]]
 
 
-def run(cfg: GAConfig, fit: FitnessFn, k_generations: int,
-        state: Optional[GAState] = None,
-        generation_fn: GenerationFn = None) -> GARun:
+def run_scan(cfg: GAConfig, fit: FitnessFn, k_generations: int,
+             state: Optional[GAState] = None,
+             generation_fn: GenerationFn = None) -> GARun:
     """K-generation scan.  `generation_fn` swaps the operator pipeline
-    (defaults to the paper's tournament/single-point/XOR `generation`)."""
+    (defaults to the paper's tournament/single-point/XOR `generation`).
+
+    This is the reference *executor* of the engine (`repro.ga`); prefer
+    `ga.solve(spec, backend="reference")` in new code."""
     if state is None:
         state = init_state(cfg)
     if generation_fn is None:
@@ -246,6 +250,18 @@ def run(cfg: GAConfig, fit: FitnessFn, k_generations: int,
     return GARun(st, by, bx, tb, tm)
 
 
+def run(cfg: GAConfig, fit: FitnessFn, k_generations: int,
+        state: Optional[GAState] = None,
+        generation_fn: GenerationFn = None) -> GARun:
+    """Deprecated entry-point shim — use `repro.ga.solve(spec,
+    backend="reference")` (or `run_scan` from engine internals)."""
+    warnings.warn(
+        "repro.core.ga.run is a deprecated entry point; use "
+        "repro.ga.solve(spec, backend='reference') instead",
+        DeprecationWarning, stacklevel=2)
+    return run_scan(cfg, fit, k_generations, state, generation_fn)
+
+
 def generation_with_y(state: GAState, y: jax.Array, cfg: GAConfig) -> GAState:
     """SM+CM+MM given externally-computed fitness — lets non-traceable
     fitness functions (e.g. 'train a model for 10 steps') drive the GA."""
@@ -255,9 +271,9 @@ def generation_with_y(state: GAState, y: jax.Array, cfg: GAConfig) -> GAState:
     return GAState(x_new, sel_lfsr, cross_lfsr, mut_lfsr, state.k + 1)
 
 
-def run_unjitted(cfg: GAConfig, fit: FitnessFn, k_generations: int,
-                 state: Optional[GAState] = None,
-                 apply_ops_fn=None) -> GARun:
+def run_eager(cfg: GAConfig, fit: FitnessFn, k_generations: int,
+              state: Optional[GAState] = None,
+              apply_ops_fn=None) -> GARun:
     """Python-loop driver for fitness functions that cannot be traced.
     The GA operators themselves stay jitted; only fitness runs eagerly.
     `apply_ops_fn(state, y, cfg) -> state` swaps the SM/CM/MM pipeline
@@ -280,6 +296,18 @@ def run_unjitted(cfg: GAConfig, fit: FitnessFn, k_generations: int,
         state = step(state, jnp.asarray(y))
     return GARun(state, jnp.float32(best_y), jnp.asarray(best_x),
                  jnp.asarray(tb), jnp.asarray(tm))
+
+
+def run_unjitted(cfg: GAConfig, fit: FitnessFn, k_generations: int,
+                 state: Optional[GAState] = None,
+                 apply_ops_fn=None) -> GARun:
+    """Deprecated entry-point shim — use `repro.ga.solve` with
+    `jit_fitness=False` (or `run_eager` from engine internals)."""
+    warnings.warn(
+        "repro.core.ga.run_unjitted is a deprecated entry point; use "
+        "repro.ga.solve(spec with jit_fitness=False) instead",
+        DeprecationWarning, stacklevel=2)
+    return run_eager(cfg, fit, k_generations, state, apply_ops_fn)
 
 
 def decode_best(run_out: GARun, cfg: GAConfig, domain) -> np.ndarray:

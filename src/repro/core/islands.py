@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -90,7 +91,13 @@ def _local_generations(states: G.GAState, cfg: IslandConfig,
 def _splice_elites(states: G.GAState, y: jax.Array, elites: jax.Array,
                    cfg: IslandConfig) -> G.GAState:
     """Replace each island's worst individual with the incoming elite."""
-    minimize = cfg.ga.minimize
+    return splice_elites(states, y, elites, minimize=cfg.ga.minimize)
+
+
+def splice_elites(states: G.GAState, y: jax.Array, elites: jax.Array,
+                  *, minimize: bool) -> G.GAState:
+    """Replace each island's worst individual with the incoming elite.
+    states: island-stacked [I, ...]; y: fitness of states.x [I, N]."""
     yf = y.astype(jnp.float32)
     worst = jnp.argmax(yf, axis=1) if minimize else jnp.argmin(yf, axis=1)
     I = states.x.shape[0]
@@ -99,10 +106,35 @@ def _splice_elites(states: G.GAState, y: jax.Array, elites: jax.Array,
 
 
 def _best_of(states: G.GAState, y: jax.Array, cfg: IslandConfig):
+    return best_of(states, y, minimize=cfg.ga.minimize)
+
+
+def best_of(states: G.GAState, y: jax.Array, *, minimize: bool):
+    """Per-island elite: (elite_x [I, V], elite_y [I]) of the current pops."""
     yf = y.astype(jnp.float32)
-    best = jnp.argmin(yf, axis=1) if cfg.ga.minimize else jnp.argmax(yf, axis=1)
+    best = jnp.argmin(yf, axis=1) if minimize else jnp.argmax(yf, axis=1)
     I = states.x.shape[0]
     return states.x[jnp.arange(I), best], yf[jnp.arange(I), best]
+
+
+def migrate_ring(states: G.GAState, y: jax.Array, *, minimize: bool
+                 ) -> Tuple[G.GAState, jax.Array, jax.Array]:
+    """One on-host ring migration over an island-stacked state.
+
+    The best individual of island i replaces the worst individual of island
+    (i + 1) mod I — the `jnp.roll` analogue of the inter-FPGA elite links
+    ([19]); `lax.ppermute` plays the same role on a device mesh (see
+    `make_sharded_step`).  This is THE migration step shared by
+    `make_local_step` and the engine's island_ring topology (any executor):
+    migration happens *between* generation blocks / kernel launches, so the
+    fused Pallas executor composes with islands without touching the kernel.
+
+    Returns (new_states, elite_x [I, V], elite_y [I]).
+    """
+    elite_x, elite_y = best_of(states, y, minimize=minimize)
+    shifted = jnp.roll(elite_x, 1, axis=0)
+    states = splice_elites(states, y, shifted, minimize=minimize)
+    return states, elite_x, elite_y
 
 
 # ---------------------------------------------------------------------------
@@ -156,7 +188,13 @@ def make_sharded_step(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
 def run_sharded(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
                 epochs: int, states: Optional[G.GAState] = None,
                 generation_fn=None):
-    """Drive `epochs` migration epochs on the mesh; returns best over all."""
+    """Drive `epochs` migration epochs on the mesh; returns best over all.
+
+    Deprecated entry-point shim — use `repro.ga.solve(spec, mesh=mesh)`."""
+    warnings.warn(
+        "repro.core.islands.run_sharded is a deprecated entry point; use "
+        "repro.ga.solve(spec with n_islands>1, mesh=mesh) instead",
+        DeprecationWarning, stacklevel=2)
     if states is None:
         states = init_islands_fast(cfg)
         sharding = jax.tree.map(
@@ -189,9 +227,8 @@ def make_local_step(cfg: IslandConfig, fit: G.FitnessFn, generation_fn=None):
     def epoch(states):
         states, y = _local_generations(states, cfg, fit, cfg.migrate_every,
                                        generation_fn)
-        elite_x, elite_y = _best_of(states, y, cfg)
-        shifted = jnp.roll(elite_x, 1, axis=0)  # on-host ring
-        states = _splice_elites(states, y, shifted, cfg)
+        states, elite_x, elite_y = migrate_ring(states, y,
+                                                minimize=cfg.ga.minimize)
         return states, elite_x, elite_y
 
     return epoch
@@ -199,6 +236,12 @@ def make_local_step(cfg: IslandConfig, fit: G.FitnessFn, generation_fn=None):
 
 def run_local(cfg: IslandConfig, fit: G.FitnessFn, epochs: int,
               states: Optional[G.GAState] = None, generation_fn=None):
+    """Deprecated entry-point shim — use `repro.ga.solve(spec with
+    n_islands>1, backend="islands")`; the engine shares `migrate_ring`."""
+    warnings.warn(
+        "repro.core.islands.run_local is a deprecated entry point; use "
+        "repro.ga.solve(spec with n_islands>1) instead",
+        DeprecationWarning, stacklevel=2)
     if states is None:
         states = init_islands_fast(cfg)
     epoch = make_local_step(cfg, fit, generation_fn)

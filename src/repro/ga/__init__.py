@@ -1,24 +1,28 @@
-"""`repro.ga` — the public GA engine API (one spec, four backends).
+"""`repro.ga` — the public GA engine API (one spec, topology × executor).
 
 The paper's contribution is a single full-parallel datapath (FFM→SM→CM→MM)
 that scales by swapping hardware arrangements.  This package is that idea as
 an API: a frozen :class:`GASpec` describes *what* to solve (problem,
-encoding, operator pipeline, run policy) and the :class:`Engine` decides
-*how*, via a backend registry:
+encoding, operator pipeline, run policy, topology) and the :class:`Engine`
+decides *how*.  Backends are compositions of an *executor* (how a block of
+generations is stepped) and a *topology* (how populations are laid out and
+exchanged):
 
-    ============  =====================================================
-    backend       execution
-    ============  =====================================================
-    reference     pure-JAX `lax.scan` — any operators, lut or arith FFM,
-                  vmapped `n_repeats` replicas in one scan
-    fused         one Pallas kernel per generation (VMEM-resident state,
-                  MXU one-hot tournaments); arith FFM, paper pipeline,
-                  power-of-two N <= 1024; bit-identical to reference
-    islands       island model with ring migration; shard_mapped over a
-                  device mesh when one is given
-    eager         python-loop driver for non-traceable fitness
-                  (operators stay jitted)
-    ============  =====================================================
+    =============  ===========  ============  ===========================
+    backend        executor     topology      notes
+    =============  ===========  ============  ===========================
+    reference      JAX scan     single        any operators, lut or arith
+                                              FFM, vmapped `n_repeats`
+    fused          Pallas       single        VMEM-resident state, MXU
+                   kernel                     one-hot tournaments;
+                                              bit-identical to reference
+    islands        JAX scan     island_ring   ring migration; shard_mapped
+                                              over a mesh when given
+    fused-islands  Pallas       island_ring   ring migration *between*
+                   kernel                     kernel launches
+    eager          python loop  single        non-traceable fitness
+                                              (operators stay jitted)
+    =============  ===========  ============  ===========================
 
 Typical use::
 
@@ -53,7 +57,8 @@ from repro.ga.operators import (CROSSOVER, MUTATION, PAPER_PIPELINE,
                                 SelectionOp, make_apply_ops, make_generation,
                                 register_crossover, register_mutation,
                                 register_selection)
-from repro.ga.backends import BACKENDS, Backend, Segment
+from repro.ga.backends import (BACKENDS, EXECUTORS, TOPOLOGIES, Backend,
+                               Executor, Segment, Topology)
 from repro.ga.engine import (BackendUnsupported, Engine, EngineResult,
                              capability_matrix, resolve_backend, solve)
 
@@ -62,6 +67,7 @@ __all__ = [
     "Engine", "EngineResult", "solve", "resolve_backend",
     "capability_matrix", "BackendUnsupported",
     "BACKENDS", "Backend", "Segment",
+    "EXECUTORS", "TOPOLOGIES", "Executor", "Topology",
     "SELECTION", "CROSSOVER", "MUTATION", "PAPER_PIPELINE",
     "SelectionOp", "CrossoverOp", "MutationOp",
     "register_selection", "register_crossover", "register_mutation",

@@ -1,20 +1,44 @@
-"""Engine backends — four executions of the same `GASpec` datapath.
+"""Engine backends — orthogonal **topology × executor** compositions.
 
-  reference  pure-JAX `lax.scan` (the faithful port in repro.core.ga);
-             supports every operator combination and vmapped `n_repeats`.
-  fused      the Pallas one-kernel-per-generation path (repro.kernels);
-             paper pipeline only, arith FFM, power-of-two N <= 1024.
-             `n_repeats` replicas map onto the kernel's island grid axis.
-  islands    vmapped island model with ring migration (repro.core.islands),
-             shard_mapped over a mesh when one is provided.
-  eager      python-loop driver for non-traceable fitness functions
-             (operators stay jitted; fitness runs eagerly).
+The paper's headline result comes from running many full GA pipelines side
+by side, not one fast pipeline — so "fast step" and "parallel populations"
+must compose.  The engine therefore splits every backend into two
+orthogonal pieces:
 
-Each backend implements `supports(spec)` (capability check → reason string or
-None), `init(spec)` (backend-native state pytree) and `segment(state, gens)`
-(advance `gens` generations, returning the new state + telemetry).  The
-Engine composes segments into full runs, chunked streaming and
-checkpoint/resume — so every backend gets those features for free.
+An **executor** advances a stack of populations a block of generations:
+
+  reference  pure-JAX `lax.scan` over the operator pipeline
+             (repro.core.ga.run_scan); any registered operators.
+  fused      the Pallas `ga_step` kernel — one launch per generation, the
+             stack rides the kernel grid axis; paper pipeline, arith FFM,
+             power-of-two N <= 1024.  Bit-identical to `reference`.
+
+A **topology** owns population layout, the epoch loop and migration:
+
+  single       one population (or `n_repeats` vmapped replicas), no
+               migration; a segment is one executor block.
+  island_ring  `n_islands` populations; every `migrate_every` generations
+               the best individual of each island ring-shifts to the next
+               (`repro.core.islands.migrate_ring`, `lax.ppermute` on a
+               mesh), replacing the recipient's worst.  Migration runs
+               *between* executor blocks — i.e. between Pallas kernel
+               launches on the fused executor — so any executor composes.
+               `n_repeats` replicas are vmapped OUTSIDE the island axis.
+
+The registry exposes the compositions under the familiar names:
+
+  reference     = reference × single
+  fused         = fused     × single
+  islands       = reference × island_ring  (shard_mapped when mesh given)
+  fused-islands = fused     × island_ring  (ring migration between launches)
+  eager         = python-loop driver for non-traceable fitness (no
+                  composition — fitness cannot be traced into a block)
+
+Each backend implements `supports(spec)` (capability check → reason string
+or None), `init(spec)` (backend-native state pytree) and `segment(state,
+gens)` (advance `gens` generations, returning the new state + telemetry).
+The Engine composes segments into full runs, chunked streaming and
+checkpoint/resume — so every composition gets those features for free.
 """
 
 from __future__ import annotations
@@ -38,8 +62,9 @@ from repro.kernels import ga_step as _ga_step
 class Segment:
     """Telemetry for one contiguous block of generations (raw fitness units).
 
-    traj arrays have one entry per generation, except the islands backend
-    where the unit is one migration epoch (`migrate_every` generations).
+    traj arrays have one entry per generation, except island_ring topologies
+    where the unit is one migration epoch (`migrate_every` generations —
+    see extras["telemetry_unit_gens"]).
     """
 
     state: Any
@@ -68,6 +93,17 @@ def _stack_states(cfg: G.GAConfig, n_replicas: int):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
+def _stack_island_replicas(icfg: ISL.IslandConfig, n_replicas: int):
+    """[R, I, ...] stack: replica r re-seeds the island seed stream with
+    `seed + r` (same convention as `_stack_states`, so replica 0 reproduces
+    the n_repeats=1 island run bit-exactly)."""
+    reps = []
+    for r in range(n_replicas):
+        ga_r = dataclasses.replace(icfg.ga, seed=icfg.ga.seed + r)
+        reps.append(ISL.init_islands_fast(dataclasses.replace(icfg, ga=ga_r)))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+
 class Backend:
     """One execution strategy for a GASpec."""
 
@@ -78,7 +114,7 @@ class Backend:
         self.cfg = spec.ga_config()
         self.mesh = mesh
         self.interpret = interpret
-        self._cache: Dict[int, Any] = {}   # gens -> jitted segment runner
+        self._cache: Dict[Any, Any] = {}   # gens -> jitted segment runner
 
     @staticmethod
     def supports(spec: GASpec, mesh=None) -> Optional[str]:
@@ -93,76 +129,88 @@ class Backend:
 
 
 # ---------------------------------------------------------------------------
-# reference — pure-JAX scan, any operators, vmapped repeats
+# Executors — advance a stack of populations one block of generations
 # ---------------------------------------------------------------------------
 
 
-class ReferenceBackend(Backend):
-    name = "reference"
+class Executor:
+    """Steps a leading-axis stack of populations `gens` generations.
 
-    def __init__(self, spec, **kw):
-        super().__init__(spec, **kw)
+    `block(gens)` returns a traceable function
+        states[L, ...] -> (states', best_y[L], best_x[L, V],
+                           traj_best[L, gens], traj_mean[L, gens])
+    where best_* track the best individual seen across the block and traj_*
+    are per-generation population best/mean (fitness of the pre-update
+    population, so both executors' trajectories align bit-for-bit).
+    `final_fitness(states)` evaluates the *current* populations ([L, N]) —
+    both executors use the same XLA fitness function here, so migration
+    decisions are identical whichever executor produced the states.
+    """
+
+    name = "?"
+    stacked_only = True    # False -> also offers an unstacked solo path
+
+    def __init__(self, spec: GASpec, *, interpret=None):
+        self.spec = spec
+        self.cfg = spec.ga_config()
         self.fit = spec.fitness_fn()
+
+    @staticmethod
+    def supports(spec: GASpec) -> Optional[str]:
+        raise NotImplementedError
+
+    def final_fitness(self, states: G.GAState) -> jax.Array:
+        return jax.vmap(self.fit)(states.x)
+
+    def block(self, gens: int):
+        raise NotImplementedError
+
+
+class ReferenceExecutor(Executor):
+    name = "reference"
+    stacked_only = False
+
+    def __init__(self, spec: GASpec, *, interpret=None):
+        super().__init__(spec, interpret=interpret)
         self.gen_fn = OPS.make_generation(spec.selection, spec.crossover,
                                           spec.mutation)
 
     @staticmethod
-    def supports(spec: GASpec, mesh=None) -> Optional[str]:
+    def supports(spec: GASpec) -> Optional[str]:
         if not spec.jit_fitness:
             return "fitness is not traceable (jit_fitness=False); use 'eager'"
-        if spec.n_islands > 1:
-            return "n_islands > 1; use the 'islands' backend"
         return None
 
-    def init(self):
-        if self.spec.n_repeats == 1:
-            return G.init_state(self.cfg)
-        return _stack_states(self.cfg, self.spec.n_repeats)
+    def solo(self, gens: int):
+        """Unstacked single-population runner (GARun) — the layout the
+        reference×single backend has always exposed for n_repeats=1."""
+        return lambda st: G.run_scan(self.cfg, self.fit, gens, st,
+                                     self.gen_fn)
 
-    def _runner(self, gens: int):
-        if gens not in self._cache:
-            one = lambda st: G.run(self.cfg, self.fit, gens, st, self.gen_fn)
-            fn = one if self.spec.n_repeats == 1 else jax.vmap(one)
-            self._cache[gens] = jax.jit(fn)
-        return self._cache[gens]
+    def block(self, gens: int):
+        one = self.solo(gens)
 
-    def segment(self, state, gens: int) -> Segment:
-        out: G.GARun = self._runner(gens)(state)
-        mini = self.spec.minimize
-        if self.spec.n_repeats == 1:
-            return Segment(state=out.state, best_y=float(out.best_y),
-                           best_x=np.asarray(out.best_x),
-                           traj_best=np.asarray(out.traj_best),
-                           traj_mean=np.asarray(out.traj_mean), gens=gens)
-        per_rep = np.asarray(out.best_y)                       # [R]
-        r = _arg_best(per_rep, mini)
-        tb = np.asarray(out.traj_best)                         # [R, gens]
-        reduce = np.min if mini else np.max
-        return Segment(state=out.state, best_y=float(per_rep[r]),
-                       best_x=np.asarray(out.best_x)[r],
-                       traj_best=reduce(tb, axis=0),
-                       traj_mean=np.asarray(out.traj_mean).mean(axis=0),
-                       gens=gens,
-                       extras={"per_repeat_best": per_rep,
-                               "per_repeat_traj_best": tb})
+        def run_block(states: G.GAState):
+            out: G.GARun = jax.vmap(one)(states)
+            return (out.state, out.best_y, out.best_x,
+                    out.traj_best, out.traj_mean)
+
+        return run_block
 
 
-# ---------------------------------------------------------------------------
-# fused — the Pallas kernel, scanned with best/trajectory tracking
-# ---------------------------------------------------------------------------
-
-
-class FusedBackend(Backend):
+class FusedExecutor(Executor):
     name = "fused"
+    stacked_only = True
 
-    def __init__(self, spec, **kw):
-        super().__init__(spec, **kw)
+    def __init__(self, spec: GASpec, *, interpret=None):
+        super().__init__(spec, interpret=interpret)
         self.arith = spec.arith_spec()
-        if self.interpret is None:
-            self.interpret = jax.default_backend() != "tpu"
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
 
     @staticmethod
-    def supports(spec: GASpec, mesh=None) -> Optional[str]:
+    def supports(spec: GASpec) -> Optional[str]:
         if not spec.jit_fitness:
             return "fitness is not traceable (jit_fitness=False); use 'eager'"
         if spec.mode != "arith":
@@ -179,22 +227,13 @@ class FusedBackend(Backend):
             return ("fused kernel hardwires the paper pipeline "
                     "(tournament/single_point/xor); other operators run on "
                     "'reference'")
-        if spec.n_islands > 1:
-            return "migration is not fused; use the 'islands' backend"
         return None
 
-    def init(self):
-        # replicas ride the kernel's island grid axis (leading dim)
-        return _stack_states(self.cfg, self.spec.n_repeats)
-
-    def _runner(self, gens: int):
-        if gens in self._cache:
-            return self._cache[gens]
+    def block(self, gens: int):
         cfg, arith, interp = self.cfg, self.arith, self.interpret
         mini = self.spec.minimize
 
-        @jax.jit
-        def go(states: G.GAState):
+        def run_block(states: G.GAState):
             neutral = jnp.full((states.x.shape[0],),
                                jnp.inf if mini else -jnp.inf, jnp.float32)
 
@@ -213,56 +252,134 @@ class FusedBackend(Backend):
                 by2 = jnp.where(better, gen_best, by)
                 bx2 = jnp.where(better[:, None], x[ii, idx], bx)
                 carry = (x2, sel2, cross2, mut2, by2, bx2)
-                tb = jnp.min(gen_best) if mini else jnp.max(gen_best)
-                return carry, (tb, jnp.mean(y))
+                return carry, (gen_best, jnp.mean(y, axis=1))
 
             init = (states.x, states.sel_lfsr, states.cross_lfsr,
                     states.mut_lfsr, neutral,
                     jnp.zeros((states.x.shape[0], cfg.v), jnp.uint32))
             (x, sel, cross, mut, by, bx), (tb, tm) = jax.lax.scan(
                 body, init, None, length=gens)
-            return G.GAState(x, sel, cross, mut, states.k + gens), by, bx, tb, tm
+            state = G.GAState(x, sel, cross, mut, states.k + gens)
+            return state, by, bx, tb.T, tm.T     # traj -> [L, gens]
 
-        self._cache[gens] = go
-        return go
+        return run_block
+
+
+EXECUTORS: Dict[str, type] = {
+    ReferenceExecutor.name: ReferenceExecutor,
+    FusedExecutor.name: FusedExecutor,
+}
+
+
+# ---------------------------------------------------------------------------
+# Topologies — population layout, epoch loop, migration
+# ---------------------------------------------------------------------------
+
+
+class Topology:
+    name = "?"
+
+    def __init__(self, spec: GASpec, executor: Executor, *, mesh=None):
+        self.spec = spec
+        self.cfg = spec.ga_config()
+        self.executor = executor
+        self.mesh = mesh
+        self._cache: Dict[Any, Any] = {}
+
+    @staticmethod
+    def supports(spec: GASpec, mesh, executor_cls) -> Optional[str]:
+        raise NotImplementedError
+
+    def init(self):
+        raise NotImplementedError
 
     def segment(self, state, gens: int) -> Segment:
-        states, by, bx, tb, tm = self._runner(gens)(state)
-        per_rep = np.asarray(by)
-        r = _arg_best(per_rep, self.spec.minimize)
-        return Segment(state=states, best_y=float(per_rep[r]),
+        raise NotImplementedError
+
+
+class SingleTopology(Topology):
+    """One population; `n_repeats` independent replicas ride the executor's
+    stack axis.  A segment is exactly one executor block."""
+
+    name = "single"
+
+    @staticmethod
+    def supports(spec: GASpec, mesh, executor_cls) -> Optional[str]:
+        if spec.effective_topology != "single":
+            return ("n_islands > 1; use an island_ring backend "
+                    "('islands' / 'fused-islands')")
+        return None
+
+    def init(self):
+        if self.spec.n_repeats == 1 and not self.executor.stacked_only:
+            return G.init_state(self.cfg)
+        return _stack_states(self.cfg, self.spec.n_repeats)
+
+    def _runner(self, gens: int, solo: bool):
+        key = (gens, solo)
+        if key not in self._cache:
+            fn = (self.executor.solo(gens) if solo
+                  else self.executor.block(gens))
+            self._cache[key] = jax.jit(fn)
+        return self._cache[key]
+
+    def segment(self, state, gens: int) -> Segment:
+        mini = self.spec.minimize
+        solo = self.spec.n_repeats == 1 and not self.executor.stacked_only
+        if solo:
+            out: G.GARun = self._runner(gens, True)(state)
+            return Segment(state=out.state, best_y=float(out.best_y),
+                           best_x=np.asarray(out.best_x),
+                           traj_best=np.asarray(out.traj_best),
+                           traj_mean=np.asarray(out.traj_mean), gens=gens)
+        state, by, bx, tb, tm = self._runner(gens, False)(state)
+        per_rep = np.asarray(by)                               # [R]
+        r = _arg_best(per_rep, mini)
+        tb = np.asarray(tb)                                    # [R, gens]
+        reduce = np.min if mini else np.max
+        return Segment(state=state, best_y=float(per_rep[r]),
                        best_x=np.asarray(bx)[r],
-                       traj_best=np.asarray(tb), traj_mean=np.asarray(tm),
+                       traj_best=reduce(tb, axis=0),
+                       traj_mean=np.asarray(tm).mean(axis=0),
                        gens=gens,
-                       extras={"per_repeat_best": per_rep})
+                       extras={"per_repeat_best": per_rep,
+                               "per_repeat_traj_best": tb})
 
 
-# ---------------------------------------------------------------------------
-# islands — vmapped / shard_mapped island model with ring migration
-# ---------------------------------------------------------------------------
+class IslandRingTopology(Topology):
+    """`n_islands` populations with ring migration every `migrate_every`
+    generations.  Locally the epoch is [executor block → final fitness →
+    `islands.migrate_ring`] in one jit; `n_repeats` replicas are stacked
+    OUTSIDE the island axis ([R, I, ...]) and flattened to the executor's
+    single stack axis, so every executor (including the Pallas kernel, whose
+    grid is that axis) composes.  With a mesh, the reference-executor epoch
+    is shard_mapped with `lax.ppermute` migration (repro.core.islands)."""
 
+    name = "island_ring"
 
-class IslandsBackend(Backend):
-    name = "islands"
-
-    def __init__(self, spec, **kw):
-        super().__init__(spec, **kw)
-        self.fit = spec.fitness_fn()
-        self.gen_fn = OPS.make_generation(spec.selection, spec.crossover,
-                                          spec.mutation)
+    def __init__(self, spec: GASpec, executor: Executor, *, mesh=None):
+        super().__init__(spec, executor, mesh=mesh)
         self.icfg = ISL.IslandConfig(ga=self.cfg,
                                      n_islands=spec.n_islands,
                                      migrate_every=spec.migrate_every)
 
     @staticmethod
-    def supports(spec: GASpec, mesh=None) -> Optional[str]:
-        if not spec.jit_fitness:
-            return "fitness is not traceable (jit_fitness=False); use 'eager'"
-        if spec.n_repeats > 1:
-            return "n_repeats is redundant with islands; raise n_islands"
+    def supports(spec: GASpec, mesh, executor_cls) -> Optional[str]:
+        if spec.topology == "single":
+            return "spec pins topology='single'; use a single backend"
+        if mesh is not None:
+            if executor_cls is not ReferenceExecutor:
+                return ("mesh-sharded islands run on the reference executor "
+                        "only (the Pallas kernel launch is host-local)")
+            if spec.n_repeats > 1:
+                return "n_repeats > 1 is not supported on mesh-sharded islands"
+            if spec.migration == "none":
+                return "migration='none' is not supported on the sharded path"
         return None
 
     def init(self):
+        if self.spec.n_repeats > 1:
+            return _stack_island_replicas(self.icfg, self.spec.n_repeats)
         states = ISL.init_islands_fast(self.icfg)
         if self.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -272,20 +389,92 @@ class IslandsBackend(Backend):
                     self.mesh, P(axes, *([None] * (x.ndim - 1))))), states)
         return states
 
+    # -- local (vmap) path --------------------------------------------------
+
     def _epoch(self):
+        """Jitted epoch over the canonical state layout ([I,...] or
+        [R, I, ...]); returns (state', by, bx, tb, tm) with by/bx/tb/tm in
+        [R, I, ...] layout (leading R axis only when n_repeats > 1)."""
         if "epoch" in self._cache:
             return self._cache["epoch"]
-        if self.mesh is not None:
-            step = ISL.make_sharded_step(self.icfg, self.fit, self.mesh,
-                                         self.gen_fn)
-        else:
-            step = ISL.make_local_step(self.icfg, self.fit, self.gen_fn)
-        self._cache["epoch"] = step
-        return step
+        E = self.icfg.migrate_every
+        R, I = self.spec.n_repeats, self.spec.n_islands
+        mini = self.spec.minimize
+        migrate = self.spec.migration == "ring"
+        blk = self.executor.block(E)
+        fit_stack = self.executor.final_fitness
 
-    def segment(self, state, gens: int) -> Segment:
+        def one(states):                       # states: [I, ...]
+            states, by, bx, tb, tm = blk(states)
+            if migrate:
+                y = fit_stack(states)          # [I, N]
+                states, _ex, _ey = ISL.migrate_ring(states, y, minimize=mini)
+            return states, by, bx, tb, tm
+
+        if R == 1:
+            epoch = one
+        else:
+            def epoch(states):                 # states: [R, I, ...]
+                flat = jax.tree.map(
+                    lambda a: a.reshape((R * I,) + a.shape[2:]), states)
+                flat, by, bx, tb, tm = blk(flat)
+                states = jax.tree.map(
+                    lambda a: a.reshape((R, I) + a.shape[1:]), flat)
+                if migrate:
+                    y = jax.vmap(fit_stack)(states)        # [R, I, N]
+                    states, _ex, _ey = jax.vmap(
+                        lambda s, yy: ISL.migrate_ring(s, yy, minimize=mini)
+                    )(states, y)
+                return (states, by.reshape(R, I), bx.reshape((R, I) + bx.shape[1:]),
+                        tb.reshape((R, I) + tb.shape[1:]),
+                        tm.reshape((R, I) + tm.shape[1:]))
+
+        self._cache["epoch"] = jax.jit(epoch)
+        return self._cache["epoch"]
+
+    def _segment_local(self, state, gens: int) -> Segment:
+        E = self.icfg.migrate_every
+        epochs = max(1, math.ceil(gens / E))
+        R = self.spec.n_repeats
+        mini = self.spec.minimize
+        reduce = np.min if mini else np.max
+        epoch = self._epoch()
+        # running per-replica best across epochs
+        rep_y = np.full((R,), np.inf if mini else -np.inf, np.float32)
+        rep_x = np.zeros((R, self.cfg.v), np.uint32)
+        tb_ep, tm_ep = [], []
+        for _ in range(epochs):
+            state, by, bx, tb, tm = epoch(state)
+            by = np.asarray(by).reshape(R, -1)              # [R, I]
+            bx = np.asarray(bx).reshape(R, -1, self.cfg.v)  # [R, I, V]
+            i = np.argmin(by, axis=1) if mini else np.argmax(by, axis=1)
+            ep_y = by[np.arange(R), i]                      # [R]
+            ep_x = bx[np.arange(R), i]
+            better = ep_y < rep_y if mini else ep_y > rep_y
+            rep_y = np.where(better, ep_y, rep_y)
+            rep_x = np.where(better[:, None], ep_x, rep_x)
+            tb_ep.append(float(reduce(by)))
+            tm_ep.append(float(np.asarray(tm).mean()))
+        r = _arg_best(rep_y, mini)
+        extras = {"telemetry_unit_gens": E,
+                  "n_islands": self.icfg.n_islands,
+                  "migrations": epochs if self.spec.migration == "ring" else 0}
+        if R > 1:
+            extras["per_repeat_best"] = rep_y
+        return Segment(state=state, best_y=float(rep_y[r]),
+                       best_x=rep_x[r],
+                       traj_best=np.asarray(tb_ep), traj_mean=np.asarray(tm_ep),
+                       gens=epochs * E, extras=extras)
+
+    # -- mesh (shard_map + ppermute) path ------------------------------------
+
+    def _segment_sharded(self, state, gens: int) -> Segment:
+        if "sharded" not in self._cache:
+            gen_fn = getattr(self.executor, "gen_fn", None)
+            self._cache["sharded"] = ISL.make_sharded_step(
+                self.icfg, self.executor.fit, self.mesh, gen_fn)
+        step = self._cache["sharded"]
         epochs = max(1, math.ceil(gens / self.icfg.migrate_every))
-        step = self._epoch()
         mini = self.spec.minimize
         better = _better_f(mini)
         best_y, best_x = None, None
@@ -302,7 +491,69 @@ class IslandsBackend(Backend):
                        traj_best=np.asarray(tb), traj_mean=np.asarray(tm),
                        gens=epochs * self.icfg.migrate_every,
                        extras={"telemetry_unit_gens": self.icfg.migrate_every,
-                               "n_islands": self.icfg.n_islands})
+                               "n_islands": self.icfg.n_islands,
+                               "migrations": epochs,
+                               "sharded": True})
+
+    def segment(self, state, gens: int) -> Segment:
+        if self.mesh is not None:
+            return self._segment_sharded(state, gens)
+        return self._segment_local(state, gens)
+
+
+TOPOLOGIES: Dict[str, type] = {
+    SingleTopology.name: SingleTopology,
+    IslandRingTopology.name: IslandRingTopology,
+}
+
+
+# ---------------------------------------------------------------------------
+# Composed backends (the registry entries)
+# ---------------------------------------------------------------------------
+
+
+class ComposedBackend(Backend):
+    """A (topology × executor) pair behind the uniform Backend interface."""
+
+    executor_cls: type = None
+    topology_cls: type = None
+
+    def __init__(self, spec: GASpec, *, mesh=None, interpret=None):
+        super().__init__(spec, mesh=mesh, interpret=interpret)
+        self.executor: Executor = self.executor_cls(spec, interpret=interpret)
+        self.topology: Topology = self.topology_cls(spec, self.executor,
+                                                    mesh=mesh)
+
+    @classmethod
+    def supports(cls, spec: GASpec, mesh=None) -> Optional[str]:
+        reason = cls.executor_cls.supports(spec)
+        if reason is not None:
+            return reason
+        return cls.topology_cls.supports(spec, mesh, cls.executor_cls)
+
+    def init(self):
+        return self.topology.init()
+
+    def segment(self, state, gens: int) -> Segment:
+        seg = self.topology.segment(state, gens)
+        seg.extras.setdefault("executor", self.executor_cls.name)
+        seg.extras.setdefault("topology", self.topology_cls.name)
+        return seg
+
+
+def _compose(backend_name: str, executor: type, topology: type) -> type:
+    cls = type(f"{backend_name.title().replace('-', '')}Backend",
+               (ComposedBackend,),
+               {"name": backend_name, "executor_cls": executor,
+                "topology_cls": topology})
+    return cls
+
+
+ReferenceBackend = _compose("reference", ReferenceExecutor, SingleTopology)
+FusedBackend = _compose("fused", FusedExecutor, SingleTopology)
+IslandsBackend = _compose("islands", ReferenceExecutor, IslandRingTopology)
+FusedIslandsBackend = _compose("fused-islands", FusedExecutor,
+                               IslandRingTopology)
 
 
 # ---------------------------------------------------------------------------
@@ -321,8 +572,8 @@ class EagerBackend(Backend):
 
     @staticmethod
     def supports(spec: GASpec, mesh=None) -> Optional[str]:
-        if spec.n_islands > 1:
-            return "eager driver has no migration; use 'islands'"
+        if spec.effective_topology != "single":
+            return "eager driver has no migration; use an island_ring backend"
         return None
 
     def init(self):
@@ -334,8 +585,8 @@ class EagerBackend(Backend):
         R = self.spec.n_repeats
         mini = self.spec.minimize
         if R == 1:
-            out = G.run_unjitted(self.cfg, self.fit, gens, state,
-                                 apply_ops_fn=self.apply_ops)
+            out = G.run_eager(self.cfg, self.fit, gens, state,
+                              apply_ops_fn=self.apply_ops)
             return Segment(state=out.state, best_y=float(out.best_y),
                            best_x=np.asarray(out.best_x),
                            traj_best=np.asarray(out.traj_best),
@@ -344,8 +595,8 @@ class EagerBackend(Backend):
         for r in range(R):
             st_r = jax.tree.map(lambda a: a[r], state)
             cfg_r = dataclasses.replace(self.cfg, seed=self.cfg.seed + r)
-            outs.append(G.run_unjitted(cfg_r, self.fit, gens, st_r,
-                                       apply_ops_fn=self.apply_ops))
+            outs.append(G.run_eager(cfg_r, self.fit, gens, st_r,
+                                    apply_ops_fn=self.apply_ops))
         state = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[o.state for o in outs])
         per_rep = np.array([float(o.best_y) for o in outs])
@@ -364,5 +615,6 @@ BACKENDS: Dict[str, type] = {
     ReferenceBackend.name: ReferenceBackend,
     FusedBackend.name: FusedBackend,
     IslandsBackend.name: IslandsBackend,
+    FusedIslandsBackend.name: FusedIslandsBackend,
     EagerBackend.name: EagerBackend,
 }

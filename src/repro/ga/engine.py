@@ -6,9 +6,11 @@
     result = ga.solve(spec)                      # auto-picks a backend
     result = ga.solve(spec, backend="fused")     # or pin one explicitly
 
+Backends are (topology × executor) compositions (see repro.ga.backends).
 Backend selection (`backend="auto"`) walks the capability matrix: eager when
-the fitness is not traceable, islands when the spec asks for them, fused on
-TPU when the kernel's constraints hold, reference otherwise.  Pinning an
+the fitness is not traceable, an island_ring topology when the spec asks for
+one (preferring the fused×island_ring composition on TPU when the kernel's
+constraints hold), fused on TPU, reference otherwise.  Pinning an
 unsupported backend warns and falls back gracefully instead of crashing.
 
 Streaming + checkpointing:
@@ -51,9 +53,12 @@ def _auto_order(spec: GASpec):
     if not spec.jit_fitness:
         return ["eager"]
     order = []
-    if spec.n_islands > 1:
+    tpu = jax.default_backend() == "tpu"
+    if spec.effective_topology == "island_ring":
+        if tpu:
+            order.append("fused-islands")   # kernel speed × parallel pops
         order.append("islands")
-    if jax.default_backend() == "tpu":
+    if tpu:
         order.append("fused")   # the fast path where the MXU gathers pay off
     order += ["reference", "islands", "eager"]
     return order
@@ -151,7 +156,7 @@ class Engine:
         mini = self.spec.minimize
 
         state = self.init_state()
-        done, chunk_idx = 0, 0
+        done, chunk_idx, migrations = 0, 0, 0
         best_y: Optional[float] = None
         best_x = None
         if ckpt_dir and resume:
@@ -168,6 +173,7 @@ class Engine:
                         "a fresh ckpt_dir")
                 done = int(extra["gens_done"])
                 chunk_idx = int(extra.get("chunk_idx", 0))
+                migrations = int(extra.get("migrations", 0))
                 best_y = float(extra["best_y"])
                 best_x = np.asarray(extra["best_x"], np.uint32)
 
@@ -181,6 +187,7 @@ class Engine:
                 "best_params": self.spec.decode(best_x),
                 "traj_best": np.empty((0,)), "wall_s": 0.0,
                 "gens_per_s": 0.0, "backend": self.backend_name,
+                "migrations": migrations,
                 "already_complete": True,
             }
             return
@@ -193,12 +200,14 @@ class Engine:
             state = seg.state
             done += seg.gens
             chunk_idx += 1
+            migrations += int(seg.extras.get("migrations", 0))
             if best_y is None or (seg.best_y < best_y if mini
                                   else seg.best_y > best_y):
                 best_y, best_x = seg.best_y, np.asarray(seg.best_x)
             if ckpt_dir:
                 CKPT.save(ckpt_dir, step=done, tree=state,
                           extra={"gens_done": done, "chunk_idx": chunk_idx,
+                                 "migrations": migrations,
                                  "best_y": float(best_y),
                                  "best_x": [int(v) for v in best_x],
                                  "backend": self.backend_name})
@@ -214,6 +223,8 @@ class Engine:
                 "wall_s": dt,
                 "gens_per_s": seg.gens / dt if dt > 0 else float("inf"),
                 "backend": self.backend_name,
+                "migrations": migrations,
+                "extras": seg.extras,
             }
 
 

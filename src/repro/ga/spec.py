@@ -1,11 +1,12 @@
 """`GASpec` — one frozen description of a GA run.
 
-A spec bundles everything the four divergent drivers used to take through
+A spec bundles everything the old divergent drivers used to take through
 ad-hoc plumbing: the problem (a paper benchmark or a blackbox fitness over a
-box), the chromosome encoding, the operator pipeline, and the run policy
-(generations, repeats, islands).  Every backend consumes the same spec, so
-swapping `"reference"` ↔ `"fused"` ↔ `"islands"` ↔ `"eager"` is a string,
-not a rewrite.
+box), the chromosome encoding, the operator pipeline, the run policy
+(generations, repeats, islands) and the population topology.  Every
+(topology × executor) backend consumes the same spec, so swapping
+`"reference"` ↔ `"fused"` ↔ `"islands"` ↔ `"fused-islands"` ↔ `"eager"`
+is a string, not a rewrite.
 """
 
 from __future__ import annotations
@@ -56,6 +57,14 @@ class GASpec:
     migrate_every: int = 16
     jit_fitness: bool = True       # False -> fitness not traceable (eager)
 
+    # ---- topology (how populations are arranged + exchanged) ------------
+    # None/"auto" derives from n_islands; "single" pins one population
+    # (n_repeats replicas at most), "island_ring" pins the ring-migrating
+    # island layout.  `migration` picks the exchange between epochs:
+    # "ring" (the [19] elite ring) or "none" (isolated islands ablation).
+    topology: Optional[str] = None
+    migration: str = "ring"
+
     def __post_init__(self):
         if (self.problem is None) == (self.fitness is None):
             raise ValueError("set exactly one of problem= or fitness=")
@@ -77,6 +86,20 @@ class GASpec:
                           ("migrate_every", 1)):
             if getattr(self, field) < lo:
                 raise ValueError(f"{field} must be >= {lo}")
+        if self.topology == "auto":
+            object.__setattr__(self, "topology", None)
+        if self.topology not in (None, "single", "island_ring"):
+            raise ValueError(
+                f"topology must be 'single', 'island_ring' or None/'auto', "
+                f"got {self.topology!r}")
+        if self.topology == "single" and self.n_islands > 1:
+            raise ValueError("topology='single' is inconsistent with "
+                             f"n_islands={self.n_islands}; drop one of them")
+        if self.topology == "island_ring" and self.n_islands == 1:
+            raise ValueError("topology='island_ring' needs n_islands > 1")
+        if self.migration not in ("ring", "none"):
+            raise ValueError(f"migration must be 'ring' or 'none', "
+                             f"got {self.migration!r}")
 
     # ---- derived --------------------------------------------------------
 
@@ -85,6 +108,14 @@ class GASpec:
         if self.n_vars is not None:
             return self.n_vars
         return len(self.bounds) if self.bounds is not None else 2
+
+    @property
+    def effective_topology(self) -> str:
+        """The topology this spec runs on: the explicit `topology` field, or
+        derived from `n_islands` when left as None/'auto'."""
+        if self.topology is not None:
+            return self.topology
+        return "island_ring" if self.n_islands > 1 else "single"
 
     @property
     def uses_paper_pipeline(self) -> bool:

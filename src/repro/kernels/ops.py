@@ -8,6 +8,7 @@ Mosaic.  `interpret` is auto-detected from the backend unless forced.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -47,7 +48,14 @@ def ga_run_kernel(states: GAState, k_generations: int, *, cfg: GAConfig,
 
     states: island-stacked GAState (leading dim I). Returns
     (final states, best_y[I] over the run).
+
+    Deprecated entry-point shim — use `repro.ga.solve(spec,
+    backend="fused")` (or "fused-islands" for migrating islands).
     """
+    warnings.warn(
+        "repro.kernels.ops.ga_run_kernel is a deprecated entry point; use "
+        "repro.ga.solve(spec, backend='fused') instead",
+        DeprecationWarning, stacklevel=2)
     interp = _auto_interpret(interpret)
 
     @jax.jit

@@ -3,12 +3,16 @@
     PYTHONPATH=src python -m repro.launch.ga_run --problem F1 --n 32 --m 26
     PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --backend fused
     PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --islands 16
+    PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --islands 8 \
+        --backend fused-islands --topology island_ring
     PYTHONPATH=src python -m repro.launch.ga_run --selection roulette \
         --backend reference --repeats 8
 
-Any registered backend (reference | fused | islands | eager | auto) and any
-registered selection scheme work from one spec; `--kernel` is kept as a
-deprecated alias for `--backend fused`.
+Any registered backend (reference | fused | islands | fused-islands | eager
+| auto — each a topology × executor composition) and any registered
+selection scheme work from one spec; `--topology` pins the population
+layout explicitly; `--kernel` is kept as a deprecated alias for
+`--backend fused`.
 """
 
 from __future__ import annotations
@@ -29,11 +33,17 @@ def main():
     ap.add_argument("--mutation-rate", type=float, default=0.02)
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "reference", "fused", "islands",
-                             "eager"])
+                             "fused-islands", "eager"])
+    ap.add_argument("--topology", default="auto",
+                    choices=["auto", "single", "island_ring"],
+                    help="population layout (auto derives from --islands)")
     ap.add_argument("--selection", default="tournament",
                     help="registered selection scheme (see repro.ga.SELECTION)")
     ap.add_argument("--islands", type=int, default=0,
-                    help=">1 runs the island model (implies --backend islands)")
+                    help=">1 runs the island model (implies an island_ring "
+                         "backend)")
+    ap.add_argument("--migration", default="ring", choices=["ring", "none"],
+                    help="inter-island exchange (none = isolated ablation)")
     ap.add_argument("--migrate-every", type=int, default=16)
     ap.add_argument("--repeats", type=int, default=1,
                     help="independent replicas vmapped into one run")
@@ -52,17 +62,18 @@ def main():
     if args.kernel:
         backend = "fused"
     n_islands = max(args.islands, 1)
-    if n_islands > 1 and backend == "auto":
-        backend = "islands"
     mode = args.mode
-    if backend == "fused" and mode == "lut":
+    if backend in ("fused", "fused-islands") and mode == "lut":
         mode = "arith"   # the kernel's FFM is arithmetic-only
 
     spec = ga.paper_spec(args.problem, n=args.n, m=args.m, mode=mode,
                          mutation_rate=args.mutation_rate, seed=args.seed,
                          generations=args.k, n_islands=n_islands,
                          migrate_every=args.migrate_every,
-                         n_repeats=args.repeats, selection=args.selection)
+                         n_repeats=args.repeats, selection=args.selection,
+                         topology=None if args.topology == "auto"
+                         else args.topology,
+                         migration=args.migration)
 
     if args.chunk > 0:
         eng = ga.Engine(spec, backend)
@@ -72,14 +83,20 @@ def main():
             print(f"[{tele['backend']}] chunk {tele['chunk']}: "
                   f"{tele['gens_done']}/{tele['gens_total']} gens, "
                   f"best={tele['best_fitness']:.4f}, "
-                  f"{tele['gens_per_s']:.0f} gens/s")
+                  f"{tele['gens_per_s']:.0f} gens/s, "
+                  f"{tele.get('migrations', 0)} migrations")
             last = tele
         if last is not None:
             print(f"decoded vars: {np.round(last['best_params'], 4)}")
         return
 
     out = ga.solve(spec, backend=backend)
-    print(f"backend: {out.backend}")
+    exec_name = out.extras.get("executor")
+    topo_name = out.extras.get("topology")
+    comp = f" ({exec_name} x {topo_name})" if exec_name and topo_name else ""
+    print(f"backend: {out.backend}{comp}")
+    if out.extras.get("migrations"):
+        print(f"migrations: {out.extras['migrations']}")
     print(f"best fitness: {out.best_fitness:.4f}")
     print(f"decoded vars: {np.round(out.best_params, 4)}")
     traj = np.asarray(out.traj_best)

@@ -4,12 +4,19 @@ A fixed batch of `slots` runs lock-step decode (the shape the decode_32k /
 long_500k dry-run cells lower).  A light continuous-batching layer refills
 finished slots from a request queue between decode bursts — enough to drive
 realistic serving benchmarks without an RPC stack.
+
+The serving stack also fronts the GA engine as a tuning service: `run_ga_job`
+drives `repro.ga.Engine.run_chunked` under a job id and aggregates its
+per-chunk telemetry (generations/s, best-fitness trajectory, migration
+count) into `GA_METRICS`, whose `metrics()` snapshot is the /metrics-style
+dict a scrape endpoint would serialize.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import queue
+import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -119,3 +126,148 @@ def serve_queue(engine: Engine, requests: List[Request],
             if r.uid not in results:
                 results[r.uid] = toks[i]
     return results
+
+
+# ---------------------------------------------------------------------------
+# GA job telemetry (Engine.run_chunked -> /metrics-style dicts)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GAJobStats:
+    """Aggregated `repro.ga.Engine.run_chunked` telemetry for one job."""
+
+    job_id: str
+    backend: str = "?"
+    status: str = "pending"          # pending | running | done | failed
+    gens_done: int = 0
+    gens_total: int = 0
+    chunks: int = 0
+    best_fitness: Optional[float] = None
+    best_trajectory: List[float] = dataclasses.field(default_factory=list)
+    migrations: int = 0
+    wall_s: float = 0.0
+    error: Optional[str] = None
+
+    @property
+    def gens_per_s(self) -> float:
+        return self.gens_done / self.wall_s if self.wall_s > 0 else 0.0
+
+    def as_metrics(self) -> Dict[str, Any]:
+        """Flat dict the /metrics endpoint of a GA job would serialize."""
+        return {
+            "job_id": self.job_id,
+            "backend": self.backend,
+            "status": self.status,
+            "generations_done": self.gens_done,
+            "generations_total": self.gens_total,
+            "chunks": self.chunks,
+            "generations_per_s": round(self.gens_per_s, 2),
+            "best_fitness": self.best_fitness,
+            "best_fitness_trajectory": list(self.best_trajectory),
+            "migration_count": self.migrations,
+            "wall_s": round(self.wall_s, 4),
+            "error": self.error,
+        }
+
+
+class GAMetricsRegistry:
+    """Thread-safe per-job telemetry aggregation for GA runs.
+
+    Feed it `run_chunked` telemetry dicts via `record_chunk`; scrape the
+    whole registry with `metrics()` (every job keyed by id, plus fleet
+    totals), the shape a /metrics handler returns as JSON.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._jobs: Dict[str, GAJobStats] = {}
+        self._next_id = 0
+
+    def allocate_job_id(self, suffix: str = "job") -> str:
+        """A unique job id, safe under concurrent `run_ga_job` calls."""
+        with self._lock:
+            jid = f"ga-{self._next_id}-{suffix}"
+            self._next_id += 1
+            return jid
+
+    def start_job(self, job_id: str, backend: str = "?",
+                  gens_total: int = 0) -> GAJobStats:
+        with self._lock:
+            job = GAJobStats(job_id=job_id, backend=backend,
+                             gens_total=gens_total, status="running")
+            self._jobs[job_id] = job
+            return job
+
+    def record_chunk(self, job_id: str, tele: Dict[str, Any]) -> None:
+        """Fold one `Engine.run_chunked` telemetry dict into the job."""
+        with self._lock:
+            job = self._jobs[job_id]
+            job.backend = tele.get("backend", job.backend)
+            job.gens_done = int(tele.get("gens_done", job.gens_done))
+            job.gens_total = int(tele.get("gens_total", job.gens_total))
+            job.chunks += 1
+            job.wall_s += float(tele.get("wall_s", 0.0))
+            job.migrations = int(tele.get("migrations", job.migrations))
+            bf = tele.get("best_fitness")
+            if bf is not None:
+                job.best_fitness = float(bf)
+                job.best_trajectory.append(float(bf))
+
+    def finish_job(self, job_id: str, error: Optional[str] = None) -> None:
+        with self._lock:
+            job = self._jobs[job_id]
+            job.status = "failed" if error else "done"
+            job.error = error
+
+    def metrics(self) -> Dict[str, Any]:
+        """The /metrics snapshot: every job + fleet aggregates."""
+        with self._lock:
+            jobs = {jid: j.as_metrics() for jid, j in self._jobs.items()}
+        done = [j for j in jobs.values() if j["status"] == "done"]
+        return {
+            "jobs": jobs,
+            "job_count": len(jobs),
+            "jobs_done": len(done),
+            "generations_total": sum(j["generations_done"]
+                                     for j in jobs.values()),
+            "migrations_total": sum(j["migration_count"]
+                                    for j in jobs.values()),
+        }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._jobs.clear()
+
+
+GA_METRICS = GAMetricsRegistry()
+
+
+def run_ga_job(spec, backend: str = "auto", *, job_id: Optional[str] = None,
+               chunk_generations: Optional[int] = None,
+               ckpt_dir: Optional[str] = None,
+               registry: Optional[GAMetricsRegistry] = None,
+               mesh=None) -> Dict[str, Any]:
+    """Run a GASpec as a telemetered serving job.
+
+    Streams `Engine.run_chunked` into the registry so a concurrent /metrics
+    scrape sees live generations/s, the best-fitness trajectory and the
+    migration count.  Returns the job's final metrics dict.
+    """
+    from repro import ga   # lazy: LM-only servers never pay the import
+
+    registry = registry if registry is not None else GA_METRICS
+    if job_id is None:
+        job_id = registry.allocate_job_id(spec.problem or "blackbox")
+    eng = ga.Engine(spec, backend, mesh=mesh)
+    registry.start_job(job_id, backend=eng.backend_name,
+                       gens_total=spec.generations)
+    try:
+        for tele in eng.run_chunked(chunk_generations=chunk_generations,
+                                    ckpt_dir=ckpt_dir):
+            registry.record_chunk(job_id, tele)
+    except Exception as e:   # surface the failure in /metrics, then re-raise
+        registry.finish_job(job_id, error=repr(e))
+        raise
+    registry.finish_job(job_id)
+    return registry.metrics()["jobs"][job_id]

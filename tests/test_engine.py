@@ -47,11 +47,19 @@ def test_reference_vs_fused_bit_exact(problem):
     assert seg_f.best_y == seg_r.best_y
 
 
-def test_all_four_backends_from_one_spec():
-    """Acceptance: one spec object runs F1 and F3 on every backend."""
+def test_every_backend_from_one_spec():
+    """Acceptance: one spec object runs F1 and F3 on every registered
+    (topology × executor) backend — island_ring backends get the spec's
+    island variant, everything else the single-population variant."""
     for problem, thresh in (("F1", -6.0e10), ("F3", 3.0)):
         spec = _spec(problem=problem, n=64, generations=60)
-        results = {b: ga.solve(spec, backend=b) for b in sorted(ga.BACKENDS)}
+        ispec = dataclasses.replace(spec, n_islands=4, migrate_every=10)
+        results = {}
+        for b in sorted(ga.BACKENDS):
+            cls = ga.BACKENDS[b]
+            this = spec if cls.supports(spec) is None else ispec
+            assert cls.supports(this) is None, (b, cls.supports(this))
+            results[b] = ga.solve(this, backend=b)
         for b, r in results.items():
             assert r.backend == b
             assert np.isfinite(r.best_fitness), (problem, b)
@@ -61,6 +69,8 @@ def test_all_four_backends_from_one_spec():
         # XLA's fusion/FMA choices may differ by float ulps
         assert results["reference"].best_fitness == \
             results["fused"].best_fitness
+        assert results["islands"].best_fitness == \
+            results["fused-islands"].best_fitness
         assert results["reference"].best_fitness == pytest.approx(
             results["eager"].best_fitness, rel=1e-4)
 
@@ -101,7 +111,7 @@ def test_uniform_crossover_conserves_bits():
     spec = _spec(crossover="uniform", mutation="none", generations=5)
     eng = ga.Engine(spec, "reference")
     st = eng.init_state()
-    y = eng.backend.fit(st.x)
+    y = eng.backend.executor.fit(st.x)
     cfg = spec.ga_config()
     w, _ = ga.SELECTION["tournament"](st.x, y, st.sel_lfsr, cfg)
     z, _ = ga.CROSSOVER["uniform"](w, st.cross_lfsr, cfg)
@@ -221,10 +231,11 @@ def test_lut_fixed_point_descaled():
 
 
 def test_old_entry_point_shim_matches_engine():
-    """G.run (old API) and ga.solve (new API) agree for the same config."""
+    """G.run (old API) warns but still agrees with ga.solve (new API)."""
     spec = _spec(generations=30)
     cfg = spec.ga_config()
-    old = G.run(cfg, spec.fitness_fn(), 30)
+    with pytest.warns(DeprecationWarning, match="deprecated entry point"):
+        old = G.run(cfg, spec.fitness_fn(), 30)
     new = ga.solve(spec, backend="reference")
     assert float(old.best_y) == new.best_fitness
     np.testing.assert_array_equal(np.asarray(old.best_x), new.best_x)

@@ -53,7 +53,7 @@ def test_paper_convergence_claims(name, n, m, k):
         cfg = G.GAConfig(n=n, c=m // 2, v=2, mutation_rate=0.05, seed=seed,
                          mode="lut")
         t = F.build_tables(problem, m)
-        out = G.run(cfg, G.make_lut_fitness(t), k)
+        out = G.run_scan(cfg, G.make_lut_fitness(t), k)
         best = min(best, float(out.best_y) / 2.0 ** t.frac_bits)
     if name == "F1":
         target = float(problem.f(np.array(0.0), np.array(-4096.0)))

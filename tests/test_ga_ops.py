@@ -93,8 +93,8 @@ def test_selection_winner_is_better(seed, minimize):
 def test_run_is_deterministic():
     cfg = _cfg(n=32, c=10, seed=7, mode="arith")
     fit = G.fitness_for_problem(F.F3, cfg)
-    a = G.run(cfg, fit, 50)
-    b = G.run(cfg, fit, 50)
+    a = G.run_scan(cfg, fit, 50)
+    b = G.run_scan(cfg, fit, 50)
     np.testing.assert_array_equal(np.asarray(a.state.x), np.asarray(b.state.x))
     assert float(a.best_y) == float(b.best_y)
 
@@ -104,5 +104,5 @@ def test_maximize_mode():
     # maximize -(x^2+y^2) -> best at 0
     fit = G.make_blackbox_fitness(
         lambda p: -jnp.sum(p * p, axis=-1), cfg.c, [(-1, 1)] * 2)
-    out = G.run(cfg, fit, 100)
+    out = G.run_scan(cfg, fit, 100)
     assert float(out.best_y) > -0.05

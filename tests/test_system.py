@@ -1,6 +1,9 @@
 """End-to-end behaviour tests for the paper's system: the full-parallel GA
 reproduces the paper's optimisation results; the island model scales it; the
-multi-device shard_map path works (spawned with fake devices)."""
+multi-device shard_map path works (spawned with fake devices).
+
+All GA runs go through the unified `repro.ga` engine API (the old
+`G.run` / `ISL.run_local` drivers are deprecated shims)."""
 
 import os
 import subprocess
@@ -11,66 +14,66 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import ga
 from repro.core import fitness as F
-from repro.core import ga as G
-from repro.core import islands as ISL
 from repro.roofline import analyze_hlo
 
 
 def test_f1_paper_reproduction_lut_mode():
     """Paper Fig. 11: minimise F1 with N=32, m=26 — global minimum within
     100 generations (LUT/fixed-point mode, the hardware-faithful path)."""
-    cfg = G.GAConfig(n=32, c=13, v=2, mutation_rate=0.05, seed=7, mode="lut")
-    t = F.build_tables(F.F1, 26)
-    out = G.run(cfg, G.make_lut_fitness(t), 100)
-    best = float(out.best_y) / 2.0 ** t.frac_bits
+    spec = ga.paper_spec("F1", n=32, m=26, mode="lut", mutation_rate=0.05,
+                         seed=7, generations=100)
+    r = ga.solve(spec, backend="reference")
     target = float(F.F1.f(np.array(0.0), np.array(-4096.0)))
-    assert best <= 0.98 * target
+    assert r.best_fitness <= 0.98 * target   # real units (descaled)
     # decoded solution sits at the domain edge the paper reports
-    sol = G.decode_best(out, cfg, F.F1.domain)
-    assert sol[1] == pytest.approx(-4096.0, abs=2.0)
+    assert r.best_params[1] == pytest.approx(-4096.0, abs=2.0)
 
 
 def test_f3_paper_reproduction():
     """Paper Fig. 12: F3 with N=64, m=20 converges near zero in ~20 gens."""
-    cfg = G.GAConfig(n=64, c=10, v=2, mutation_rate=0.05, seed=3, mode="arith")
-    out = G.run(cfg, G.fitness_for_problem(F.F3, cfg), 100)
-    traj = np.asarray(out.traj_best)
-    assert traj[40] < 3.0          # most of the way by gen 40
-    assert float(out.best_y) < 1.0
+    spec = ga.paper_spec("F3", n=64, m=20, mode="arith", mutation_rate=0.05,
+                         seed=3, generations=100)
+    r = ga.solve(spec, backend="reference")
+    assert r.traj_best[40] < 3.0   # most of the way by gen 40
+    assert r.best_fitness < 1.0
 
 
 def test_islands_beat_single_population():
     """Island model with migration should match or beat one big population
     at equal total chromosome count (the multi-FPGA [19] claim)."""
-    fit_cfg = G.GAConfig(n=32, c=12, v=2, mutation_rate=0.05, seed=1,
-                         mode="arith")
-    fit = G.fitness_for_problem(F.F3, fit_cfg)
-    icfg = ISL.IslandConfig(ga=fit_cfg, n_islands=8, migrate_every=10)
-    _, best_isl = ISL.run_local(icfg, fit, epochs=10)
+    isl = ga.GASpec(problem="F3", n=32, bits_per_var=12, mode="arith",
+                    mutation_rate=0.05, seed=1, generations=100,
+                    n_islands=8, migrate_every=10)
+    r_isl = ga.solve(isl, backend="islands")
+    assert r_isl.extras["migrations"] == 10
 
-    big = G.GAConfig(n=256, c=12, v=2, mutation_rate=0.05, seed=1, mode="arith")
-    out = G.run(big, G.fitness_for_problem(F.F3, big), 100)
-    assert best_isl <= float(out.best_y) * 1.5 + 0.2
+    big = ga.GASpec(problem="F3", n=256, bits_per_var=12, mode="arith",
+                    mutation_rate=0.05, seed=1, generations=100)
+    r_big = ga.solve(big, backend="reference")
+    assert r_isl.best_fitness <= r_big.best_fitness * 1.5 + 0.2
 
 
 def test_sharded_island_ga_on_multiple_devices():
-    """Full shard_map island GA on 8 fake devices (subprocess so the forced
-    device count doesn't leak into this process)."""
+    """Full shard_map island GA on 8 fake devices via the engine's
+    reference×island_ring backend (subprocess so the forced device count
+    doesn't leak into this process)."""
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, numpy as np
-from jax.sharding import Mesh
-from repro.core import fitness as F, ga as G, islands as ISL
+from repro import ga
 mesh = jax.make_mesh((2, 4), ("data", "model"))
-cfg = G.GAConfig(n=32, c=10, v=2, mutation_rate=0.05, seed=2, mode="arith")
-icfg = ISL.IslandConfig(ga=cfg, n_islands=16, migrate_every=8,
-                        axis_names=("data", "model"))
-fit = G.fitness_for_problem(F.F3, cfg)
-states, best = ISL.run_sharded(icfg, fit, mesh, epochs=6)
-assert best < 2.0, best
-print("SHARDED_OK", best)
+spec = ga.GASpec(problem="F3", n=32, bits_per_var=10, mode="arith",
+                 mutation_rate=0.05, seed=2, generations=48,
+                 n_islands=16, migrate_every=8)
+r = ga.solve(spec, backend="islands", mesh=mesh)
+assert r.backend == "islands"
+assert r.extras.get("sharded") is True
+assert r.extras["migrations"] == 6
+assert r.best_fitness < 2.0, r.best_fitness
+print("SHARDED_OK", r.best_fitness)
 """
     env = dict(os.environ, PYTHONPATH="src")
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,

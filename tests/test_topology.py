@@ -1,0 +1,199 @@
+"""The topology × executor decomposition: fused×island_ring is bit-identical
+to reference×island_ring, replicas vmap outside the island axis, migration
+math is shared with repro.core.islands, and serve-side GA job telemetry."""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import ga
+from repro.core import islands as ISL
+
+
+def _spec(**kw):
+    base = dict(problem="F3", n=32, bits_per_var=10, mode="arith",
+                mutation_rate=0.05, seed=11, generations=15,
+                n_islands=4, migrate_every=5)
+    base.update(kw)
+    return ga.GASpec(**base)
+
+
+def _segment(spec, backend, gens):
+    eng = ga.Engine(spec, backend)
+    return eng.backend.segment(eng.init_state(), gens)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the fused Pallas executor under the island ring is bit-identical
+# to the reference executor under the island ring (same seeds, same migration)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("problem", ["F1", "F2", "F3"])
+def test_fused_islands_bit_identical_to_reference_islands(problem):
+    spec = _spec(problem=problem)
+    seg_r = _segment(spec, "islands", 15)
+    seg_f = _segment(spec, "fused-islands", 15)
+    # island-stacked populations and every LFSR bank after 3 migration
+    # epochs: bit-exact (migration runs between kernel launches on the
+    # same elite/worst decisions)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(seg_f.state, field)),
+                                      np.asarray(getattr(seg_r.state, field)),
+                                      err_msg=field)
+    np.testing.assert_array_equal(seg_f.traj_best, seg_r.traj_best)
+    np.testing.assert_array_equal(seg_f.best_x, seg_r.best_x)
+    assert seg_f.best_y == seg_r.best_y
+    assert seg_f.extras["migrations"] == seg_r.extras["migrations"] == 3
+    assert seg_f.extras["executor"] == "fused"
+    assert seg_r.extras["executor"] == "reference"
+    assert seg_f.extras["topology"] == seg_r.extras["topology"] == "island_ring"
+
+
+def test_fused_islands_end_to_end_solve():
+    """`ga.solve(spec, backend="fused-islands")` runs the Pallas step kernel
+    under an island ring with migration and converges on the paper problem."""
+    spec = _spec(generations=40, migrate_every=8)
+    r = ga.solve(spec, backend="fused-islands")
+    assert r.backend == "fused-islands"
+    assert r.extras["migrations"] == 5
+    assert np.isfinite(r.best_fitness) and r.best_fitness < 3.0
+    assert r.generations == 40
+    assert len(r.traj_best) == 5   # telemetry unit = migration epoch
+
+
+# ---------------------------------------------------------------------------
+# Replica axis outside the island axis (n_repeats × n_islands)
+# ---------------------------------------------------------------------------
+
+
+def test_islands_n_repeats_per_replica_bests():
+    solo = ga.solve(_spec(), backend="islands")
+    rep = ga.solve(_spec(n_repeats=3), backend="islands")
+    per = rep.extras["per_repeat_best"]
+    assert per.shape == (3,)
+    # replica 0 re-runs the n_repeats=1 island stack bit-exactly
+    assert float(per[0]) == solo.best_fitness
+    assert rep.best_fitness == float(np.min(per))
+    # replicas are seeded distinctly — not all identical
+    assert len(np.unique(per)) > 1
+
+
+def test_fused_islands_n_repeats_matches_reference():
+    spec = _spec(n_repeats=2, generations=10)
+    r_ref = ga.solve(spec, backend="islands")
+    r_fus = ga.solve(spec, backend="fused-islands")
+    np.testing.assert_array_equal(r_ref.extras["per_repeat_best"],
+                                  r_fus.extras["per_repeat_best"])
+    assert r_ref.best_fitness == r_fus.best_fitness
+
+
+# ---------------------------------------------------------------------------
+# Shared migration math: the engine's island_ring == core/islands.py
+# ---------------------------------------------------------------------------
+
+
+def test_islands_backend_state_matches_run_local_shim():
+    spec = _spec()
+    icfg = ISL.IslandConfig(ga=spec.ga_config(), n_islands=4, migrate_every=5)
+    with pytest.warns(DeprecationWarning, match="deprecated entry point"):
+        old_states, _best = ISL.run_local(icfg, spec.fitness_fn(), epochs=3)
+    seg = _segment(spec, "islands", 15)
+    for a, b in zip(old_states, seg.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_migration_none_ablation():
+    """migration='none' evolves isolated islands: epochs still chunk the
+    run but no elites are exchanged."""
+    ring = ga.solve(_spec(), backend="islands")
+    none = ga.solve(_spec(migration="none"), backend="islands")
+    assert none.extras["migrations"] == 0
+    assert ring.extras["migrations"] == 3
+    assert np.isfinite(none.best_fitness)
+
+
+# ---------------------------------------------------------------------------
+# Spec-level topology plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_topology_field_validation():
+    assert _spec().effective_topology == "island_ring"
+    assert _spec(n_islands=1).effective_topology == "single"
+    assert _spec(n_islands=1, topology="auto").topology is None
+    with pytest.raises(ValueError, match="inconsistent"):
+        _spec(topology="single")           # n_islands=4
+    with pytest.raises(ValueError, match="n_islands > 1"):
+        _spec(n_islands=1, topology="island_ring")
+    with pytest.raises(ValueError, match="topology must be"):
+        _spec(topology="torus")
+    with pytest.raises(ValueError, match="migration must be"):
+        _spec(migration="broadcast")
+
+
+def test_auto_and_fallback_routing():
+    # auto on CPU routes island specs to the reference×island_ring composition
+    assert ga.resolve_backend(_spec()) == "islands"
+    # fused-islands falls back to islands when the kernel can't run (lut FFM)
+    lut = _spec(mode="lut")
+    assert ga.capability_matrix(lut)["fused-islands"] is not None
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = ga.solve(lut, backend="fused-islands")
+    assert r.backend == "islands"
+    assert any("falling back" in str(x.message) for x in w)
+    # pinned single topology keeps island backends off the table
+    single = _spec(n_islands=1)
+    caps = ga.capability_matrix(single)
+    assert caps["reference"] is None
+    assert caps["islands"] is None        # permissive: 1-island ring runs
+    pinned = _spec(n_islands=1, topology="single")
+    assert ga.capability_matrix(pinned)["islands"] is not None
+
+
+def test_chunked_checkpoint_resume_on_islands(tmp_path):
+    spec = _spec(generations=20, migrate_every=5)
+    ckpt = str(tmp_path / "isl_ck")
+    full = list(ga.Engine(spec, "islands").run_chunked(chunk_generations=5))
+    assert [t["gens_done"] for t in full] == [5, 10, 15, 20]
+    assert full[-1]["migrations"] == 4
+
+    it = ga.Engine(spec, "islands").run_chunked(chunk_generations=5,
+                                                ckpt_dir=ckpt)
+    next(it), next(it)     # 2 epochs, then "crash"
+    del it
+    resumed = list(ga.Engine(spec, "islands").run_chunked(
+        chunk_generations=5, ckpt_dir=ckpt))
+    assert [t["gens_done"] for t in resumed] == [15, 20]
+    assert resumed[-1]["best_fitness"] == full[-1]["best_fitness"]
+    assert resumed[-1]["migrations"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Serve-side GA job telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_serve_ga_job_metrics():
+    from repro.serve.engine import GAMetricsRegistry, run_ga_job
+
+    reg = GAMetricsRegistry()
+    spec = _spec(generations=10, migrate_every=5)
+    out = run_ga_job(spec, backend="islands", job_id="job-a",
+                     chunk_generations=5, registry=reg)
+    assert out["status"] == "done"
+    assert out["backend"] == "islands"
+    assert out["generations_done"] == 10
+    assert out["migration_count"] == 2
+    assert out["generations_per_s"] > 0
+    assert len(out["best_fitness_trajectory"]) == 2
+    assert out["best_fitness"] == min(out["best_fitness_trajectory"])
+
+    snap = reg.metrics()
+    assert snap["job_count"] == 1 and snap["jobs_done"] == 1
+    assert snap["migrations_total"] == 2
+    assert snap["generations_total"] == 10
+    assert "job-a" in snap["jobs"]
