@@ -7,6 +7,12 @@ chromosome throughput is islands × gens/s); on CPU the fused rows run the
 Pallas kernel in interpret mode, so their absolute numbers only mean
 something on TPU.
 
+The island backends additionally run as mesh combos (`...@mesh{D}`): the
+island axis shard_mapped over D devices with `ppermute` ring migration —
+the `devices` column is the scaling sweep (full mode sweeps powers of two
+up to the host's device count; point it at a TPU pod slice and the
+`gens_per_s` column is the paper's speedup-vs-replication headline).
+
 Standalone smoke mode for CI (1 tiny config per backend combo, JSON
 artifact so a composition regression fails fast):
 
@@ -29,15 +35,55 @@ N_ISLANDS = 8
 
 SMOKE = dict(n=16, m=16, generations=8, n_islands=2, migrate_every=4)
 
+MESH_BACKENDS = ("islands", "fused-islands")
+
 
 def _spec_for(backend: str, *, n: int, m: int, generations: int,
               n_islands: int, migrate_every: int) -> ga.GASpec:
     base = ga.paper_spec("F3", n=n, m=m, mode="arith", mutation_rate=0.02,
                          seed=1, generations=generations,
                          migrate_every=migrate_every)
-    if backend in ("islands", "fused-islands"):
+    if backend.split("@")[0] in ("islands", "fused-islands"):
         return dataclasses.replace(base, n_islands=n_islands)
     return base
+
+
+def _mesh_device_counts(smoke: bool):
+    """Device counts the mesh combos sweep: all devices in smoke mode,
+    powers of two up to the device count in full mode."""
+    import jax
+    n = len(jax.devices())
+    if smoke:
+        return [n]
+    counts, d = [], 1
+    while d <= n:
+        counts.append(d)
+        d *= 2
+    return counts
+
+
+def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
+             mesh=None, devices: int = 1):
+    eng = ga.Engine(spec, backend, mesh=mesh)
+    out = eng.run()           # compile + warm caches
+    # interpret-mode Pallas and the eager loop are slow; fewer iters
+    slow = backend in ("fused", "fused-islands", "eager")
+    iters = 1 if (slow or smoke) else 3
+    dt, out = time_call(eng.run, warmup=0, iters=iters)
+    gens = out.generations * max(spec.n_islands, spec.n_repeats)
+    payload = json.dumps({"backend": out.backend,
+                          "executor": out.extras.get("executor", "-"),
+                          "topology": out.extras.get("topology", "-"),
+                          "gens_per_s": round(gens / dt, 1),
+                          "best": round(out.best_fitness, 4),
+                          "n": spec.n,
+                          "islands": spec.n_islands,
+                          "devices": devices,
+                          "migrations": out.extras.get("migrations", 0)},
+                         separators=(",", ":"))
+    # island epochs round K up to whole migration epochs — divide by
+    # what actually ran
+    return (name, dt / out.generations * 1e6, payload)
 
 
 def run(smoke: bool = False):
@@ -46,25 +92,17 @@ def run(smoke: bool = False):
     rows = []
     for backend in sorted(ga.BACKENDS):
         spec = _spec_for(backend, **sizes)
-        eng = ga.Engine(spec, backend)
-        out = eng.run()           # compile + warm caches
-        # interpret-mode Pallas and the eager loop are slow; fewer iters
-        slow = backend in ("fused", "fused-islands", "eager")
-        iters = 1 if (slow or smoke) else 3
-        dt, out = time_call(eng.run, warmup=0, iters=iters)
-        gens = out.generations * max(spec.n_islands, spec.n_repeats)
-        payload = json.dumps({"backend": out.backend,
-                              "executor": out.extras.get("executor", "-"),
-                              "topology": out.extras.get("topology", "-"),
-                              "gens_per_s": round(gens / dt, 1),
-                              "best": round(out.best_fitness, 4),
-                              "n": spec.n,
-                              "islands": spec.n_islands,
-                              "migrations": out.extras.get("migrations", 0)},
-                             separators=(",", ":"))
-        # island epochs round K up to whole migration epochs — divide by
-        # what actually ran
-        rows.append((f"engine_{backend}", dt / out.generations * 1e6, payload))
+        rows.append(_one_row(f"engine_{backend}", backend, spec, smoke=smoke))
+    # mesh combos: island axis sharded over devices (device-count sweep)
+    from repro.launch.mesh import make_island_mesh
+    for backend in MESH_BACKENDS:
+        for d in _mesh_device_counts(smoke):
+            isl = sizes["n_islands"]
+            isl = isl if isl % d == 0 else d * -(-isl // d)   # ceil multiple
+            spec = _spec_for(backend, **{**sizes, "n_islands": isl})
+            rows.append(_one_row(f"engine_{backend}@mesh{d}", backend, spec,
+                                 smoke=smoke, mesh=make_island_mesh(d),
+                                 devices=d))
     return rows
 
 

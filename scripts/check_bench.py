@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Benchmark regression gate for the engine backend matrix.
+
+Compares a fresh `benchmarks.engine_backends --smoke` artifact against the
+committed baseline and fails (exit 1) when any (topology × executor) combo
+regressed by more than the tolerance:
+
+    PYTHONPATH=src python -m benchmarks.engine_backends --smoke \
+        --out artifacts/engine_backends.json
+    python scripts/check_bench.py artifacts/engine_backends.json
+
+A combo missing from the current artifact also fails — a silently dropped
+backend is a coverage regression, not a speedup.  Combos are only compared
+when their `devices` count matches (mesh rows scale with the host).
+
+The committed baseline is seeded CONSERVATIVELY: pass SEVERAL artifacts
+(collected across repeated runs, ideally including one on a loaded
+machine) and --write-baseline keeps the per-combo MINIMUM gens/s scaled by
+`SEED_MARGIN` — so machine-to-machine and run-to-run variance does not
+trip the 30% gate.  Regenerate when a deliberate change shifts throughput:
+
+    python scripts/check_bench.py run1.json run2.json run3.json \
+        --write-baseline
+
+Env overrides: CHECK_BENCH_TOLERANCE (float, default 0.30) and
+CHECK_BENCH_SKIP=1 (escape hatch for pathological machines — prints a
+warning, exits 0).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks", "baseline_engine_backends.json")
+SEED_MARGIN = 0.5    # baseline = observed_min * SEED_MARGIN at --write-baseline
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+
+def _base_name(name: str) -> str:
+    """Mesh rows embed the host's device count ('engine_islands@mesh8');
+    strip it so rows recorded on differently-sized hosts still pair up."""
+    return name.split("@mesh")[0] + ("@mesh" if "@mesh" in name else "")
+
+
+def compare(current: dict, baseline: dict, tolerance: float):
+    """Returns (failures, notes): failures are regressions/missing combos.
+
+    gens/s is only compared between rows with equal `devices`; a combo
+    whose device count differs from the baseline host's (mesh rows on a
+    bigger machine) is noted and skipped, not failed — absolute throughput
+    does not transfer across device counts.
+    """
+    failures, notes = [], []
+    cur_bases = {_base_name(n) for n in current}
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            if _base_name(name) in cur_bases:
+                notes.append(f"{name}: no row at {base.get('devices')} "
+                             "device(s) on this host; skipping")
+            else:
+                failures.append(f"{name}: combo missing from current "
+                                "artifact (was it dropped from the "
+                                "registry?)")
+            continue
+        if cur.get("devices") != base.get("devices"):
+            notes.append(f"{name}: device count changed "
+                         f"({base.get('devices')} -> {cur.get('devices')}); "
+                         "skipping gens/s comparison")
+            continue
+        floor = base["gens_per_s"] * (1.0 - tolerance)
+        if cur["gens_per_s"] < floor:
+            failures.append(
+                f"{name}: {cur['gens_per_s']:.1f} gens/s < floor "
+                f"{floor:.1f} (baseline {base['gens_per_s']:.1f}, "
+                f"tolerance {tolerance:.0%})")
+    for name in sorted(set(current) - set(baseline)):
+        notes.append(f"{name}: new combo (no baseline yet)")
+    return failures, notes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+",
+                    help="engine_backends --smoke --out JSON(s); several "
+                         "are min-merged per combo (use with "
+                         "--write-baseline to seed from repeated runs)")
+    ap.add_argument("--baseline", default=os.path.normpath(DEFAULT_BASELINE))
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("CHECK_BENCH_TOLERANCE",
+                                                 "0.30")),
+                    help="allowed fractional gens/s drop per combo")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="(re)seed the baseline from the artifact "
+                         f"(gens/s scaled by {SEED_MARGIN})")
+    args = ap.parse_args()
+
+    current: dict = {}
+    for path in args.artifacts:
+        for name, r in load_rows(path).items():
+            if (name not in current
+                    or r["gens_per_s"] < current[name]["gens_per_s"]):
+                current[name] = r
+    if args.write_baseline:
+        rows = []
+        for name, r in sorted(current.items()):
+            rows.append({"name": name,
+                         "gens_per_s": round(r["gens_per_s"] * SEED_MARGIN, 1),
+                         "devices": r.get("devices", 1)})
+        with open(args.baseline, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.baseline} ({len(rows)} combos, "
+              f"margin {SEED_MARGIN})")
+        return 0
+
+    if os.environ.get("CHECK_BENCH_SKIP") == "1":
+        print("check_bench: CHECK_BENCH_SKIP=1 — skipping regression gate")
+        return 0
+
+    baseline = load_rows(args.baseline)
+    failures, notes = compare(current, baseline, args.tolerance)
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"check_bench: {len(failures)} regression(s) vs "
+              f"{args.baseline}:")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        return 1
+    print(f"check_bench: OK — {len(baseline)} combos within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 verification + a launch smoke of the unified GA engine.
+# Tier-1 verification + launch smokes of the unified GA engine + the
+# benchmark regression gate.  Run by .github/workflows/ci.yml on every push.
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -13,10 +14,18 @@ echo "== engine smoke (reference backend, ~5s) =="
 timeout 120 python -m repro.launch.ga_run \
     --problem F1 --n 16 --k 20 --backend reference
 
+echo "== distributed smoke (fused-islands on a mesh, in-kernel epochs) =="
+timeout 180 python -m repro.launch.ga_run \
+    --problem F3 --n 16 --k 16 --islands 2 --migrate-every 4 \
+    --backend fused-islands --mesh auto --gens-per-epoch 4
+
 echo "== backend-matrix smoke (1 tiny config per topology x executor combo) =="
 mkdir -p artifacts
 timeout 300 python -m benchmarks.engine_backends --smoke \
     --out artifacts/engine_backends.json
 cat artifacts/engine_backends.json
+
+echo "== bench regression gate (>30% gens/s drop per combo fails) =="
+python scripts/check_bench.py artifacts/engine_backends.json
 
 echo "CI OK"

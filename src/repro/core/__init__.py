@@ -5,6 +5,6 @@ islands (multi-pod scaling), evolve (blackbox-tuning service).
 """
 
 from repro.core.fitness import F1, F2, F3, PROBLEMS, Problem, ArithSpec, build_tables
-from repro.core.ga import GAConfig, GAState, GARun, generation, init_state, run
-from repro.core.islands import IslandConfig, init_islands_fast, run_local, run_sharded
+from repro.core.ga import GAConfig, GAState, GARun, generation, init_state, run_scan
+from repro.core.islands import IslandConfig, init_islands_fast, migrate_ring
 from repro.core.evolve import evolve, EvolveResult

@@ -15,7 +15,7 @@ Module → code map (paper Sec. 3):
   SM    -> tournament selection with per-slot LFSR pairs, MSB-truncated draws
   CM    -> mask-shift bitwise crossover, per-variable cut points (CMPQ1/CMPQ2)
   MM    -> XOR of the first P individuals with LFSR words
-  SyncM -> the lax.scan over generations in `run`
+  SyncM -> the lax.scan over generations in `run_scan`
 """
 
 from __future__ import annotations
@@ -23,7 +23,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-import warnings
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -250,18 +249,6 @@ def run_scan(cfg: GAConfig, fit: FitnessFn, k_generations: int,
     return GARun(st, by, bx, tb, tm)
 
 
-def run(cfg: GAConfig, fit: FitnessFn, k_generations: int,
-        state: Optional[GAState] = None,
-        generation_fn: GenerationFn = None) -> GARun:
-    """Deprecated entry-point shim — use `repro.ga.solve(spec,
-    backend="reference")` (or `run_scan` from engine internals)."""
-    warnings.warn(
-        "repro.core.ga.run is a deprecated entry point; use "
-        "repro.ga.solve(spec, backend='reference') instead",
-        DeprecationWarning, stacklevel=2)
-    return run_scan(cfg, fit, k_generations, state, generation_fn)
-
-
 def generation_with_y(state: GAState, y: jax.Array, cfg: GAConfig) -> GAState:
     """SM+CM+MM given externally-computed fitness — lets non-traceable
     fitness functions (e.g. 'train a model for 10 steps') drive the GA."""
@@ -296,18 +283,6 @@ def run_eager(cfg: GAConfig, fit: FitnessFn, k_generations: int,
         state = step(state, jnp.asarray(y))
     return GARun(state, jnp.float32(best_y), jnp.asarray(best_x),
                  jnp.asarray(tb), jnp.asarray(tm))
-
-
-def run_unjitted(cfg: GAConfig, fit: FitnessFn, k_generations: int,
-                 state: Optional[GAState] = None,
-                 apply_ops_fn=None) -> GARun:
-    """Deprecated entry-point shim — use `repro.ga.solve` with
-    `jit_fitness=False` (or `run_eager` from engine internals)."""
-    warnings.warn(
-        "repro.core.ga.run_unjitted is a deprecated entry point; use "
-        "repro.ga.solve(spec with jit_fitness=False) instead",
-        DeprecationWarning, stacklevel=2)
-    return run_eager(cfg, fit, k_generations, state, apply_ops_fn)
 
 
 def decode_best(run_out: GARun, cfg: GAConfig, domain) -> np.ndarray:

@@ -22,14 +22,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
-from typing import Callable, Optional, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
 from repro.core import ga as G
 from repro.core import lfsr
@@ -124,7 +121,7 @@ def migrate_ring(states: G.GAState, y: jax.Array, *, minimize: bool
     The best individual of island i replaces the worst individual of island
     (i + 1) mod I — the `jnp.roll` analogue of the inter-FPGA elite links
     ([19]); `lax.ppermute` plays the same role on a device mesh (see
-    `make_sharded_step`).  This is THE migration step shared by
+    `migrate_ring_sharded`).  This is THE migration step shared by
     `make_local_step` and the engine's island_ring topology (any executor):
     migration happens *between* generation blocks / kernel launches, so the
     fused Pallas executor composes with islands without touching the kernel.
@@ -138,79 +135,57 @@ def migrate_ring(states: G.GAState, y: jax.Array, *, minimize: bool
 
 
 # ---------------------------------------------------------------------------
-# Sharded multi-pod runner
+# Sharded ring migration (inside shard_map) — bit-identical to migrate_ring
 # ---------------------------------------------------------------------------
 
 
-def make_sharded_step(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
-                      generation_fn=None
-                      ) -> Callable[[G.GAState], Tuple[G.GAState, jax.Array]]:
-    """Build the jit/shard_map epoch step for the production mesh.
+def ring_shift_sharded(x: jax.Array, mesh: Mesh,
+                       axis_names: Sequence[str]) -> jax.Array:
+    """Send `x` to the next shard in row-major linear order over `axis_names`.
 
-    One call = `migrate_every` local generations + one ring migration.
-    Island axis is sharded over all `cfg.axis_names` mesh axes jointly.
+    The inverse view: each shard receives the previous shard's `x`.  With the
+    island axis sharded over several mesh axes jointly, "next shard" means
+    linear index +1 over the raveled (row-major) axis tuple — i.e. exactly
+    one global ring, not one ring per leading-axis slice.  Implemented as a
+    `lax.ppermute` cascade: shift along the last axis, then patch the wrap
+    positions (trailing indices all zero) with progressively higher-axis
+    shifts.  Must be called inside `shard_map` over `axis_names`.
     """
-    axes = cfg.axis_names
-    spec_leading = P(axes)  # shard leading (island) dim over all axes
+    def shift(v, a):
+        s = mesh.shape[a]
+        return jax.lax.ppermute(v, a,
+                                perm=[(i, (i + 1) % s) for i in range(s)])
 
-    def spec_for(x):
-        return P(axes, *([None] * (x.ndim - 1)))
-
-    def epoch(states: G.GAState) -> Tuple[G.GAState, jax.Array]:
-        states, y = _local_generations(states, cfg, fit, cfg.migrate_every,
-                                       generation_fn)
-        elite_x, elite_y = _best_of(states, y, cfg)
-        # ring-migrate elites to the next device along the *last* mesh axis,
-        # composing rings across axes (pod ring at the wrap point).
-        perm_axis = axes[-1]
-        n_dev = np.prod([mesh.shape[a] for a in axes])
-        size_last = mesh.shape[perm_axis]
-        shifted = jax.lax.ppermute(
-            elite_x, perm_axis,
-            perm=[(i, (i + 1) % size_last) for i in range(size_last)])
-        states = _splice_elites(states, y, shifted, cfg)
-        del n_dev
-        return states, elite_x, elite_y
-
-    state_specs = G.GAState(
-        x=spec_for(jnp.zeros((1, 1, 1))),
-        sel_lfsr=spec_for(jnp.zeros((1, 1, 1))),
-        cross_lfsr=spec_for(jnp.zeros((1, 1, 1))),
-        mut_lfsr=spec_for(jnp.zeros((1, 1, 1))),
-        k=P(axes),
-    )
-    sharded = shard_map(epoch, mesh=mesh, in_specs=(state_specs,),
-                        out_specs=(state_specs, P(axes, None), P(axes)),
-                        check_rep=False)
-    return jax.jit(sharded)
+    out = shift(x, axis_names[-1])
+    for j in range(len(axis_names) - 2, -1, -1):
+        nxt = shift(out, axis_names[j])
+        cond = jnp.bool_(True)
+        for a in axis_names[j + 1:]:
+            cond = cond & (jax.lax.axis_index(a) == 0)
+        out = jnp.where(cond, nxt, out)
+    return out
 
 
-def run_sharded(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
-                epochs: int, states: Optional[G.GAState] = None,
-                generation_fn=None):
-    """Drive `epochs` migration epochs on the mesh; returns best over all.
+def migrate_ring_sharded(states: G.GAState, y: jax.Array, *, minimize: bool,
+                         mesh: Mesh, axis_names: Sequence[str]
+                         ) -> Tuple[G.GAState, jax.Array, jax.Array]:
+    """`migrate_ring` for one shard of an island axis sharded over a mesh.
 
-    Deprecated entry-point shim — use `repro.ga.solve(spec, mesh=mesh)`."""
-    warnings.warn(
-        "repro.core.islands.run_sharded is a deprecated entry point; use "
-        "repro.ga.solve(spec with n_islands>1, mesh=mesh) instead",
-        DeprecationWarning, stacklevel=2)
-    if states is None:
-        states = init_islands_fast(cfg)
-        sharding = jax.tree.map(
-            lambda _: NamedSharding(mesh, P(cfg.axis_names)), states,
-            is_leaf=lambda x: False)
-        states = jax.tree.map(
-            lambda x: jax.device_put(x, NamedSharding(
-                mesh, P(cfg.axis_names, *([None] * (x.ndim - 1))))), states)
-        del sharding
-    step = make_sharded_step(cfg, fit, mesh, generation_fn)
-    best = None
-    for _ in range(epochs):
-        states, _elite_x, elite_y = step(states)
-        e = float(jnp.min(elite_y) if cfg.ga.minimize else jnp.max(elite_y))
-        best = e if best is None else (min(best, e) if cfg.ga.minimize else max(best, e))
-    return states, best
+    states/y hold this shard's [I_local, ...] block.  Globally the effect is
+    bit-identical to the single-device `migrate_ring` (`jnp.roll` by one over
+    the full island axis): locally elites shift down by one island, and the
+    boundary elite (this shard's last island) is `ppermute`d to the next
+    shard in ring order, landing on its first island.
+
+    Returns (new_states, elite_x [I_local, V], elite_y [I_local]).
+    """
+    elite_x, elite_y = best_of(states, y, minimize=minimize)
+    recv = ring_shift_sharded(elite_x[-1], mesh, axis_names)   # [V] from prev
+    shifted = jnp.concatenate([recv[None], elite_x[:-1]], axis=0)
+    states = splice_elites(states, y, shifted, minimize=minimize)
+    return states, elite_x, elite_y
+
+
 
 
 # ---------------------------------------------------------------------------
@@ -220,8 +195,9 @@ def run_sharded(cfg: IslandConfig, fit: G.FitnessFn, mesh: Mesh,
 
 def make_local_step(cfg: IslandConfig, fit: G.FitnessFn, generation_fn=None):
     """Jitted epoch for a single-host island stack: `migrate_every` local
-    generations + one on-host ring migration.  Shared by `run_local` and the
-    engine's islands backend.  Returns (states, elite_x, elite_y)."""
+    generations + one on-host ring migration.  The independent oracle the
+    engine's islands backend is asserted against.  Returns
+    (states, elite_x, elite_y)."""
 
     @jax.jit
     def epoch(states):
@@ -232,22 +208,3 @@ def make_local_step(cfg: IslandConfig, fit: G.FitnessFn, generation_fn=None):
         return states, elite_x, elite_y
 
     return epoch
-
-
-def run_local(cfg: IslandConfig, fit: G.FitnessFn, epochs: int,
-              states: Optional[G.GAState] = None, generation_fn=None):
-    """Deprecated entry-point shim — use `repro.ga.solve(spec with
-    n_islands>1, backend="islands")`; the engine shares `migrate_ring`."""
-    warnings.warn(
-        "repro.core.islands.run_local is a deprecated entry point; use "
-        "repro.ga.solve(spec with n_islands>1) instead",
-        DeprecationWarning, stacklevel=2)
-    if states is None:
-        states = init_islands_fast(cfg)
-    epoch = make_local_step(cfg, fit, generation_fn)
-    best = None
-    for _ in range(epochs):
-        states, _elite_x, elite_y = epoch(states)
-        e = float(jnp.min(elite_y) if cfg.ga.minimize else jnp.max(elite_y))
-        best = e if best is None else (min(best, e) if cfg.ga.minimize else max(best, e))
-    return states, best

@@ -15,11 +15,16 @@ exchanged):
                                               FFM, vmapped `n_repeats`
     fused          Pallas       single        VMEM-resident state, MXU
                    kernel                     one-hot tournaments;
-                                              bit-identical to reference
+                                              bit-identical to reference;
+                                              `gens_per_epoch` generations
+                                              per launch
     islands        JAX scan     island_ring   ring migration; shard_mapped
                                               over a mesh when given
     fused-islands  Pallas       island_ring   ring migration *between*
-                   kernel                     kernel launches
+                   kernel                     kernel launches; on a mesh,
+                                              one launch per shard with
+                                              `ppermute` migration —
+                                              bit-identical to one device
     eager          python loop  single        non-traceable fitness
                                               (operators stay jitted)
     =============  ===========  ============  ===========================
@@ -38,8 +43,10 @@ Operator stages are pluggable protocols with registries
 :mod:`repro.ga.operators`), chunked streaming + checkpoint/resume live on
 :meth:`Engine.run_chunked`.
 
-Old call sites map onto this API as follows (the old entry points remain as
-thin shims):
+The pre-engine entry points (`core.ga.run`/`run_unjitted`,
+`islands.run_local`/`run_sharded`, `kernels.ops.ga_run_kernel`) have been
+REMOVED after their deprecation cycle — the mapping, for code migrating
+from them:
 
     core.ga.run(cfg, fit, k)            -> solve(spec, backend="reference")
     core.ga.run_unjitted(cfg, fit, k)   -> solve(spec, backend="eager")

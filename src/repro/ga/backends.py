@@ -9,9 +9,12 @@ An **executor** advances a stack of populations a block of generations:
 
   reference  pure-JAX `lax.scan` over the operator pipeline
              (repro.core.ga.run_scan); any registered operators.
-  fused      the Pallas `ga_step` kernel — one launch per generation, the
-             stack rides the kernel grid axis; paper pipeline, arith FFM,
-             power-of-two N <= 1024.  Bit-identical to `reference`.
+  fused      the Pallas `ga_step` kernel — one launch per
+             `spec.gens_per_epoch` generations (default 1), the stack rides
+             the kernel grid axis; paper pipeline, arith FFM, power-of-two
+             N <= 1024.  Bit-identical to `reference` (state and best; the
+             trajectory coarsens to one sample per launch when
+             gens_per_epoch > 1).
 
 A **topology** owns population layout, the epoch loop and migration:
 
@@ -24,13 +27,20 @@ A **topology** owns population layout, the epoch loop and migration:
                *between* executor blocks — i.e. between Pallas kernel
                launches on the fused executor — so any executor composes.
                `n_repeats` replicas are vmapped OUTSIDE the island axis.
+               Given a mesh, the island axis is `shard_map`ped over the
+               mesh axes (`spec.mesh_axes`, default all) with EITHER
+               executor — one kernel launch per shard on fused — and the
+               ring crosses shards via a boundary-elite `ppermute`
+               (`islands.migrate_ring_sharded`), bit-identical to the
+               single-device run; replicas vmap inside each shard.
 
 The registry exposes the compositions under the familiar names:
 
   reference     = reference × single
   fused         = fused     × single
   islands       = reference × island_ring  (shard_mapped when mesh given)
-  fused-islands = fused     × island_ring  (ring migration between launches)
+  fused-islands = fused     × island_ring  (ring migration between launches,
+                                            shard_mapped when mesh given)
   eager         = python-loop driver for non-traceable fitness (no
                   composition — fitness cannot be traced into a block)
 
@@ -74,10 +84,6 @@ class Segment:
     traj_mean: np.ndarray
     gens: int
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
-
-
-def _better_f(minimize: bool):
-    return min if minimize else max
 
 
 def _arg_best(y: np.ndarray, minimize: bool) -> int:
@@ -138,10 +144,13 @@ class Executor:
 
     `block(gens)` returns a traceable function
         states[L, ...] -> (states', best_y[L], best_x[L, V],
-                           traj_best[L, gens], traj_mean[L, gens])
+                           traj_best[L, T], traj_mean[L, T])
     where best_* track the best individual seen across the block and traj_*
-    are per-generation population best/mean (fitness of the pre-update
-    population, so both executors' trajectories align bit-for-bit).
+    are population best/mean per trajectory sample (fitness of the
+    pre-update population, so both executors' trajectories align
+    bit-for-bit).  T is one entry per generation, except the fused executor
+    with `gens_per_epoch > 1` where it is one entry per kernel launch
+    (best_* still fold every generation via the in-kernel best).
     `final_fitness(states)` evaluates the *current* populations ([L, N]) —
     both executors use the same XLA fitness function here, so migration
     decisions are identical whichever executor produced the states.
@@ -205,6 +214,7 @@ class FusedExecutor(Executor):
     def __init__(self, spec: GASpec, *, interpret=None):
         super().__init__(spec, interpret=interpret)
         self.arith = spec.arith_spec()
+        self.gens_per_epoch = spec.gens_per_epoch
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = interpret
@@ -232,35 +242,54 @@ class FusedExecutor(Executor):
     def block(self, gens: int):
         cfg, arith, interp = self.cfg, self.arith, self.interpret
         mini = self.spec.minimize
+        # generations folded inside one launch: the in-kernel best fold
+        # (track_best) keeps best_y/best_x bit-identical to gens_per_epoch=1;
+        # trajectories coarsen to one sample per launch.
+        gpe = max(1, min(self.gens_per_epoch, gens))
+        n_full, rem = divmod(gens, gpe)
 
-        def run_block(states: G.GAState):
-            neutral = jnp.full((states.x.shape[0],),
-                               jnp.inf if mini else -jnp.inf, jnp.float32)
-
+        def launch(g):
             def body(carry, _):
                 x, sel, cross, mut, by, bx = carry
-                x2, sel2, cross2, mut2, y = _ga_step.ga_generation_kernel(
-                    x, sel, cross, mut, cfg=cfg, spec=arith,
-                    interpret=interp)
-                # y is the fitness of x (pre-update) — same convention as
-                # the reference scan, so trajectories align bit-for-bit.
-                idx = (jnp.argmin(y, axis=1) if mini
-                       else jnp.argmax(y, axis=1))
-                ii = jnp.arange(x.shape[0])
-                gen_best = y[ii, idx]
-                better = gen_best < by if mini else gen_best > by
-                by2 = jnp.where(better, gen_best, by)
-                bx2 = jnp.where(better[:, None], x[ii, idx], bx)
+                x2, sel2, cross2, mut2, y, lby, lbx = \
+                    _ga_step.ga_generation_kernel(
+                        x, sel, cross, mut, cfg=cfg, spec=arith,
+                        interpret=interp, gens=g, track_best=True)
+                # lby/lbx fold the best over all g in-kernel generations
+                # with the reference tie rule; the trajectory samples both
+                # come from y — the launch's LAST pre-update population —
+                # so traj_best and traj_mean describe the same window.
+                better = lby < by if mini else lby > by
+                by2 = jnp.where(better, lby, by)
+                bx2 = jnp.where(better[:, None], lbx, bx)
                 carry = (x2, sel2, cross2, mut2, by2, bx2)
+                gen_best = (jnp.min(y, axis=1) if mini
+                            else jnp.max(y, axis=1))
                 return carry, (gen_best, jnp.mean(y, axis=1))
+            return body
 
-            init = (states.x, states.sel_lfsr, states.cross_lfsr,
-                    states.mut_lfsr, neutral,
-                    jnp.zeros((states.x.shape[0], cfg.v), jnp.uint32))
-            (x, sel, cross, mut, by, bx), (tb, tm) = jax.lax.scan(
-                body, init, None, length=gens)
+        def run_block(states: G.GAState):
+            L = states.x.shape[0]
+            neutral = jnp.full((L,), jnp.inf if mini else -jnp.inf,
+                               jnp.float32)
+            carry = (states.x, states.sel_lfsr, states.cross_lfsr,
+                     states.mut_lfsr, neutral,
+                     jnp.zeros((L, cfg.v), jnp.uint32))
+            tbs, tms = [], []
+            if n_full:
+                carry, (tb, tm) = jax.lax.scan(launch(gpe), carry, None,
+                                               length=n_full)
+                tbs.append(tb)
+                tms.append(tm)
+            if rem:
+                carry, (tb1, tm1) = launch(rem)(carry, None)
+                tbs.append(tb1[None])
+                tms.append(tm1[None])
+            x, sel, cross, mut, by, bx = carry
+            tb = jnp.concatenate(tbs, axis=0)    # [launches, L]
+            tm = jnp.concatenate(tms, axis=0)
             state = G.GAState(x, sel, cross, mut, states.k + gens)
-            return state, by, bx, tb.T, tm.T     # traj -> [L, gens]
+            return state, by, bx, tb.T, tm.T     # traj -> [L, launches]
 
         return run_block
 
@@ -274,6 +303,16 @@ EXECUTORS: Dict[str, type] = {
 # ---------------------------------------------------------------------------
 # Topologies — population layout, epoch loop, migration
 # ---------------------------------------------------------------------------
+
+
+def _mesh_axes(spec: GASpec, mesh) -> tuple:
+    """Mesh axes the island axis shards over: `spec.mesh_axes` or all axes
+    of the given mesh (IslandConfig's default names when there is no mesh)."""
+    if spec.mesh_axes is not None:
+        return tuple(spec.mesh_axes)
+    if mesh is not None:
+        return tuple(mesh.axis_names)
+    return ("data", "model")
 
 
 class Topology:
@@ -308,6 +347,10 @@ class SingleTopology(Topology):
         if spec.effective_topology != "single":
             return ("n_islands > 1; use an island_ring backend "
                     "('islands' / 'fused-islands')")
+        if mesh is not None:
+            return ("single topology would silently ignore the mesh; "
+                    "shard over devices with an island_ring backend "
+                    "(n_islands > 1)")
         return None
 
     def init(self):
@@ -348,91 +391,131 @@ class SingleTopology(Topology):
 
 class IslandRingTopology(Topology):
     """`n_islands` populations with ring migration every `migrate_every`
-    generations.  Locally the epoch is [executor block → final fitness →
-    `islands.migrate_ring`] in one jit; `n_repeats` replicas are stacked
-    OUTSIDE the island axis ([R, I, ...]) and flattened to the executor's
-    single stack axis, so every executor (including the Pallas kernel, whose
-    grid is that axis) composes.  With a mesh, the reference-executor epoch
-    is shard_mapped with `lax.ppermute` migration (repro.core.islands)."""
+    generations.  The epoch is [executor block → final fitness → ring
+    migration] in one jit; `n_repeats` replicas are stacked OUTSIDE the
+    island axis ([R, I, ...]) and flattened to the executor's single stack
+    axis, so every executor (including the Pallas kernel, whose grid is that
+    axis) composes.
+
+    With a mesh, the SAME epoch is `shard_map`ped: the island axis is
+    sharded over the mesh axes (`spec.mesh_axes`, default all), each shard
+    runs its executor block — one Pallas kernel launch per shard on the
+    fused executor — and migration becomes `islands.migrate_ring_sharded`
+    (boundary-elite `lax.ppermute` between launches), which is bit-identical
+    to the single-device `jnp.roll` ring.  Replicas vmap inside each shard,
+    so `n_repeats > 1` and `migration='none'` compose with the mesh too."""
 
     name = "island_ring"
 
     def __init__(self, spec: GASpec, executor: Executor, *, mesh=None):
         super().__init__(spec, executor, mesh=mesh)
+        axis_names = _mesh_axes(spec, mesh)
+        self.n_shards = (int(np.prod([mesh.shape[a] for a in axis_names]))
+                         if mesh is not None else 1)
         self.icfg = ISL.IslandConfig(ga=self.cfg,
                                      n_islands=spec.n_islands,
-                                     migrate_every=spec.migrate_every)
+                                     migrate_every=spec.migrate_every,
+                                     axis_names=axis_names)
 
     @staticmethod
     def supports(spec: GASpec, mesh, executor_cls) -> Optional[str]:
         if spec.topology == "single":
             return "spec pins topology='single'; use a single backend"
         if mesh is not None:
-            if executor_cls is not ReferenceExecutor:
-                return ("mesh-sharded islands run on the reference executor "
-                        "only (the Pallas kernel launch is host-local)")
-            if spec.n_repeats > 1:
-                return "n_repeats > 1 is not supported on mesh-sharded islands"
-            if spec.migration == "none":
-                return "migration='none' is not supported on the sharded path"
+            axes = _mesh_axes(spec, mesh)
+            missing = [a for a in axes if a not in mesh.shape]
+            if missing:
+                return (f"mesh_axes {missing} not in the mesh "
+                        f"(axes: {tuple(mesh.axis_names)})")
+            n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+            if spec.n_islands % n_shards:
+                return (f"n_islands={spec.n_islands} must divide evenly over "
+                        f"the {n_shards} mesh shard(s)")
         return None
 
     def init(self):
         if self.spec.n_repeats > 1:
-            return _stack_island_replicas(self.icfg, self.spec.n_repeats)
-        states = ISL.init_islands_fast(self.icfg)
+            states = _stack_island_replicas(self.icfg, self.spec.n_repeats)
+            lead = 1
+        else:
+            states = ISL.init_islands_fast(self.icfg)
+            lead = 0
         if self.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
             axes = self.icfg.axis_names
             states = jax.tree.map(
                 lambda x: jax.device_put(x, NamedSharding(
-                    self.mesh, P(axes, *([None] * (x.ndim - 1))))), states)
+                    self.mesh, P(*([None] * lead), axes,
+                                 *([None] * (x.ndim - 1 - lead))))), states)
         return states
-
-    # -- local (vmap) path --------------------------------------------------
 
     def _epoch(self):
         """Jitted epoch over the canonical state layout ([I,...] or
         [R, I, ...]); returns (state', by, bx, tb, tm) with by/bx/tb/tm in
-        [R, I, ...] layout (leading R axis only when n_repeats > 1)."""
+        [R, I, ...] layout (leading R axis only when n_repeats > 1).  On a
+        mesh the epoch body is shard_mapped over the island axis — the body
+        sees [R?, I/n_shards, ...] blocks and the ring crosses shards via
+        `ppermute`; telemetry comes back as the same global arrays."""
         if "epoch" in self._cache:
             return self._cache["epoch"]
         E = self.icfg.migrate_every
-        R, I = self.spec.n_repeats, self.spec.n_islands
+        R = self.spec.n_repeats
         mini = self.spec.minimize
         migrate = self.spec.migration == "ring"
+        mesh, axes = self.mesh, self.icfg.axis_names
         blk = self.executor.block(E)
         fit_stack = self.executor.final_fitness
 
-        def one(states):                       # states: [I, ...]
+        if mesh is None:
+            mig = lambda s, yy: ISL.migrate_ring(s, yy, minimize=mini)
+        else:
+            mig = lambda s, yy: ISL.migrate_ring_sharded(
+                s, yy, minimize=mini, mesh=mesh, axis_names=axes)
+
+        def one(states):                       # states: [I(_loc), ...]
             states, by, bx, tb, tm = blk(states)
             if migrate:
-                y = fit_stack(states)          # [I, N]
-                states, _ex, _ey = ISL.migrate_ring(states, y, minimize=mini)
+                y = fit_stack(states)          # [I(_loc), N]
+                states, _ex, _ey = mig(states, y)
             return states, by, bx, tb, tm
 
         if R == 1:
             epoch = one
         else:
-            def epoch(states):                 # states: [R, I, ...]
+            def epoch(states):                 # states: [R, I(_loc), ...]
+                il = states.x.shape[1]
                 flat = jax.tree.map(
-                    lambda a: a.reshape((R * I,) + a.shape[2:]), states)
+                    lambda a: a.reshape((R * il,) + a.shape[2:]), states)
                 flat, by, bx, tb, tm = blk(flat)
                 states = jax.tree.map(
-                    lambda a: a.reshape((R, I) + a.shape[1:]), flat)
+                    lambda a: a.reshape((R, il) + a.shape[1:]), flat)
                 if migrate:
-                    y = jax.vmap(fit_stack)(states)        # [R, I, N]
-                    states, _ex, _ey = jax.vmap(
-                        lambda s, yy: ISL.migrate_ring(s, yy, minimize=mini)
-                    )(states, y)
-                return (states, by.reshape(R, I), bx.reshape((R, I) + bx.shape[1:]),
-                        tb.reshape((R, I) + tb.shape[1:]),
-                        tm.reshape((R, I) + tm.shape[1:]))
+                    y = jax.vmap(fit_stack)(states)        # [R, I_loc, N]
+                    states, _ex, _ey = jax.vmap(mig)(states, y)
+                return (states, by.reshape(R, il),
+                        bx.reshape((R, il) + bx.shape[1:]),
+                        tb.reshape((R, il) + tb.shape[1:]),
+                        tm.reshape((R, il) + tm.shape[1:]))
+
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as P
+            from repro.sharding import shard_map
+            lead = () if R == 1 else (None,)
+
+            def pfor(extra):   # island axis sharded, `extra` trailing dims
+                return P(*lead, axes, *([None] * extra))
+
+            state_specs = G.GAState(x=pfor(2), sel_lfsr=pfor(2),
+                                    cross_lfsr=pfor(2), mut_lfsr=pfor(2),
+                                    k=pfor(0))
+            epoch = shard_map(
+                epoch, mesh, in_specs=(state_specs,),
+                out_specs=(state_specs, pfor(0), pfor(1), pfor(1), pfor(1)))
 
         self._cache["epoch"] = jax.jit(epoch)
         return self._cache["epoch"]
 
-    def _segment_local(self, state, gens: int) -> Segment:
+    def segment(self, state, gens: int) -> Segment:
         E = self.icfg.migrate_every
         epochs = max(1, math.ceil(gens / E))
         R = self.spec.n_repeats
@@ -458,47 +541,16 @@ class IslandRingTopology(Topology):
         r = _arg_best(rep_y, mini)
         extras = {"telemetry_unit_gens": E,
                   "n_islands": self.icfg.n_islands,
+                  "n_shards": self.n_shards,
                   "migrations": epochs if self.spec.migration == "ring" else 0}
+        if self.mesh is not None:
+            extras["sharded"] = True
         if R > 1:
             extras["per_repeat_best"] = rep_y
         return Segment(state=state, best_y=float(rep_y[r]),
                        best_x=rep_x[r],
                        traj_best=np.asarray(tb_ep), traj_mean=np.asarray(tm_ep),
                        gens=epochs * E, extras=extras)
-
-    # -- mesh (shard_map + ppermute) path ------------------------------------
-
-    def _segment_sharded(self, state, gens: int) -> Segment:
-        if "sharded" not in self._cache:
-            gen_fn = getattr(self.executor, "gen_fn", None)
-            self._cache["sharded"] = ISL.make_sharded_step(
-                self.icfg, self.executor.fit, self.mesh, gen_fn)
-        step = self._cache["sharded"]
-        epochs = max(1, math.ceil(gens / self.icfg.migrate_every))
-        mini = self.spec.minimize
-        better = _better_f(mini)
-        best_y, best_x = None, None
-        tb, tm = [], []
-        for _ in range(epochs):
-            state, elite_x, elite_y = step(state)
-            ey = np.asarray(elite_y)
-            i = _arg_best(ey, mini)
-            if best_y is None or better(ey[i], best_y) == ey[i]:
-                best_y, best_x = float(ey[i]), np.asarray(elite_x)[i]
-            tb.append(float(ey[i]))
-            tm.append(float(ey.mean()))
-        return Segment(state=state, best_y=best_y, best_x=best_x,
-                       traj_best=np.asarray(tb), traj_mean=np.asarray(tm),
-                       gens=epochs * self.icfg.migrate_every,
-                       extras={"telemetry_unit_gens": self.icfg.migrate_every,
-                               "n_islands": self.icfg.n_islands,
-                               "migrations": epochs,
-                               "sharded": True})
-
-    def segment(self, state, gens: int) -> Segment:
-        if self.mesh is not None:
-            return self._segment_sharded(state, gens)
-        return self._segment_local(state, gens)
 
 
 TOPOLOGIES: Dict[str, type] = {
@@ -574,6 +626,9 @@ class EagerBackend(Backend):
     def supports(spec: GASpec, mesh=None) -> Optional[str]:
         if spec.effective_topology != "single":
             return "eager driver has no migration; use an island_ring backend"
+        if mesh is not None:
+            return ("eager driver is host-local and would silently ignore "
+                    "the mesh; use an island_ring backend (n_islands > 1)")
         return None
 
     def init(self):

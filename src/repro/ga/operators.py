@@ -158,8 +158,8 @@ def make_generation(selection: str = "tournament",
                     crossover: str = "single_point",
                     mutation: str = "xor") -> Callable:
     """Build a ``generation_fn(state, cfg, fit) -> (state', y)`` from named
-    operators — drop-in for `repro.core.ga.generation` in `G.run`,
-    `islands.run_local` / `run_sharded`, and the engine backends."""
+    operators — drop-in for `repro.core.ga.generation` in `G.run_scan`,
+    `islands.make_local_step`, and the engine backends."""
     sel, cx, mu = resolve(selection, crossover, mutation)
     if (selection, crossover, mutation) == PAPER_PIPELINE:
         return G.generation   # identical pipeline; keep the core fast path

@@ -56,6 +56,12 @@ class GASpec:
     n_islands: int = 1             # >1 -> island model with migration
     migrate_every: int = 16
     jit_fitness: bool = True       # False -> fitness not traceable (eager)
+    # generations folded INSIDE one Pallas launch (fused executors): >1
+    # amortizes launch overhead at small migrate_every.  Population/LFSR
+    # state and the running best individual stay bit-identical to
+    # gens_per_epoch=1; only the best/mean trajectory coarsens to one
+    # sample per launch.  Ignored by the reference/eager executors.
+    gens_per_epoch: int = 1
 
     # ---- topology (how populations are arranged + exchanged) ------------
     # None/"auto" derives from n_islands; "single" pins one population
@@ -64,6 +70,9 @@ class GASpec:
     # "ring" (the [19] elite ring) or "none" (isolated islands ablation).
     topology: Optional[str] = None
     migration: str = "ring"
+    # mesh policy: which mesh axes the island axis shards over when a mesh
+    # is passed to the Engine.  None -> all axes of the given mesh.
+    mesh_axes: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         if (self.problem is None) == (self.fitness is None):
@@ -83,7 +92,7 @@ class GASpec:
         OPS.resolve(self.selection, self.crossover, self.mutation)
         for field, lo in (("n", 2), ("bits_per_var", 1), ("generations", 1),
                           ("n_repeats", 1), ("n_islands", 1),
-                          ("migrate_every", 1)):
+                          ("migrate_every", 1), ("gens_per_epoch", 1)):
             if getattr(self, field) < lo:
                 raise ValueError(f"{field} must be >= {lo}")
         if self.topology == "auto":
@@ -100,6 +109,13 @@ class GASpec:
         if self.migration not in ("ring", "none"):
             raise ValueError(f"migration must be 'ring' or 'none', "
                              f"got {self.migration!r}")
+        if self.mesh_axes is not None:
+            if (not self.mesh_axes
+                    or not all(isinstance(a, str) and a
+                               for a in self.mesh_axes)):
+                raise ValueError("mesh_axes must be a non-empty tuple of "
+                                 f"axis names, got {self.mesh_axes!r}")
+            object.__setattr__(self, "mesh_axes", tuple(self.mesh_axes))
 
     # ---- derived --------------------------------------------------------
 

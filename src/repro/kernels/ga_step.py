@@ -58,31 +58,62 @@ def _onehot_gather_u32(oh: jax.Array, x: jax.Array) -> jax.Array:
     return (ghi.astype(jnp.uint32) << 16) | glo.astype(jnp.uint32)
 
 
-def _kernel(x_ref, sel_ref, cross_ref, mut_ref,          # inputs
-            x_out, sel_out, cross_out, mut_out, y_out,   # outputs
-            *, cfg: GAConfig, spec: ArithSpec, gens: int = 1):
+def _gen_best(x, y, cfg: GAConfig):
+    """First-occurrence generation best — the reference scan's argmin/argmax
+    tie rule, expressed MXU-style: the index is a min-reduction over a masked
+    iota (no dynamic gather), the chromosome a one-hot matmul gather."""
+    m = jnp.min(y) if cfg.minimize else jnp.max(y)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (cfg.n,), 0)
+    idx = jnp.min(jnp.where(y == m, iota, cfg.n))
+    oh = (iota == idx).astype(jnp.float32)[None, :]          # (1, N)
+    return m, _onehot_gather_u32(oh, x)[0]                   # (V,)
+
+
+def _kernel(x_ref, sel_ref, cross_ref, mut_ref,              # inputs
+            *out_refs,                                       # outputs
+            cfg: GAConfig, spec: ArithSpec, gens: int = 1,
+            track_best: bool = False):
     """One or MANY generations per launch.
 
     gens > 1 is the VMEM-residency optimization (EXPERIMENTS.md §Perf GA
     iter 2): the FPGA keeps population + LFSRs in registers between clock
     beats; we keep them in VMEM between generations, so HBM sees one state
-    read + one write per `gens` generations instead of per generation."""
-    if gens > 1:
-        def body(_, carry):
-            return _one_generation(*carry, cfg=cfg, spec=spec)
+    read + one write per `gens` generations instead of per generation.
 
-        x, sel, cross, mut, y = jax.lax.fori_loop(
-            0, gens, body,
-            (x_ref[0], sel_ref[0], cross_ref[0], mut_ref[0],
-             jnp.zeros((cfg.n,), jnp.float32)))
-        x_out[0], sel_out[0], cross_out[0], mut_out[0], y_out[0] = \
-            x, sel, cross, mut, y
-        return
-    x, sel, cross, mut, y = _one_generation(
-        x_ref[0], sel_ref[0], cross_ref[0], mut_ref[0],
-        jnp.zeros((cfg.n,), jnp.float32), cfg=cfg, spec=spec)
-    x_out[0], sel_out[0], cross_out[0], mut_out[0], y_out[0] = \
-        x, sel, cross, mut, y
+    track_best=True adds two outputs (best_y, best_x) folding the running
+    best individual *inside* the launch with the reference scan's strict
+    improvement + first-occurrence tie rule — so a gens>1 launch loses no
+    best-tracking fidelity, only per-generation trajectory resolution
+    (y_out is the fitness of the LAST pre-update population)."""
+    if track_best:
+        x_out, sel_out, cross_out, mut_out, y_out, by_out, bx_out = out_refs
+    else:
+        x_out, sel_out, cross_out, mut_out, y_out = out_refs
+
+    def step(carry):
+        x, sel, cross, mut, y = carry[:5]
+        out = _one_generation(x, sel, cross, mut, y, cfg=cfg, spec=spec)
+        if track_best:
+            by, bx = carry[5], carry[6]
+            y2 = out[4]
+            gb, gx = _gen_best(x, y2, cfg)   # y2 scores x (pre-update)
+            better = gb < by if cfg.minimize else gb > by
+            out = out + (jnp.where(better, gb, by),
+                         jnp.where(better, gx, bx))
+        return out
+
+    init = (x_ref[0], sel_ref[0], cross_ref[0], mut_ref[0],
+            jnp.zeros((cfg.n,), jnp.float32))
+    if track_best:
+        init = init + (jnp.float32(jnp.inf if cfg.minimize else -jnp.inf),
+                       jnp.zeros((cfg.v,), jnp.uint32))
+    if gens > 1:
+        final = jax.lax.fori_loop(0, gens, lambda _, c: step(c), init)
+    else:
+        final = step(init)
+    x_out[0], sel_out[0], cross_out[0], mut_out[0], y_out[0] = final[:5]
+    if track_best:
+        by_out[0], bx_out[0] = final[5], final[6]
 
 
 def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
@@ -136,13 +167,15 @@ def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
 
 def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
                          spec: ArithSpec, interpret: bool = False,
-                         gens: int = 1
-                         ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+                         gens: int = 1, track_best: bool = False
+                         ) -> Tuple[jax.Array, ...]:
     """Launch the fused generation(s) over a stack of islands.
 
     x: uint32[I, N, V]; sel: uint32[I, 2, N]; cross: uint32[I, V, N//2];
     mut: uint32[I, V, N].  Returns (x', sel', cross', mut', y[I, N]).
     gens: generations per launch (VMEM-resident state between them).
+    track_best appends (best_y[I], best_x[I, V]) — the running best over all
+    `gens` in-kernel generations, reference tie rule (see `_kernel`).
     """
     assert cfg.n & (cfg.n - 1) == 0, "kernel path requires power-of-two N"
     assert cfg.n <= 1024, "one-hot (N,N) must fit VMEM; use islands for more"
@@ -151,18 +184,25 @@ def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
 
     blk = lambda *shape: pl.BlockSpec((1,) + shape, lambda i: (i,) + (0,) * len(shape))
     grid = (i_islands,)
-    kernel = functools.partial(_kernel, cfg=cfg, spec=spec, gens=gens)
+    kernel = functools.partial(_kernel, cfg=cfg, spec=spec, gens=gens,
+                               track_best=track_best)
+    out_specs = [blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n), blk(n)]
+    out_shape = [
+        jax.ShapeDtypeStruct((i_islands, n, v), jnp.uint32),
+        jax.ShapeDtypeStruct((i_islands, 2, n), jnp.uint32),
+        jax.ShapeDtypeStruct((i_islands, v, n // 2), jnp.uint32),
+        jax.ShapeDtypeStruct((i_islands, v, n), jnp.uint32),
+        jax.ShapeDtypeStruct((i_islands, n), jnp.float32),
+    ]
+    if track_best:
+        out_specs += [blk(), blk(v)]
+        out_shape += [jax.ShapeDtypeStruct((i_islands,), jnp.float32),
+                      jax.ShapeDtypeStruct((i_islands, v), jnp.uint32)]
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n)],
-        out_specs=[blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n), blk(n)],
-        out_shape=[
-            jax.ShapeDtypeStruct((i_islands, n, v), jnp.uint32),
-            jax.ShapeDtypeStruct((i_islands, 2, n), jnp.uint32),
-            jax.ShapeDtypeStruct((i_islands, v, n // 2), jnp.uint32),
-            jax.ShapeDtypeStruct((i_islands, v, n), jnp.uint32),
-            jax.ShapeDtypeStruct((i_islands, n), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(x, sel, cross, mut)

@@ -8,14 +8,12 @@ Mosaic.  `interpret` is auto-detected from the backend unless forced.
 from __future__ import annotations
 
 import functools
-import warnings
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.fitness import ArithSpec
-from repro.core.ga import GAConfig, GAState
+from repro.core.ga import GAConfig
 from repro.kernels import ga_step as _ga_step
 from repro.kernels import lfsr_kernel as _lfsr
 
@@ -34,45 +32,14 @@ def lfsr_advance(state: jax.Array, steps: int,
 
 
 def ga_generation(x, sel, cross, mut, *, cfg: GAConfig, spec: ArithSpec,
-                  interpret: Optional[bool] = None, gens: int = 1):
+                  interpret: Optional[bool] = None, gens: int = 1,
+                  track_best: bool = False):
     """Fused GA generation(s) over islands. See kernels/ga_step.py.
-    gens > 1 keeps the GA state VMEM-resident between generations."""
+    gens > 1 keeps the GA state VMEM-resident between generations;
+    track_best=True appends in-kernel (best_y[I], best_x[I, V]) outputs."""
     fn = functools.partial(_ga_step.ga_generation_kernel, cfg=cfg, spec=spec,
-                           interpret=_auto_interpret(interpret), gens=gens)
+                           interpret=_auto_interpret(interpret), gens=gens,
+                           track_best=track_best)
     return jax.jit(fn)(x, sel, cross, mut)
 
 
-def ga_run_kernel(states: GAState, k_generations: int, *, cfg: GAConfig,
-                  spec: ArithSpec, interpret: Optional[bool] = None):
-    """Scan the fused kernel K generations over stacked islands.
-
-    states: island-stacked GAState (leading dim I). Returns
-    (final states, best_y[I] over the run).
-
-    Deprecated entry-point shim — use `repro.ga.solve(spec,
-    backend="fused")` (or "fused-islands" for migrating islands).
-    """
-    warnings.warn(
-        "repro.kernels.ops.ga_run_kernel is a deprecated entry point; use "
-        "repro.ga.solve(spec, backend='fused') instead",
-        DeprecationWarning, stacklevel=2)
-    interp = _auto_interpret(interpret)
-
-    @jax.jit
-    def go(states):
-        def body(carry, _):
-            x, sel, cross, mut, best = carry
-            x2, sel2, cross2, mut2, y = _ga_step.ga_generation_kernel(
-                x, sel, cross, mut, cfg=cfg, spec=spec, interpret=interp)
-            gb = jnp.min(y, axis=1) if cfg.minimize else jnp.max(y, axis=1)
-            best = jnp.minimum(best, gb) if cfg.minimize else jnp.maximum(best, gb)
-            return (x2, sel2, cross2, mut2, best), None
-
-        i = states.x.shape[0]
-        neutral = jnp.full((i,), jnp.inf if cfg.minimize else -jnp.inf, jnp.float32)
-        init = (states.x, states.sel_lfsr, states.cross_lfsr, states.mut_lfsr, neutral)
-        (x, sel, cross, mut, best), _ = jax.lax.scan(
-            body, init, None, length=k_generations)
-        return GAState(x, sel, cross, mut, states.k + k_generations), best
-
-    return go(states)

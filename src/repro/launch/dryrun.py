@@ -173,20 +173,22 @@ def _save(rec: Dict, out_dir: str):
 
 def run_ga_cell(mesh_name: str, out_dir: str = RESULTS_DIR,
                 islands_per_device: int = 8, n: int = 256) -> Dict:
-    from repro.core import fitness as F
     from repro.core import ga as G
-    from repro.core import islands as ISL
+    from repro import ga as engine_api
 
     mesh = make_production_mesh(**MESHES[mesh_name])
     n_dev = int(np.prod(list(mesh.shape.values())))
     axes = tuple(mesh.axis_names)
-    cfg = G.GAConfig(n=n, c=14, v=2, mutation_rate=0.02, seed=1, mode="arith")
-    icfg = ISL.IslandConfig(ga=cfg, n_islands=islands_per_device * n_dev,
-                            migrate_every=16, axis_names=axes)
-    fit = G.make_arith_fitness(F.ArithSpec.for_problem(F.F3), cfg.c)
+    spec = engine_api.GASpec(
+        problem="F3", n=n, bits_per_var=14, n_vars=2, mode="arith",
+        mutation_rate=0.02, seed=1, migrate_every=16,
+        n_islands=islands_per_device * n_dev)
+    eng = engine_api.Engine(spec, "islands", mesh=mesh)
+    cfg = spec.ga_config()
+    icfg = eng.backend.topology.icfg
 
     t0 = time.time()
-    step = ISL.make_sharded_step(icfg, fit, mesh)
+    step = eng.backend.topology._epoch()
 
     def sds(shape, dtype=jnp.uint32):
         return jax.ShapeDtypeStruct(

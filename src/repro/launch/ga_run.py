@@ -7,12 +7,17 @@
         --backend fused-islands --topology island_ring
     PYTHONPATH=src python -m repro.launch.ga_run --selection roulette \
         --backend reference --repeats 8
+    PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --islands 8 \
+        --backend fused-islands --mesh auto --gens-per-epoch 4
 
 Any registered backend (reference | fused | islands | fused-islands | eager
 | auto — each a topology × executor composition) and any registered
 selection scheme work from one spec; `--topology` pins the population
-layout explicitly; `--kernel` is kept as a deprecated alias for
-`--backend fused`.
+layout explicitly; `--mesh` shards the island axis over devices ("auto",
+"4", "2x4", ... — see repro.launch.mesh.parse_mesh) with `lax.ppermute`
+ring migration, bit-identical to the single-device run; `--gens-per-epoch`
+folds generations inside one Pallas launch on the fused executors;
+`--kernel` is kept as a deprecated alias for `--backend fused`.
 """
 
 from __future__ import annotations
@@ -47,6 +52,12 @@ def main():
     ap.add_argument("--migrate-every", type=int, default=16)
     ap.add_argument("--repeats", type=int, default=1,
                     help="independent replicas vmapped into one run")
+    ap.add_argument("--mesh", default=None,
+                    help="shard the island axis over devices: 'auto' (all), "
+                         "'4', '2x4', ... (repro.launch.mesh.parse_mesh)")
+    ap.add_argument("--gens-per-epoch", type=int, default=1,
+                    help=">1 folds generations inside one Pallas launch "
+                         "(fused executors; amortizes launch overhead)")
     ap.add_argument("--kernel", action="store_true",
                     help="deprecated: same as --backend fused")
     ap.add_argument("--chunk", type=int, default=0,
@@ -71,12 +82,19 @@ def main():
                          generations=args.k, n_islands=n_islands,
                          migrate_every=args.migrate_every,
                          n_repeats=args.repeats, selection=args.selection,
+                         gens_per_epoch=args.gens_per_epoch,
                          topology=None if args.topology == "auto"
                          else args.topology,
                          migration=args.migration)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh
+        mesh = parse_mesh(args.mesh)
+        print(f"mesh: {dict(mesh.shape)} ({mesh.devices.size} device(s))")
+
     if args.chunk > 0:
-        eng = ga.Engine(spec, backend)
+        eng = ga.Engine(spec, backend, mesh=mesh)
         last = None
         for tele in eng.run_chunked(chunk_generations=args.chunk,
                                     ckpt_dir=args.ckpt_dir):
@@ -90,11 +108,14 @@ def main():
             print(f"decoded vars: {np.round(last['best_params'], 4)}")
         return
 
-    out = ga.solve(spec, backend=backend)
+    out = ga.solve(spec, backend=backend, mesh=mesh)
     exec_name = out.extras.get("executor")
     topo_name = out.extras.get("topology")
     comp = f" ({exec_name} x {topo_name})" if exec_name and topo_name else ""
     print(f"backend: {out.backend}{comp}")
+    if out.extras.get("sharded"):
+        print(f"shards: {out.extras['n_shards']} "
+              f"({spec.n_islands // out.extras['n_shards']} island(s) each)")
     if out.extras.get("migrations"):
         print(f"migrations: {out.extras['migrations']}")
     print(f"best fitness: {out.best_fitness:.4f}")

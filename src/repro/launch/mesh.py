@@ -12,6 +12,7 @@ device state (the dry-run sets XLA_FLAGS before any jax init).
 from __future__ import annotations
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 
@@ -25,6 +26,38 @@ def make_host_mesh() -> Mesh:
     """Whatever devices exist, as a 1×N (data, model) mesh — for tests."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_island_mesh(n_devices: int | None = None) -> Mesh:
+    """A 1-D ("islands",) mesh over the first `n_devices` devices (default
+    all) — the natural layout for sharding a GA island axis."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if n > len(devs):
+        raise ValueError(f"asked for {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]), ("islands",))
+
+
+_MESH_AXIS_NAMES = {1: ("islands",), 2: ("data", "model"),
+                    3: ("pod", "data", "model")}
+
+
+def parse_mesh(spec: str) -> Mesh:
+    """CLI mesh syntax -> Mesh.
+
+    "auto"/"host"  all local devices as a 1-D ("islands",) mesh
+    "4"            first 4 devices, 1-D ("islands",)
+    "2x4"          (data=2, model=4);  "2x2x4" adds a leading "pod" axis
+    """
+    s = spec.strip().lower()
+    if s in ("auto", "host"):
+        return make_island_mesh()
+    dims = tuple(int(d) for d in s.split("x"))
+    if len(dims) == 1:
+        return make_island_mesh(dims[0])
+    if len(dims) not in _MESH_AXIS_NAMES:
+        raise ValueError(f"mesh spec {spec!r}: want N, NxM or NxMxK")
+    return jax.make_mesh(dims, _MESH_AXIS_NAMES[len(dims)])
 
 
 # TPU v5e hardware model used by the roofline (per chip).

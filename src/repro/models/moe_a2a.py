@@ -31,7 +31,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
+from repro.sharding import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models import common as C
@@ -140,10 +140,9 @@ def moe_a2a_forward(p, x: jax.Array, cfg: MoEConfig, mesh: Mesh,
 
     e_spec = P(ep_axis, None, None)
     out = shard_map(
-        inner, mesh=mesh,
+        inner, mesh,
         in_specs=(P(dp_axis, None, None), P(), e_spec, e_spec,
                   P(ep_axis, None, None)),
         out_specs=P(dp_axis, None, None),
-        check_rep=False,
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     return out

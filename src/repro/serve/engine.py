@@ -146,12 +146,20 @@ class GAJobStats:
     best_fitness: Optional[float] = None
     best_trajectory: List[float] = dataclasses.field(default_factory=list)
     migrations: int = 0
+    islands: int = 1                 # populations evolving concurrently
+    shards: int = 1                  # mesh shards the island axis spans
     wall_s: float = 0.0
     error: Optional[str] = None
 
     @property
     def gens_per_s(self) -> float:
         return self.gens_done / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def gens_per_s_per_shard(self) -> float:
+        """Island-generations/s each mesh shard contributes (the scaling
+        headline: flat per-shard throughput == linear total speedup)."""
+        return self.gens_per_s * self.islands / max(self.shards, 1)
 
     def as_metrics(self) -> Dict[str, Any]:
         """Flat dict the /metrics endpoint of a GA job would serialize."""
@@ -163,6 +171,9 @@ class GAJobStats:
             "generations_total": self.gens_total,
             "chunks": self.chunks,
             "generations_per_s": round(self.gens_per_s, 2),
+            "islands": self.islands,
+            "shards": self.shards,
+            "generations_per_s_per_shard": round(self.gens_per_s_per_shard, 2),
             "best_fitness": self.best_fitness,
             "best_fitness_trajectory": list(self.best_trajectory),
             "migration_count": self.migrations,
@@ -209,6 +220,9 @@ class GAMetricsRegistry:
             job.chunks += 1
             job.wall_s += float(tele.get("wall_s", 0.0))
             job.migrations = int(tele.get("migrations", job.migrations))
+            extras = tele.get("extras", {})
+            job.islands = int(extras.get("n_islands", job.islands))
+            job.shards = int(extras.get("n_shards", job.shards))
             bf = tele.get("best_fitness")
             if bf is not None:
                 job.best_fitness = float(bf)

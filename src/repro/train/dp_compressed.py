@@ -19,7 +19,7 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
+from repro.sharding import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -57,14 +57,13 @@ def make_compressed_dp_step(cfg: ModelConfig, mesh: Mesh,
         replicated = P()
         batch_spec = jax.tree.map(lambda _: P(dp_axes), batch)
         sharded = shard_map(
-            inner, mesh=mesh,
+            inner, mesh,
             in_specs=(jax.tree.map(lambda _: replicated, params),
                       jax.tree.map(lambda _: replicated, residual),
                       batch_spec),
             out_specs=(replicated,
                        jax.tree.map(lambda _: replicated, params),
-                       jax.tree.map(lambda _: replicated, residual)),
-            check_rep=False)
+                       jax.tree.map(lambda _: replicated, residual)))
         loss, grads, residual = sharded(params, residual, batch)
         params, opt_state, om = OPT.update(params, grads, opt_state, opt_cfg)
         return params, opt_state, residual, {"loss": loss, **om}

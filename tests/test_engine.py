@@ -230,12 +230,19 @@ def test_lut_fixed_point_descaled():
     assert r.best_params[1] == pytest.approx(-4096.0, abs=2.0)
 
 
-def test_old_entry_point_shim_matches_engine():
-    """G.run (old API) warns but still agrees with ga.solve (new API)."""
+def test_deprecated_entry_points_folded():
+    """Deprecation clock part 2: the old shim drivers are gone — the engine
+    is the only entry point — while the engine-internal building blocks
+    (`run_scan`) still agree with `ga.solve` bit-for-bit."""
+    from repro.core import islands as ISL
+    from repro.kernels import ops
+    for mod, name in ((G, "run"), (G, "run_unjitted"),
+                      (ISL, "run_local"), (ISL, "run_sharded"),
+                      (ops, "ga_run_kernel")):
+        assert not hasattr(mod, name), f"{mod.__name__}.{name} should be gone"
+
     spec = _spec(generations=30)
-    cfg = spec.ga_config()
-    with pytest.warns(DeprecationWarning, match="deprecated entry point"):
-        old = G.run(cfg, spec.fitness_fn(), 30)
+    old = G.run_scan(spec.ga_config(), spec.fitness_fn(), 30)
     new = ga.solve(spec, backend="reference")
     assert float(old.best_y) == new.best_fitness
     np.testing.assert_array_equal(np.asarray(old.best_x), new.best_x)

@@ -62,14 +62,47 @@ def test_ga_step_minimize_maximize(minimize):
 
 
 def test_ga_kernel_multi_generation_converges():
+    """One launch, 100 in-kernel generations (gens>1 VMEM residency), with
+    the in-kernel best fold — converges near the F3 optimum."""
     cfg = G.GAConfig(n=64, c=10, v=2, mutation_rate=0.05, seed=11, mode="arith")
     spec = F.ArithSpec.for_problem(F.F3)
     st = _states(cfg, n_islands=4)
-    # ga_run_kernel is a deprecated entry-point shim (the engine's
-    # fused executor replaced it) but must keep working until removed
-    with pytest.warns(DeprecationWarning, match="deprecated entry point"):
-        st2, best = ops.ga_run_kernel(st, 100, cfg=cfg, spec=spec)
-    assert float(jnp.min(best)) < 1.0  # near the F3 optimum
+    out = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+                            cfg=cfg, spec=spec, gens=100, track_best=True)
+    best_y = out[5]
+    assert best_y.shape == (4,)
+    assert float(jnp.min(best_y)) < 1.0  # near the F3 optimum
+
+
+@pytest.mark.parametrize("gens", [1, 7])
+def test_ga_kernel_track_best_matches_oracle(gens):
+    """track_best folds the running best inside the kernel with the
+    reference argmin tie rule: re-running generation by generation and
+    folding outside must give bit-identical (best_y, best_x)."""
+    cfg = G.GAConfig(n=32, c=10, v=2, mutation_rate=0.05, seed=3, mode="arith")
+    spec = F.ArithSpec.for_problem(F.F1)
+    st = _states(cfg, n_islands=3)
+    out = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+                            cfg=cfg, spec=spec, gens=gens, track_best=True)
+    by_k, bx_k = np.asarray(out[5]), np.asarray(out[6])
+
+    x, sel, cross, mut = st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr
+    by = np.full((3,), np.inf, np.float32)
+    bx = np.zeros((3, cfg.v), np.uint32)
+    for _ in range(gens):
+        x2, sel, cross, mut, y = ops.ga_generation(x, sel, cross, mut,
+                                                   cfg=cfg, spec=spec)
+        y = np.asarray(y)
+        idx = np.argmin(y, axis=1)
+        gb = y[np.arange(3), idx]
+        better = gb < by
+        by = np.where(better, gb, by)
+        bx = np.where(better[:, None], np.asarray(x)[np.arange(3), idx], bx)
+        x = x2
+    np.testing.assert_array_equal(by_k, by)
+    np.testing.assert_array_equal(bx_k, bx)
+    # and the state outputs are unchanged by the extra best outputs
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(x))
 
 
 @pytest.mark.parametrize("shape", [(7,), (128,), (3, 5), (2, 130)])

@@ -3,7 +3,8 @@ reproduces the paper's optimisation results; the island model scales it; the
 multi-device shard_map path works (spawned with fake devices).
 
 All GA runs go through the unified `repro.ga` engine API (the old
-`G.run` / `ISL.run_local` drivers are deprecated shims)."""
+`G.run` / `ISL.run_local` drivers were folded after their deprecation
+cycle)."""
 
 import os
 import subprocess

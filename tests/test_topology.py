@@ -1,10 +1,16 @@
 """The topology × executor decomposition: fused×island_ring is bit-identical
 to reference×island_ring, replicas vmap outside the island axis, migration
-math is shared with repro.core.islands, and serve-side GA job telemetry."""
+math is shared with repro.core.islands, the mesh path (shard_map +
+ppermute) is bit-identical to the single-device run, and serve-side GA job
+telemetry."""
 
 import dataclasses
+import os
+import subprocess
+import sys
 import warnings
 
+import jax
 import numpy as np
 import pytest
 
@@ -95,11 +101,15 @@ def test_fused_islands_n_repeats_matches_reference():
 # ---------------------------------------------------------------------------
 
 
-def test_islands_backend_state_matches_run_local_shim():
+def test_islands_backend_state_matches_core_local_step():
+    """The engine's island_ring epoch == repro.core.islands.make_local_step
+    (the independent oracle), state bit-for-bit after 3 epochs."""
     spec = _spec()
     icfg = ISL.IslandConfig(ga=spec.ga_config(), n_islands=4, migrate_every=5)
-    with pytest.warns(DeprecationWarning, match="deprecated entry point"):
-        old_states, _best = ISL.run_local(icfg, spec.fitness_fn(), epochs=3)
+    epoch = ISL.make_local_step(icfg, spec.fitness_fn())
+    old_states = ISL.init_islands_fast(icfg)
+    for _ in range(3):
+        old_states, _ex, _ey = epoch(old_states)
     seg = _segment(spec, "islands", 15)
     for a, b in zip(old_states, seg.state):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -113,6 +123,164 @@ def test_migration_none_ablation():
     assert none.extras["migrations"] == 0
     assert ring.extras["migrations"] == 3
     assert np.isfinite(none.best_fitness)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel epochs (gens_per_epoch): launch-overhead amortization that stays
+# bit-identical in state and best tracking
+# ---------------------------------------------------------------------------
+
+
+def test_gens_per_epoch_bit_identical_state_and_best():
+    """gens_per_epoch>1 folds generations inside one Pallas launch; the
+    population/LFSR state AND the best individual (in-kernel fold) must be
+    bit-identical to the reference islands run — only the trajectory
+    coarsens to one sample per launch."""
+    spec = _spec()
+    seg_r = _segment(spec, "islands", 15)
+    seg_g = _segment(dataclasses.replace(spec, gens_per_epoch=5),
+                     "fused-islands", 15)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(seg_g.state, field)),
+                                      np.asarray(getattr(seg_r.state, field)),
+                                      err_msg=field)
+    assert seg_g.best_y == seg_r.best_y
+    np.testing.assert_array_equal(seg_g.best_x, seg_r.best_x)
+
+
+def test_gens_per_epoch_remainder_launch_on_single_topology():
+    """10 generations at gens_per_epoch=4 = two full launches + a remainder
+    launch of 2; state/best equal to gens_per_epoch=1, one traj sample per
+    launch."""
+    spec = _spec(n_islands=1, generations=10)
+    a = _segment(spec, "fused", 10)
+    b = _segment(dataclasses.replace(spec, gens_per_epoch=4), "fused", 10)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(b.state, field)),
+                                      np.asarray(getattr(a.state, field)),
+                                      err_msg=field)
+    assert a.best_y == b.best_y
+    assert a.traj_best.shape[-1] == 10 and b.traj_best.shape[-1] == 3
+
+
+# ---------------------------------------------------------------------------
+# Mesh path: shard_map over the island axis + ppermute ring migration,
+# bit-identical to the single-device run (any executor, any n_repeats)
+# ---------------------------------------------------------------------------
+
+
+def _mesh1():
+    """A 1-device mesh: exercises the whole shard_map/ppermute machinery on
+    every host, so the sharded path is tier-1 everywhere."""
+    return jax.make_mesh((1,), ("islands",))
+
+
+def test_fused_islands_on_one_device_mesh_bit_identical():
+    spec = _spec()
+    local = _segment(spec, "fused-islands", 15)
+    eng = ga.Engine(spec, "fused-islands", mesh=_mesh1())
+    shard = eng.backend.segment(eng.init_state(), 15)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(shard.state, field)),
+                                      np.asarray(getattr(local.state, field)),
+                                      err_msg=field)
+    assert shard.best_y == local.best_y
+    np.testing.assert_array_equal(shard.traj_best, local.traj_best)
+    assert shard.extras["sharded"] is True
+    assert shard.extras["n_shards"] == 1
+
+
+def test_mesh_capability_gates():
+    mesh = _mesh1()
+    caps = ga.capability_matrix(_spec(), mesh=mesh)
+    # PR 2's mesh restrictions are lifted: both executors, n_repeats > 1
+    # and migration='none' all compose with the mesh now
+    assert caps["islands"] is None and caps["fused-islands"] is None
+    assert ga.capability_matrix(_spec(n_repeats=3), mesh=mesh)["islands"] is None
+    assert ga.capability_matrix(_spec(migration="none"),
+                                mesh=mesh)["islands"] is None
+    # 3 islands over 1 shard is fine; over 2 shards it must be rejected
+    assert ga.BACKENDS["islands"].supports(_spec(n_islands=3),
+                                           mesh=mesh) is None
+    import types
+    fake2 = types.SimpleNamespace(shape={"islands": 2},
+                                  axis_names=("islands",))
+    assert "divide evenly" in ga.BACKENDS["islands"].supports(
+        _spec(n_islands=3), mesh=fake2)
+    # a spec naming axes missing from the mesh is rejected with a reason
+    bad = _spec(mesh_axes=("nope",))
+    assert "not in the mesh" in ga.BACKENDS["islands"].supports(bad, mesh=mesh)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >1 devices (CI runs this with "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("backend", ["islands", "fused-islands"])
+def test_mesh_multi_device_bit_identical_in_process(backend):
+    """On a real multi-device host (or the forced-8-device CI job) the
+    sharded epoch crosses device boundaries and must still be bit-identical
+    to the single-device run."""
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("islands",))
+    spec = _spec(n_islands=2 * n_dev)
+    local = _segment(spec, backend, 15)
+    eng = ga.Engine(spec, backend, mesh=mesh)
+    shard = eng.backend.segment(eng.init_state(), 15)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(shard.state, field)),
+                                      np.asarray(getattr(local.state, field)),
+                                      err_msg=field)
+    assert shard.best_y == local.best_y
+    assert shard.extras["n_shards"] == n_dev
+
+
+def test_fused_islands_mesh_bit_identical_subprocess_8dev():
+    """Acceptance: fused-islands on a host-platform mesh of 8 devices is
+    bit-identical to the single-device run at equal seeds — F1–F3, plus an
+    n_repeats>1 on-mesh case (spawned so the forced device count doesn't
+    leak into this process)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, numpy as np
+from repro import ga
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+def seg(spec, backend, gens, mesh=None):
+    eng = ga.Engine(spec, backend, mesh=mesh)
+    return eng.backend.segment(eng.init_state(), gens)
+
+for problem in ("F1", "F2", "F3"):
+    spec = ga.GASpec(problem=problem, n=32, bits_per_var=10, mode="arith",
+                     mutation_rate=0.05, seed=11, generations=15,
+                     n_islands=8, migrate_every=5)
+    local = seg(spec, "fused-islands", 15)
+    shard = seg(spec, "fused-islands", 15, mesh=mesh)
+    for f in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(shard.state, f)),
+                                      np.asarray(getattr(local.state, f)),
+                                      err_msg=problem + " " + f)
+    assert shard.best_y == local.best_y
+    np.testing.assert_array_equal(shard.traj_best, local.traj_best)
+    assert shard.extras["sharded"] is True and shard.extras["n_shards"] == 8
+
+spec = ga.GASpec(problem="F3", n=32, bits_per_var=10, mode="arith",
+                 mutation_rate=0.05, seed=11, generations=10,
+                 n_islands=8, migrate_every=5, n_repeats=2)
+local = ga.solve(spec, backend="fused-islands")
+shard = ga.solve(spec, backend="fused-islands", mesh=mesh)
+np.testing.assert_array_equal(local.extras["per_repeat_best"],
+                              shard.extras["per_repeat_best"])
+assert local.best_fitness == shard.best_fitness
+print("MESH_OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "MESH_OK" in r.stdout
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +300,10 @@ def test_topology_field_validation():
         _spec(topology="torus")
     with pytest.raises(ValueError, match="migration must be"):
         _spec(migration="broadcast")
+    with pytest.raises(ValueError, match="gens_per_epoch must be"):
+        _spec(gens_per_epoch=0)
+    with pytest.raises(ValueError, match="mesh_axes must be"):
+        _spec(mesh_axes=())
 
 
 def test_auto_and_fallback_routing():
@@ -189,6 +361,10 @@ def test_serve_ga_job_metrics():
     assert out["generations_done"] == 10
     assert out["migration_count"] == 2
     assert out["generations_per_s"] > 0
+    # per-shard throughput: 4 islands on 1 shard -> islands x gens/s
+    assert out["islands"] == 4 and out["shards"] == 1
+    assert out["generations_per_s_per_shard"] == pytest.approx(
+        4 * out["generations_per_s"], rel=0.01)
     assert len(out["best_fitness_trajectory"]) == 2
     assert out["best_fitness"] == min(out["best_fitness_trajectory"])
 
