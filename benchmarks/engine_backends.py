@@ -1,11 +1,14 @@
 """`repro.ga` backend matrix: generations/sec per (topology × executor).
 
-One canonical spec (F3, N=64, m=20, arith) runs through every registered
-backend; the derived column is a JSON object so downstream tooling can
-scrape per-backend throughput.  Island-topology rows use 8 islands (total
-chromosome throughput is islands × gens/s); on CPU the fused rows run the
-Pallas kernel in interpret mode, so their absolute numbers only mean
-something on TPU.
+Canonical specs run through every registered backend for EACH problem in
+the sweep — the paper's F3 (V=2, closed form) and an n-variable registry
+problem (rastrigin:4) so the generalized in-kernel FFM stage is always
+covered; the derived column is a JSON object (with `problem`/`n_vars`
+fields) so downstream tooling can scrape per-backend throughput.
+Island-topology rows use 8 islands (total chromosome throughput is
+islands × gens/s); on CPU the fused rows run the Pallas kernel in interpret
+mode, so their absolute numbers only mean something on TPU — which is why
+`scripts/check_bench.py` gates combo-vs-combo RATIOS, not absolutes.
 
 The island backends additionally run as mesh combos (`...@mesh{D}`): the
 island axis shard_mapped over D devices with `ppermute` ring migration —
@@ -13,8 +16,8 @@ the `devices` column is the scaling sweep (full mode sweeps powers of two
 up to the host's device count; point it at a TPU pod slice and the
 `gens_per_s` column is the paper's speedup-vs-replication headline).
 
-Standalone smoke mode for CI (1 tiny config per backend combo, JSON
-artifact so a composition regression fails fast):
+Standalone smoke mode for CI (1 tiny config per backend × problem combo,
+JSON artifact so a composition regression fails fast):
 
     PYTHONPATH=src python -m benchmarks.engine_backends --smoke \
         --out artifacts/engine_backends.json
@@ -35,14 +38,16 @@ N_ISLANDS = 8
 
 SMOKE = dict(n=16, m=16, generations=8, n_islands=2, migrate_every=4)
 
+PROBLEM_SWEEP = ("F3", "rastrigin:4")
 MESH_BACKENDS = ("islands", "fused-islands")
 
 
-def _spec_for(backend: str, *, n: int, m: int, generations: int,
-              n_islands: int, migrate_every: int) -> ga.GASpec:
-    base = ga.paper_spec("F3", n=n, m=m, mode="arith", mutation_rate=0.02,
-                         seed=1, generations=generations,
-                         migrate_every=migrate_every)
+def _spec_for(backend: str, problem: str, *, n: int, m: int,
+              generations: int, n_islands: int,
+              migrate_every: int) -> ga.GASpec:
+    base = ga.GASpec(problem=problem, n=n, bits_per_var=m // 2, mode="arith",
+                     mutation_rate=0.02, seed=1, generations=generations,
+                     migrate_every=migrate_every)
     if backend.split("@")[0] in ("islands", "fused-islands"):
         return dataclasses.replace(base, n_islands=n_islands)
     return base
@@ -74,6 +79,8 @@ def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
     payload = json.dumps({"backend": out.backend,
                           "executor": out.extras.get("executor", "-"),
                           "topology": out.extras.get("topology", "-"),
+                          "problem": out.extras.get("problem", spec.problem),
+                          "n_vars": spec.v,
                           "gens_per_s": round(gens / dt, 1),
                           "best": round(out.best_fitness, 4),
                           "n": spec.n,
@@ -90,27 +97,30 @@ def run(smoke: bool = False):
     sizes = SMOKE if smoke else dict(n=64, m=20, generations=K,
                                      n_islands=N_ISLANDS, migrate_every=16)
     rows = []
-    for backend in sorted(ga.BACKENDS):
-        spec = _spec_for(backend, **sizes)
-        rows.append(_one_row(f"engine_{backend}", backend, spec, smoke=smoke))
-    # mesh combos: island axis sharded over devices (device-count sweep)
-    from repro.launch.mesh import make_island_mesh
-    for backend in MESH_BACKENDS:
-        for d in _mesh_device_counts(smoke):
-            isl = sizes["n_islands"]
-            isl = isl if isl % d == 0 else d * -(-isl // d)   # ceil multiple
-            spec = _spec_for(backend, **{**sizes, "n_islands": isl})
-            rows.append(_one_row(f"engine_{backend}@mesh{d}", backend, spec,
-                                 smoke=smoke, mesh=make_island_mesh(d),
-                                 devices=d))
+    for problem in PROBLEM_SWEEP:
+        for backend in sorted(ga.BACKENDS):
+            spec = _spec_for(backend, problem, **sizes)
+            rows.append(_one_row(f"engine_{backend}[{problem}]", backend,
+                                 spec, smoke=smoke))
+        # mesh combos: island axis sharded over devices (device-count sweep)
+        from repro.launch.mesh import make_island_mesh
+        for backend in MESH_BACKENDS:
+            for d in _mesh_device_counts(smoke):
+                isl = sizes["n_islands"]
+                isl = isl if isl % d == 0 else d * -(-isl // d)  # ceil mult
+                spec = _spec_for(backend, problem,
+                                 **{**sizes, "n_islands": isl})
+                rows.append(_one_row(
+                    f"engine_{backend}[{problem}]@mesh{d}", backend, spec,
+                    smoke=smoke, mesh=make_island_mesh(d), devices=d))
     return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="1 tiny config per backend combo (CI regression "
-                         "gate; seconds, not minutes)")
+                    help="1 tiny config per backend x problem combo (CI "
+                         "regression gate; seconds, not minutes)")
     ap.add_argument("--out", default=None,
                     help="write the rows as a JSON artifact here")
     args = ap.parse_args()

@@ -50,9 +50,20 @@ def numpy_sequential_ga(problem, n: int, m: int, k: int, seed: int = 0,
     p_count = max(1, math.ceil(n * mutation_rate))
     best = np.inf
     t0 = time.perf_counter()
+    def np_fitness(vals):
+        # separable problems (Table 2 uses F3) evaluate in pure numpy so the
+        # timed loop is the sequential CPU program; non-separable ones pay
+        # ONE jnp eager dispatch per generation — a small fixed overhead
+        # that mildly overstates their baseline cost
+        if problem.separable:
+            d = sum(np.asarray(problem.term(vals[:, i], i), np.float64)
+                    for i in range(vals.shape[1]))
+            return d if problem.gamma is None else problem.gamma(d)
+        return np.asarray(problem.f(vals), np.float64)
+
     for _ in range(k):
         vals = lo + pop * (hi - lo) / ((1 << c) - 1)
-        y = np.array([problem.f(vals[j, 0], vals[j, 1]) for j in range(n)])
+        y = np_fitness(vals)
         best = min(best, float(y.min()))
         w = np.empty_like(pop)
         for j in range(n):                      # tournament, sequential

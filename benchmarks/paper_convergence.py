@@ -27,7 +27,7 @@ def run():
     rows = []
     # F1: global min at x=-4096
     t0 = time.perf_counter()
-    target1 = float(F.F1.f(np.array(0.0), np.array(-4096.0))) * 0.98
+    target1 = float(F.F1.f(np.array([0.0, -4096.0]))) * 0.98
     spec1 = ga.paper_spec("F1", n=32, m=26, mode="lut", mutation_rate=0.05,
                           seed=0, generations=100, n_repeats=R)
     out1 = ga.solve(spec1, backend="reference")

@@ -1,30 +1,43 @@
 #!/usr/bin/env python
-"""Benchmark regression gate for the engine backend matrix.
+"""RELATIVE benchmark regression gate for the engine backend matrix.
 
 Compares a fresh `benchmarks.engine_backends --smoke` artifact against the
-committed baseline and fails (exit 1) when any (topology × executor) combo
-regressed by more than the tolerance:
+committed baseline and fails (exit 1) when any (topology × executor ×
+problem) combo regressed — where "regressed" is measured MACHINE-
+INDEPENDENTLY: each combo's gens/s is divided by the same artifact's anchor
+row (`engine_reference[<problem>]`, devices=1), and it is that
+combo-vs-reference RATIO that must stay within tolerance of the baseline's
+ratio.  A uniformly slower machine scales every row equally and cancels
+out; only a composition that got slower *relative to the reference
+executor* trips the gate.
 
     PYTHONPATH=src python -m benchmarks.engine_backends --smoke \
         --out artifacts/engine_backends.json
     python scripts/check_bench.py artifacts/engine_backends.json
 
 A combo missing from the current artifact also fails — a silently dropped
-backend is a coverage regression, not a speedup.  Combos are only compared
-when their `devices` count matches (mesh rows scale with the host).
+backend is a coverage regression, not a speedup.  Ratios are only compared
+when the row's `devices` count matches the baseline's (mesh rows scale
+with the host and their relative cost depends on the shard count).
 
-The committed baseline is seeded CONSERVATIVELY: pass SEVERAL artifacts
-(collected across repeated runs, ideally including one on a loaded
-machine) and --write-baseline keeps the per-combo MINIMUM gens/s scaled by
-`SEED_MARGIN` — so machine-to-machine and run-to-run variance does not
-trip the 30% gate.  Regenerate when a deliberate change shifts throughput:
+Seed the committed baseline from SEVERAL artifacts (collected across
+repeated runs): --write-baseline keeps the per-combo MINIMUM ratio across
+the artifacts scaled by `RATIO_MARGIN`, so run-to-run ratio noise does not
+trip the tolerance gate.  Regenerate when a deliberate change shifts
+relative throughput:
 
     python scripts/check_bench.py run1.json run2.json run3.json \
         --write-baseline
 
-Env overrides: CHECK_BENCH_TOLERANCE (float, default 0.30) and
-CHECK_BENCH_SKIP=1 (escape hatch for pathological machines — prints a
-warning, exits 0).
+Ratios alone are blind to a regression in the reference path itself (every
+ratio's denominator slows equally), so the anchor rows additionally get a
+VERY loose absolute floor: `engine_reference[*]` must stay above
+ANCHOR_FLOOR (default 0.10) × its baseline gens/s — 10× machine-speed
+variance passes, a catastrophic shared-path slowdown does not.
+
+Env overrides: CHECK_BENCH_TOLERANCE (float, default 0.30),
+CHECK_BENCH_ANCHOR_FLOOR (float, default 0.10) and CHECK_BENCH_SKIP=1
+(escape hatch for pathological machines — prints a warning, exits 0).
 """
 
 from __future__ import annotations
@@ -36,7 +49,8 @@ import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
                                 "benchmarks", "baseline_engine_backends.json")
-SEED_MARGIN = 0.5    # baseline = observed_min * SEED_MARGIN at --write-baseline
+RATIO_MARGIN = 0.67  # baseline ratio = observed_min_ratio * RATIO_MARGIN
+ANCHOR_FLOOR = float(os.environ.get("CHECK_BENCH_ANCHOR_FLOOR", "0.10"))
 
 
 def load_rows(path: str) -> dict:
@@ -46,19 +60,34 @@ def load_rows(path: str) -> dict:
 
 
 def _base_name(name: str) -> str:
-    """Mesh rows embed the host's device count ('engine_islands@mesh8');
+    """Mesh rows embed the host's device count ('engine_islands[F3]@mesh8');
     strip it so rows recorded on differently-sized hosts still pair up."""
     return name.split("@mesh")[0] + ("@mesh" if "@mesh" in name else "")
 
 
-def compare(current: dict, baseline: dict, tolerance: float):
-    """Returns (failures, notes): failures are regressions/missing combos.
+def _anchor_name(row: dict) -> str:
+    """The reference row every combo is measured against (same problem,
+    single device) — the denominator of the machine-independent ratio.
+    The problem token comes from the row NAME ('engine_fused[rastrigin:4]'
+    includes the :V suffix; the payload's `problem` field is the bare
+    registry name)."""
+    name = row.get("name", "")
+    token = name[name.find("[") + 1:name.find("]")] if "[" in name else "F3"
+    return f"engine_reference[{token}]"
 
-    gens/s is only compared between rows with equal `devices`; a combo
-    whose device count differs from the baseline host's (mesh rows on a
-    bigger machine) is noted and skipped, not failed — absolute throughput
-    does not transfer across device counts.
-    """
+
+def _ratio(row: dict, rows: dict):
+    """gens/s of `row` relative to its anchor in the same artifact, or None
+    when the anchor is absent/zero (nothing to normalize against)."""
+    anchor = rows.get(_anchor_name(row))
+    if not anchor or not anchor.get("gens_per_s"):
+        return None
+    return row["gens_per_s"] / anchor["gens_per_s"]
+
+
+def compare(current: dict, baseline: dict, tolerance: float):
+    """Returns (failures, notes): failures are relative regressions and
+    missing combos; device-count mismatches and missing anchors are notes."""
     failures, notes = [], []
     cur_bases = {_base_name(n) for n in current}
     for name, base in sorted(baseline.items()):
@@ -75,14 +104,42 @@ def compare(current: dict, baseline: dict, tolerance: float):
         if cur.get("devices") != base.get("devices"):
             notes.append(f"{name}: device count changed "
                          f"({base.get('devices')} -> {cur.get('devices')}); "
-                         "skipping gens/s comparison")
+                         "skipping ratio comparison")
             continue
-        floor = base["gens_per_s"] * (1.0 - tolerance)
-        if cur["gens_per_s"] < floor:
+        if name == _anchor_name(base):
+            # anchor rows have ratio == 1 by construction; gate them with a
+            # very loose ABSOLUTE floor instead, so a shared-path slowdown
+            # that drags every backend down equally still fails
+            floor = base.get("gens_per_s", 0.0) * ANCHOR_FLOOR
+            if cur.get("gens_per_s", 0.0) < floor:
+                failures.append(
+                    f"{name}: anchor at {cur.get('gens_per_s', 0.0):.1f} "
+                    f"gens/s < absolute floor {floor:.1f} "
+                    f"({ANCHOR_FLOOR:.0%} of baseline "
+                    f"{base.get('gens_per_s', 0.0):.1f}) — shared/reference "
+                    "path regression or pathological machine "
+                    "(CHECK_BENCH_ANCHOR_FLOOR / CHECK_BENCH_SKIP=1)")
+            continue
+        base_ratio = base.get("ratio")
+        if base_ratio is None:
+            notes.append(f"{name}: baseline has no ratio (reseed with "
+                         "--write-baseline); skipping")
+            continue
+        # the ratio stored at merge time was computed WITHIN the row's own
+        # artifact — recomputing against the min-merged dict could pair a
+        # numerator and an anchor from different machines
+        cur_ratio = cur.get("ratio")
+        if cur_ratio is None:
+            notes.append(f"{name}: anchor {_anchor_name(cur)!r} missing "
+                         "from current artifact; skipping")
+            continue
+        floor = base_ratio * (1.0 - tolerance)
+        if cur_ratio < floor:
             failures.append(
-                f"{name}: {cur['gens_per_s']:.1f} gens/s < floor "
-                f"{floor:.1f} (baseline {base['gens_per_s']:.1f}, "
-                f"tolerance {tolerance:.0%})")
+                f"{name}: {cur_ratio:.3f}x of {_anchor_name(cur)} < floor "
+                f"{floor:.3f}x (baseline ratio {base_ratio:.3f}, "
+                f"tolerance {tolerance:.0%}; "
+                f"{cur['gens_per_s']:.1f} gens/s here)")
     for name in sorted(set(current) - set(baseline)):
         notes.append(f"{name}: new combo (no baseline yet)")
     return failures, notes
@@ -92,35 +149,48 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("artifacts", nargs="+",
                     help="engine_backends --smoke --out JSON(s); several "
-                         "are min-merged per combo (use with "
+                         "are min-ratio-merged per combo (use with "
                          "--write-baseline to seed from repeated runs)")
     ap.add_argument("--baseline", default=os.path.normpath(DEFAULT_BASELINE))
     ap.add_argument("--tolerance", type=float,
                     default=float(os.environ.get("CHECK_BENCH_TOLERANCE",
                                                  "0.30")),
-                    help="allowed fractional gens/s drop per combo")
+                    help="allowed fractional drop of the combo-vs-reference "
+                         "gens/s ratio")
     ap.add_argument("--write-baseline", action="store_true",
-                    help="(re)seed the baseline from the artifact "
-                         f"(gens/s scaled by {SEED_MARGIN})")
+                    help="(re)seed the baseline from the artifacts "
+                         f"(min ratio per combo scaled by {RATIO_MARGIN})")
     args = ap.parse_args()
 
+    artifacts = [load_rows(p) for p in args.artifacts]
+    # current view: per combo, the row with the WORST (lowest) ratio across
+    # the artifacts, its ratio evaluated within its own artifact
     current: dict = {}
-    for path in args.artifacts:
-        for name, r in load_rows(path).items():
-            if (name not in current
-                    or r["gens_per_s"] < current[name]["gens_per_s"]):
+    for rows in artifacts:
+        for name, r in rows.items():
+            ratio = _ratio(r, rows)
+            r = dict(r, ratio=ratio)
+            old = current.get(name)
+            if (old is None or (ratio is not None
+                                and (old.get("ratio") is None
+                                     or ratio < old["ratio"]))):
                 current[name] = r
+
     if args.write_baseline:
-        rows = []
+        rows_out = []
         for name, r in sorted(current.items()):
-            rows.append({"name": name,
-                         "gens_per_s": round(r["gens_per_s"] * SEED_MARGIN, 1),
-                         "devices": r.get("devices", 1)})
+            rows_out.append({
+                "name": name,
+                "problem": r.get("problem", "F3"),
+                "gens_per_s": r.get("gens_per_s"),   # informational
+                "ratio": (round(r["ratio"] * RATIO_MARGIN, 4)
+                          if r.get("ratio") is not None else None),
+                "devices": r.get("devices", 1)})
         with open(args.baseline, "w") as f:
-            json.dump(rows, f, indent=2)
+            json.dump(rows_out, f, indent=2)
             f.write("\n")
-        print(f"wrote {args.baseline} ({len(rows)} combos, "
-              f"margin {SEED_MARGIN})")
+        print(f"wrote {args.baseline} ({len(rows_out)} combos, "
+              f"ratio margin {RATIO_MARGIN})")
         return 0
 
     if os.environ.get("CHECK_BENCH_SKIP") == "1":
@@ -138,7 +208,7 @@ def main():
             print(f"  FAIL {f_}")
         return 1
     print(f"check_bench: OK — {len(baseline)} combos within "
-          f"{args.tolerance:.0%} of baseline")
+          f"{args.tolerance:.0%} of baseline combo-vs-reference ratios")
     return 0
 
 

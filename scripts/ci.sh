@@ -14,18 +14,22 @@ echo "== engine smoke (reference backend, ~5s) =="
 timeout 120 python -m repro.launch.ga_run \
     --problem F1 --n 16 --k 20 --backend reference
 
+echo "== n-variable smoke (rastrigin:4 through the fused kernel FFM stage) =="
+timeout 120 python -m repro.launch.ga_run \
+    --problem rastrigin:4 --n 16 --k 20 --backend fused --mode arith
+
 echo "== distributed smoke (fused-islands on a mesh, in-kernel epochs) =="
 timeout 180 python -m repro.launch.ga_run \
-    --problem F3 --n 16 --k 16 --islands 2 --migrate-every 4 \
+    --problem rastrigin:4 --n 16 --k 16 --islands 2 --migrate-every 4 \
     --backend fused-islands --mesh auto --gens-per-epoch 4
 
-echo "== backend-matrix smoke (1 tiny config per topology x executor combo) =="
+echo "== backend-matrix smoke (1 tiny config per topology x executor x problem) =="
 mkdir -p artifacts
-timeout 300 python -m benchmarks.engine_backends --smoke \
+timeout 420 python -m benchmarks.engine_backends --smoke \
     --out artifacts/engine_backends.json
 cat artifacts/engine_backends.json
 
-echo "== bench regression gate (>30% gens/s drop per combo fails) =="
+echo "== bench regression gate (relative combo-vs-reference ratios) =="
 python scripts/check_bench.py artifacts/engine_backends.json
 
 echo "CI OK"

@@ -4,7 +4,9 @@ Submodules: lfsr (paper's PRNG), fitness (FFM), ga (FFM+SM+CM+MM datapath),
 islands (multi-pod scaling), evolve (blackbox-tuning service).
 """
 
-from repro.core.fitness import F1, F2, F3, PROBLEMS, Problem, ArithSpec, build_tables
+from repro.core.fitness import (F1, F2, F3, PROBLEMS, FitnessProgram,
+                                ProblemDef, build_tables, compile_program,
+                                register_problem, resolve_problem)
 from repro.core.ga import GAConfig, GAState, GARun, generation, init_state, run_scan
 from repro.core.islands import IslandConfig, init_islands_fast, migrate_ring
 from repro.core.evolve import evolve, EvolveResult

@@ -1,99 +1,222 @@
-"""Fitness Function Module (FFM) — paper Sec. 3.1.
+"""Fitness Function Module (FFM) — paper Sec. 3.1, generalized to V variables.
 
-The paper computes  y = γ(α(px) + β(qx))  with three ROMs per individual:
-α and β are LUTs over the c = m/2 bit halves of the chromosome, γ a LUT over
-the d-bit sum δ.  Any separable two-variable function fits (Eq. 11); products
-of the two variables do not (paper's stated limitation — same here).
+The paper computes  y = γ(α(px) + β(qx))  with three ROMs per individual and
+notes the architecture extends "to more variables from some adjustments on
+hardware architecture".  This module is that adjustment: a registered
+:class:`ProblemDef` (or a user blackbox) is *compiled* into a
+:class:`FitnessProgram`, one object that lowers the same problem to every
+evaluation mode the engine's executors consume:
 
-Two modes:
-  * ``lut``   — faithful: int32 fixed-point tables, XLA gathers (ROM analogue).
-  * ``arith`` — TPU-native: α/β/γ evaluated in f32 on the VPU. On TPU, HBM
-    gathers are far more expensive than a few FMAs; this is the first
-    beyond-paper optimization (recorded in EXPERIMENTS.md §Perf).
+  * ``lut``   — faithful: per-variable int32 fixed-point ROMs stacked into
+    one [V, 2^c] table (the paper's α/β ROMs are the V=2 rows), one δ add
+    tree and an optional γ ROM.  Available for separable problems
+    ``f(x) = γ(Σ_i φ(x_i))`` — exactly the family the FFM synthesizes.
+  * ``arith`` — TPU-native: the problem's jnp expression evaluated in f32 on
+    the VPU (HBM gathers are far more expensive than FMAs on TPU).
+  * in-kernel stage — ``FitnessProgram.stage`` is a traceable
+    ``uint32[(..., V)] bits -> f32[...]`` function the Pallas ``ga_step``
+    kernel calls as its FFM stage, so *any* traceable problem — n-variable
+    benchmarks and user blackboxes included — runs fused.  The reference
+    executor evaluates the SAME traced function, which is what makes
+    reference × fused bit-identity hold for every registered problem.
 
-Both modes share the same domain mapping: a c-bit unsigned chromosome half u
-decodes to   v = lo + u * (hi - lo) / (2^c - 1).
+All modes share the domain mapping: a c-bit unsigned gene u decodes to
+v = lo + u * (hi - lo) / (2^c - 1), per variable.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+# ---------------------------------------------------------------------------
+# Problem registry
+# ---------------------------------------------------------------------------
+
+
 @dataclasses.dataclass(frozen=True)
-class Problem:
-    """A separable two-variable optimisation problem (Eq. 11 of the paper)."""
+class ProblemDef:
+    """A registered n-variable optimisation problem.
+
+    ``fn`` is the batch evaluator ``(..., V) f32 -> (...,) f32`` in jnp —
+    traceable, so it lowers to XLA *and* into the Pallas kernel.  The
+    optional separable form ``f(x) = gamma(Σ_i term(v, i))`` (``term`` in
+    numpy, evaluated at ROM-synthesis time) enables the LUT lowering; leave
+    it None for non-separable problems (rosenbrock, ackley, blackboxes),
+    which then run mode='arith' only.
+    """
 
     name: str
-    alpha: Callable[[np.ndarray], np.ndarray]   # α(px)
-    beta: Callable[[np.ndarray], np.ndarray]    # β(qx)
-    gamma: Callable[[np.ndarray], np.ndarray]   # γ(δ)
-    domain: tuple  # (lo, hi) for each decoded variable
+    fn: Callable[[jax.Array], jax.Array]
+    domain: Tuple[float, float]          # per-variable decode box
+    fixed_vars: Optional[int] = None     # paper problems pin V
+    default_vars: int = 2
+    min_vars: int = 1
     minimize: bool = True
-    single_var: bool = False  # paper's one-variable case: α(px)=0, only qx used
+    term: Optional[Callable[[np.ndarray, int], np.ndarray]] = None
+    gamma: Optional[Callable[[np.ndarray], np.ndarray]] = None  # None = id
 
-    def f(self, px: np.ndarray, qx: np.ndarray) -> np.ndarray:
-        return self.gamma(self.alpha(px) + self.beta(qx))
+    @property
+    def separable(self) -> bool:
+        """Whether the LUT (stacked per-variable ROM) lowering exists."""
+        return self.term is not None
+
+    def f(self, vals) -> jax.Array:
+        """Convenience single/batch evaluation over a trailing V axis."""
+        return self.fn(jnp.asarray(vals, jnp.float32))
 
 
-# --- The paper's three validation functions (Sec. 4) -----------------------
+PROBLEMS: Dict[str, ProblemDef] = {}
 
-# F1: f(x) = x^3 - 15 x^2 + 500   (one variable; paper Eq. 24, range ±2^12)
-F1 = Problem(
+
+def register_problem(pdef: ProblemDef) -> ProblemDef:
+    """Add a problem to the registry (user problems welcome — see
+    examples/custom_fitness.py)."""
+    PROBLEMS[pdef.name] = pdef
+    return pdef
+
+
+def resolve_problem(problem: str) -> Tuple[ProblemDef, Optional[int]]:
+    """Look up ``"name"`` or ``"name:V"`` -> (ProblemDef, requested V or
+    None).  The ``:V`` suffix is the CLI/spec shorthand for n_vars."""
+    name, sep, vs = problem.partition(":")
+    n_vars = None
+    if sep:
+        try:
+            n_vars = int(vs)
+        except ValueError:
+            raise ValueError(f"bad problem spec {problem!r}: the :V suffix "
+                             "must be an integer, e.g. 'rastrigin:8'")
+    if name not in PROBLEMS:
+        raise ValueError(f"unknown problem {name!r}; "
+                         f"choose from {sorted(PROBLEMS)}")
+    return PROBLEMS[name], n_vars
+
+
+def resolve_vars(pdef: ProblemDef, n_vars: Optional[int]) -> int:
+    """Validate a requested variable count against a problem's shape rules
+    (fixed paper layout, minimum V) and return the effective V.  THE shared
+    rule set — `GASpec` validation and `compile_program` both call this."""
+    if pdef.fixed_vars is not None:
+        if n_vars is not None and n_vars != pdef.fixed_vars:
+            raise ValueError(f"problem {pdef.name!r} is defined at "
+                             f"V={pdef.fixed_vars} (paper layout); "
+                             f"got n_vars={n_vars}")
+        return pdef.fixed_vars
+    v = n_vars if n_vars is not None else pdef.default_vars
+    if v < pdef.min_vars:
+        raise ValueError(f"problem {pdef.name!r} needs at least "
+                         f"{pdef.min_vars} variables; got n_vars={v}")
+    return v
+
+
+def check_mode(pdef: ProblemDef, mode: str) -> None:
+    """Reject FFM modes the problem cannot lower to (shared by `GASpec`
+    validation and `compile_program`)."""
+    if mode not in ("lut", "arith"):
+        raise ValueError(f"mode must be 'lut' or 'arith', got {mode!r}")
+    if mode == "lut" and not pdef.separable:
+        raise ValueError(f"problem {pdef.name!r} has no separable form for "
+                         "the LUT ROMs (mode='lut'); run mode='arith'")
+
+
+# --- The paper's three validation functions (Sec. 4), fixed at V=2 ---------
+
+# F1: f(x) = x^3 - 15 x^2 + 500   (one variable; paper Eq. 24, range ±2^12).
+# The paper still lays it out as px ‖ qx with α(px) = 0, so V stays 2.
+F1 = register_problem(ProblemDef(
     name="F1",
-    alpha=lambda px: np.zeros_like(px, dtype=np.float64),
-    beta=lambda qx: qx ** 3 - 15.0 * qx ** 2 + 500.0,
-    gamma=lambda d: d,
+    fn=lambda v: v[..., 1] ** 3 - 15.0 * v[..., 1] ** 2 + 500.0,
     domain=(-4096.0, 4095.0),
-    minimize=True,
-    single_var=True,
-)
+    fixed_vars=2,
+    term=lambda v, i: (np.zeros_like(v) if i == 0
+                       else v ** 3 - 15.0 * v ** 2 + 500.0),
+))
 
 # F2: f(x, y) = 8x - 4y + 1020   (paper Eq. 25)
-F2 = Problem(
+F2 = register_problem(ProblemDef(
     name="F2",
-    alpha=lambda px: 8.0 * px,
-    beta=lambda qx: -4.0 * qx + 1020.0,
-    gamma=lambda d: d,
+    fn=lambda v: 8.0 * v[..., 0] + (-4.0 * v[..., 1] + 1020.0),
     domain=(-128.0, 127.0),
-    minimize=True,
-)
+    fixed_vars=2,
+    term=lambda v, i: 8.0 * v if i == 0 else -4.0 * v + 1020.0,
+))
 
 # F3: f(x, y) = sqrt(x^2 + y^2)   (paper Eq. 26)
-F3 = Problem(
+F3 = register_problem(ProblemDef(
     name="F3",
-    alpha=lambda px: px.astype(np.float64) ** 2,
-    beta=lambda qx: qx.astype(np.float64) ** 2,
-    gamma=lambda d: np.sqrt(np.maximum(d, 0.0)),
+    fn=lambda v: jnp.sqrt(jnp.maximum(
+        v[..., 0] * v[..., 0] + v[..., 1] * v[..., 1], 0.0)),
     domain=(-128.0, 127.0),
-    minimize=True,
-)
+    fixed_vars=2,
+    term=lambda v, i: v.astype(np.float64) ** 2,
+    gamma=lambda d: np.sqrt(np.maximum(d, 0.0)),
+))
 
-PROBLEMS = {"F1": F1, "F2": F2, "F3": F3}
+
+# --- The standard n-variable GA benchmark suite (configurable V) -----------
+
+register_problem(ProblemDef(
+    name="sphere",
+    fn=lambda v: jnp.sum(v * v, axis=-1),
+    domain=(-5.12, 5.12),
+    term=lambda v, i: v.astype(np.float64) ** 2,
+))
+
+register_problem(ProblemDef(
+    name="rastrigin",
+    # 10V + Σ x² - 10 cos(2πx), folded as Σ (x² - 10 cos(2πx) + 10)
+    fn=lambda v: jnp.sum(
+        v * v - 10.0 * jnp.cos(2.0 * np.pi * v) + 10.0, axis=-1),
+    domain=(-5.12, 5.12),
+    term=lambda v, i: (v.astype(np.float64) ** 2
+                       - 10.0 * np.cos(2.0 * np.pi * v) + 10.0),
+))
+
+register_problem(ProblemDef(
+    name="rosenbrock",
+    # coupled terms -> not separable -> arith/kernel modes only
+    fn=lambda v: jnp.sum(
+        100.0 * (v[..., 1:] - v[..., :-1] * v[..., :-1]) ** 2
+        + (1.0 - v[..., :-1]) ** 2, axis=-1),
+    domain=(-2.048, 2.048),
+    min_vars=2,
+))
+
+register_problem(ProblemDef(
+    name="ackley",
+    # two coupled reductions -> not γ(Σφ)-separable -> arith/kernel only
+    fn=lambda v: (-20.0 * jnp.exp(
+        -0.2 * jnp.sqrt(jnp.mean(v * v, axis=-1)))
+        - jnp.exp(jnp.mean(jnp.cos(2.0 * np.pi * v), axis=-1))
+        + 20.0 + np.e),
+    domain=(-32.768, 32.768),
+))
 
 
 def decode(u: jax.Array, c: int, domain: tuple) -> jax.Array:
-    """Decode a c-bit unsigned half-chromosome to its real value."""
+    """Decode a c-bit unsigned gene to its real value (single shared box)."""
     lo, hi = domain
     scale = (hi - lo) / float((1 << c) - 1)
     return lo + u.astype(jnp.float32) * jnp.float32(scale)
 
 
 # ---------------------------------------------------------------------------
-# LUT (faithful) mode
+# LUT (faithful) mode — per-variable ROMs stacked into one table
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class LutTables:
-    """Fixed-point ROM contents for one Problem at a given m.
+    """Fixed-point ROM contents for one separable problem at width c.
 
-    alpha_t, beta_t: int32[2^c] — α/β values scaled by 2^frac_bits.
+    var_t: int32[V, 2^c] — per-variable term ROMs scaled by 2^frac_bits
+           (the paper's α/β ROMs are rows 0 and 1 of the V=2 case).
     gamma_t: int32[2^g] or None (None == identity γ, paper's F1/F2 case where
              the third ROM is a pass-through).
     delta_min / delta_shift: the γ ROM is addressed by
@@ -102,62 +225,68 @@ class LutTables:
 
     c: int
     frac_bits: int
-    alpha_t: np.ndarray
-    beta_t: np.ndarray
+    var_t: np.ndarray
     gamma_t: Optional[np.ndarray]
     delta_min: int
     delta_shift: int
     g: int
 
 
-def build_tables(problem: Problem, m: int, frac_bits: Optional[int] = None,
-                 g: int = 14) -> LutTables:
-    """Quantize α/β/γ into ROM tables, the FFM's synthesis step.
+def build_tables(pdef: ProblemDef, c: int, n_vars: int,
+                 frac_bits: Optional[int] = None, g: int = 14) -> LutTables:
+    """Quantize the per-variable terms + γ into ROM tables (FFM synthesis).
 
     frac_bits may be negative (coarser-than-integer fixed point) — exactly
     what a hardware synthesis would do when the fitness range exceeds the
-    ROM word width.  If None, the largest value keeping |α|+|β| within int31
-    is chosen automatically (capped at 8 fractional bits).
+    ROM word width.  If None, the largest value keeping |Σ terms| within
+    int31 is chosen automatically (capped at 8 fractional bits).
     """
-    c = m // 2
+    if not pdef.separable:
+        raise ValueError(f"problem {pdef.name!r} has no separable form — "
+                         "the LUT ROMs cannot be synthesized; run "
+                         "mode='arith'")
     u = np.arange(1 << c, dtype=np.float64)
-    lo, hi = problem.domain
+    lo, hi = pdef.domain
     v = lo + u * (hi - lo) / float((1 << c) - 1)
+    terms = [np.asarray(pdef.term(v, i), np.float64) for i in range(n_vars)]
 
     if frac_bits is None:
-        peak = (np.abs(problem.alpha(v)).max() + np.abs(problem.beta(v)).max())
+        peak = sum(np.abs(t).max() for t in terms)
         frac_bits = 8
         while frac_bits > -24 and peak * (2.0 ** frac_bits) >= 2 ** 30:
             frac_bits -= 1
 
     scale = float(2.0 ** frac_bits)
-    a = np.round(problem.alpha(v) * scale).astype(np.int64)
-    b = np.round(problem.beta(v) * scale).astype(np.int64)
+    fixed = [np.round(t * scale).astype(np.int64) for t in terms]
 
     # int32 saturation (the ROM word width)
     i32 = lambda t: np.clip(t, -(2 ** 31), 2 ** 31 - 1).astype(np.int32)
-    alpha_t, beta_t = i32(a), i32(b)
+    var_t = np.stack([i32(t) for t in fixed])
 
-    is_identity = problem.gamma(np.array([0.0, 1.0, 2.0])).tolist() == [0.0, 1.0, 2.0]
-    if is_identity:
-        return LutTables(c, frac_bits, alpha_t, beta_t, None, 0, 0, 0)
+    if pdef.gamma is None:
+        return LutTables(c, frac_bits, var_t, None, 0, 0, 0)
 
-    dmin = int(a.min() + b.min())
-    dmax = int(a.max() + b.max())
+    dmin = int(sum(t.min() for t in fixed))
+    dmax = int(sum(t.max() for t in fixed))
     span = max(dmax - dmin, 1)
     shift = max(0, int(np.ceil(np.log2(span / ((1 << g) - 1) + 1e-12))) if span >= (1 << g) else 0)
     # γ table: value at address k represents δ = dmin + (k << shift)
     k = np.arange(1 << g, dtype=np.int64)
     delta = (dmin + (k << shift)).astype(np.float64) / scale
-    gamma_t = i32(np.round(problem.gamma(delta) * scale))
-    return LutTables(c, frac_bits, alpha_t, beta_t, gamma_t, dmin, shift, g)
+    gamma_t = i32(np.round(pdef.gamma(delta) * scale))
+    return LutTables(c, frac_bits, var_t, gamma_t, dmin, shift, g)
 
 
-def lut_fitness(px: jax.Array, qx: jax.Array, t: LutTables) -> jax.Array:
-    """Faithful FFM: two ROM reads, an add, one more ROM read. int32 out."""
-    a = jnp.asarray(t.alpha_t)[px]
-    b = jnp.asarray(t.beta_t)[qx]
-    d = a + b
+def lut_fitness(x: jax.Array, t: LutTables) -> jax.Array:
+    """Faithful FFM: V ROM reads, a δ add tree, one more ROM read.
+
+    x: uint32/int32 (..., V) chromosome matrix; int32 fitness out."""
+    mask = np.uint32((1 << t.c) - 1)
+    idx = (x.astype(jnp.uint32) & mask).astype(jnp.int32)
+    tabs = jnp.asarray(t.var_t)
+    d = tabs[0][idx[..., 0]]
+    for i in range(1, t.var_t.shape[0]):
+        d = d + tabs[i][idx[..., i]]
     if t.gamma_t is None:
         return d
     addr = jnp.clip((d - jnp.int32(t.delta_min)) >> t.delta_shift, 0, (1 << t.g) - 1)
@@ -165,46 +294,124 @@ def lut_fitness(px: jax.Array, qx: jax.Array, t: LutTables) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Arithmetic (TPU-native) mode
+# FitnessProgram — one problem compiled for every executor
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
-class ArithSpec:
-    """Closed-form fitness for the VPU: cubic α/β + {identity,sqrt} γ.
+class FitnessProgram:
+    """A problem (or blackbox) lowered to the engine's evaluation modes.
 
-    α(v) = a3 v³ + a2 v² + a1 v + a0 (same for β); covers the paper's F1–F3
-    and anything polynomial; γ ∈ {identity, sqrt}.
+    ``stage`` is THE arith lowering: a traceable bits -> fitness function
+    shared verbatim by the XLA executors and the Pallas kernel's FFM stage,
+    so reference × fused bit-identity holds by construction for every
+    program.  ``lut_stage`` is the faithful ROM pipeline (separable
+    problems only).  ``fitness(mode)`` dispatches for the executors.
     """
 
-    alpha_coef: tuple  # (a3, a2, a1, a0)
-    beta_coef: tuple
-    gamma_sqrt: bool
-    domain: tuple
+    name: str
+    n_vars: int
+    bits_per_var: int
+    domains: Tuple[Tuple[float, float], ...]   # per-variable (lo, hi)
+    minimize: bool
+    fn: Callable[[jax.Array], jax.Array]
+    supports_lut: bool
+    tables: Optional[LutTables] = None   # synthesized only for mode='lut'
 
-    @staticmethod
-    def for_problem(problem: Problem) -> "ArithSpec":
-        specs = {
-            "F1": ((0.0, 0.0, 0.0, 0.0), (1.0, -15.0, 0.0, 500.0), False),
-            "F2": ((0.0, 0.0, 8.0, 0.0), (0.0, 0.0, -4.0, 1020.0), False),
-            "F3": ((0.0, 1.0, 0.0, 0.0), (0.0, 1.0, 0.0, 0.0), True),
-        }
-        if problem.name not in specs:
-            raise ValueError(f"no ArithSpec for {problem.name}")
-        a, b, s = specs[problem.name]
-        return ArithSpec(a, b, s, problem.domain)
+    @property
+    def modes(self) -> Tuple[str, ...]:
+        return ("lut", "arith") if self.supports_lut else ("arith",)
+
+    def scale(self, mode: str) -> float:
+        """Raw-fitness units per real unit (lut mode is fixed-point)."""
+        if mode == "lut":
+            return 2.0 ** self._tables().frac_bits
+        return 1.0
+
+    def _tables(self) -> LutTables:
+        if self.tables is None:
+            raise ValueError(
+                f"program for {self.name!r} was not compiled with "
+                "mode='lut'" if self.supports_lut else
+                f"problem {self.name!r} has no LUT lowering (not "
+                "separable); run mode='arith'")
+        return self.tables
+
+    # ---- lowerings ------------------------------------------------------
+
+    def decode(self, x: jax.Array) -> jax.Array:
+        """uint32 bits (..., V) -> f32 values (..., V), per-variable box."""
+        c = self.bits_per_var
+        lo = np.asarray([d[0] for d in self.domains], np.float32)
+        span = np.asarray([(d[1] - d[0]) / ((1 << c) - 1)
+                           for d in self.domains], np.float32)
+        mask = np.uint32((1 << c) - 1)
+        return jnp.asarray(lo) + (x & mask).astype(jnp.float32) * jnp.asarray(span)
+
+    def stage(self, x: jax.Array) -> jax.Array:
+        """The arith/in-kernel FFM stage: uint32 bits (..., V) -> f32 (...,).
+
+        Traceable under XLA jit AND inside a Pallas kernel body — this exact
+        function is what `kernels.ga_step` runs in place of the paper's
+        hardwired two-variable polynomial pipeline."""
+        return jnp.asarray(self.fn(self.decode(x)), jnp.float32)
+
+    def lut_stage(self, x: jax.Array) -> jax.Array:
+        """The faithful ROM pipeline: uint32 bits (..., V) -> int32 (...,)."""
+        return lut_fitness(x, self._tables())
+
+    def fitness(self, mode: str) -> Callable[[jax.Array], jax.Array]:
+        """The executor-facing fitness function for one FFM mode."""
+        if mode == "lut":
+            self._tables()          # fail loudly before tracing
+            return self.lut_stage
+        if mode != "arith":
+            raise ValueError(f"mode must be 'lut' or 'arith', got {mode!r}")
+        return self.stage
 
 
-def _poly3(v: jax.Array, coef: tuple) -> jax.Array:
-    a3, a2, a1, a0 = (jnp.float32(x) for x in coef)
-    return ((a3 * v + a2) * v + a1) * v + a0
+def compile_program(problem: Optional[str] = None,
+                    fitness: Optional[Callable] = None,
+                    bounds=None, *,
+                    n_vars: Optional[int] = None,
+                    bits_per_var: int,
+                    mode: str = "arith",
+                    minimize: bool = True) -> FitnessProgram:
+    """Lower a registered problem name (``"F3"``, ``"rastrigin:8"``) or a
+    blackbox ``(N, V) -> (N,)`` + bounds into a :class:`FitnessProgram`.
 
+    LUT ROMs are synthesized only when mode='lut' (they can be 2^c-entry
+    tables); ``supports_lut`` still reports availability either way.
+    """
+    if (problem is None) == (fitness is None):
+        raise ValueError("pass exactly one of problem= or fitness=")
+    if mode not in ("lut", "arith"):
+        raise ValueError(f"mode must be 'lut' or 'arith', got {mode!r}")
 
-def arith_fitness(px: jax.Array, qx: jax.Array, c: int, spec: ArithSpec) -> jax.Array:
-    """TPU-native FFM: decode + FMAs on the VPU, no memory traffic."""
-    vp = decode(px, c, spec.domain)
-    vq = decode(qx, c, spec.domain)
-    d = _poly3(vp, spec.alpha_coef) + _poly3(vq, spec.beta_coef)
-    if spec.gamma_sqrt:
-        d = jnp.sqrt(jnp.maximum(d, 0.0))
-    return d
+    if problem is not None:
+        pdef, v_suffix = resolve_problem(problem)
+        if v_suffix is not None and n_vars is not None and v_suffix != n_vars:
+            raise ValueError(f"problem {problem!r} pins V={v_suffix} but "
+                             f"n_vars={n_vars} was also given")
+        v = resolve_vars(pdef, v_suffix if v_suffix is not None else n_vars)
+        check_mode(pdef, mode)
+        tables = (build_tables(pdef, bits_per_var, v)
+                  if mode == "lut" else None)
+        return FitnessProgram(name=pdef.name, n_vars=v,
+                              bits_per_var=bits_per_var,
+                              domains=(pdef.domain,) * v,
+                              minimize=minimize, fn=pdef.fn,
+                              supports_lut=pdef.separable, tables=tables)
+
+    if bounds is None:
+        raise ValueError("blackbox fitness requires bounds=")
+    domains = tuple((float(lo), float(hi)) for lo, hi in bounds)
+    if n_vars is not None and n_vars != len(domains):
+        raise ValueError(f"n_vars={n_vars} does not match "
+                         f"len(bounds)={len(domains)}")
+    if mode == "lut":
+        raise ValueError("blackbox fitness has no LUT lowering; "
+                         "run mode='arith'")
+    return FitnessProgram(name="blackbox", n_vars=len(domains),
+                          bits_per_var=bits_per_var, domains=domains,
+                          minimize=minimize, fn=fitness, supports_lut=False)

@@ -81,46 +81,29 @@ FitnessFn = Callable[[jax.Array], jax.Array]  # uint32[N, V] -> [N] (i32|f32)
 
 
 # ---------------------------------------------------------------------------
-# Fitness builders (the FFM's two modes + general blackbox)
+# Fitness builders — thin wrappers over core.fitness.FitnessProgram
 # ---------------------------------------------------------------------------
 
 
 def make_lut_fitness(tables: F.LutTables) -> FitnessFn:
-    def fit(x: jax.Array) -> jax.Array:
-        px = (x[:, 0] & np.uint32((1 << tables.c) - 1)).astype(jnp.int32)
-        qx = (x[:, 1] & np.uint32((1 << tables.c) - 1)).astype(jnp.int32)
-        return F.lut_fitness(px, qx, tables)
-    return fit
-
-
-def make_arith_fitness(spec: F.ArithSpec, c: int) -> FitnessFn:
-    def fit(x: jax.Array) -> jax.Array:
-        mask = np.uint32((1 << c) - 1)
-        px = x[:, 0] & mask
-        qx = x[:, 1] & mask
-        return F.arith_fitness(px, qx, c, spec)
-    return fit
+    """Faithful ROM-pipeline fitness over the whole chromosome matrix."""
+    return lambda x: F.lut_fitness(x, tables)
 
 
 def make_blackbox_fitness(fn: Callable[[jax.Array], jax.Array], c: int,
                           bounds) -> FitnessFn:
     """General V-variable fitness: decode each c-bit gene to its bound range
     and hand the (N, V) float matrix to `fn` (vectorized, jit-able)."""
-    lo = jnp.asarray([b[0] for b in bounds], jnp.float32)
-    hi = jnp.asarray([b[1] for b in bounds], jnp.float32)
-    scale = (hi - lo) / jnp.float32((1 << c) - 1)
-
-    def fit(x: jax.Array) -> jax.Array:
-        mask = np.uint32((1 << c) - 1)
-        vals = lo + (x & mask).astype(jnp.float32) * scale
-        return fn(vals)
-    return fit
+    prog = F.compile_program(fitness=fn, bounds=bounds, bits_per_var=c)
+    return prog.stage
 
 
-def fitness_for_problem(problem: F.Problem, cfg: GAConfig) -> FitnessFn:
-    if cfg.mode == "lut":
-        return make_lut_fitness(F.build_tables(problem, 2 * cfg.c))
-    return make_arith_fitness(F.ArithSpec.for_problem(problem), cfg.c)
+def fitness_for_problem(problem, cfg: GAConfig) -> FitnessFn:
+    """Fitness for a registry problem (name or ProblemDef) at cfg's V/c/mode."""
+    name = problem.name if isinstance(problem, F.ProblemDef) else problem
+    prog = F.compile_program(problem=name, n_vars=cfg.v, bits_per_var=cfg.c,
+                             mode=cfg.mode, minimize=cfg.minimize)
+    return prog.fitness(cfg.mode)
 
 
 # ---------------------------------------------------------------------------

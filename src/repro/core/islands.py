@@ -150,6 +150,15 @@ def ring_shift_sharded(x: jax.Array, mesh: Mesh,
     `lax.ppermute` cascade: shift along the last axis, then patch the wrap
     positions (trailing indices all zero) with progressively higher-axis
     shifts.  Must be called inside `shard_map` over `axis_names`.
+
+    Device-order canonicalization: the ring is defined over LOGICAL mesh
+    coordinates (`lax.axis_index` / the ppermute permutation), and XLA
+    shards global arrays by the same logical coordinates — the physical
+    device array backing the mesh never enters the ordering.  A mesh built
+    with a custom device permutation (`Mesh(devices[perm], ...)`) therefore
+    yields the SAME island ring as the local `jnp.roll`, bit-for-bit; only
+    which physical chip hosts each logical shard changes.  Asserted in
+    tests/test_topology.py (permuted-device mesh vs local run).
     """
     def shift(v, a):
         s = mesh.shape[a]

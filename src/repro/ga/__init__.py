@@ -14,10 +14,13 @@ exchanged):
     reference      JAX scan     single        any operators, lut or arith
                                               FFM, vmapped `n_repeats`
     fused          Pallas       single        VMEM-resident state, MXU
-                   kernel                     one-hot tournaments;
-                                              bit-identical to reference;
-                                              `gens_per_epoch` generations
-                                              per launch
+                   kernel                     one-hot tournaments; the
+                                              spec's FitnessProgram.stage
+                                              is traced in as the FFM (any
+                                              registered problem or
+                                              blackbox); bit-identical to
+                                              reference; `gens_per_epoch`
+                                              generations per launch
     islands        JAX scan     island_ring   ring migration; shard_mapped
                                               over a mesh when given
     fused-islands  Pallas       island_ring   ring migration *between*
@@ -28,6 +31,13 @@ exchanged):
     eager          python loop  single        non-traceable fitness
                                               (operators stay jitted)
     =============  ===========  ============  ===========================
+
+    Problems are a registry too (`repro.core.fitness.PROBLEMS`): the
+    paper's F1–F3 plus the n-variable suite (sphere / rastrigin /
+    rosenbrock / ackley, `problem="rastrigin:8"` picks V) and
+    user-registered definitions (`ga.register_problem`); each compiles to
+    a `FitnessProgram` lowering it to LUT ROMs, the XLA arith path and
+    the in-kernel FFM stage.
 
 Typical use::
 
@@ -58,6 +68,9 @@ from them:
                                            GASpec + Engine underneath
 """
 
+from repro.core.fitness import (PROBLEMS, FitnessProgram, ProblemDef,
+                                compile_program, register_problem,
+                                resolve_problem)
 from repro.ga.spec import GASpec, paper_spec
 from repro.ga.operators import (CROSSOVER, MUTATION, PAPER_PIPELINE,
                                 SELECTION, CrossoverOp, MutationOp,
@@ -71,6 +84,8 @@ from repro.ga.engine import (BackendUnsupported, Engine, EngineResult,
 
 __all__ = [
     "GASpec", "paper_spec",
+    "PROBLEMS", "ProblemDef", "FitnessProgram", "compile_program",
+    "register_problem", "resolve_problem",
     "Engine", "EngineResult", "solve", "resolve_backend",
     "capability_matrix", "BackendUnsupported",
     "BACKENDS", "Backend", "Segment",

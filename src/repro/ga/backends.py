@@ -11,10 +11,12 @@ An **executor** advances a stack of populations a block of generations:
              (repro.core.ga.run_scan); any registered operators.
   fused      the Pallas `ga_step` kernel — one launch per
              `spec.gens_per_epoch` generations (default 1), the stack rides
-             the kernel grid axis; paper pipeline, arith FFM, power-of-two
-             N <= 1024.  Bit-identical to `reference` (state and best; the
-             trajectory coarsens to one sample per launch when
-             gens_per_epoch > 1).
+             the kernel grid axis; paper pipeline, arith FFM (ANY traceable
+             problem: the spec's FitnessProgram.stage is traced into the
+             kernel as its FFM stage, so n-variable registry problems and
+             blackboxes run fused), power-of-two N <= 1024.  Bit-identical
+             to `reference` (state and best; the trajectory coarsens to one
+             sample per launch when gens_per_epoch > 1).
 
 A **topology** owns population layout, the epoch loop and migration:
 
@@ -213,7 +215,6 @@ class FusedExecutor(Executor):
 
     def __init__(self, spec: GASpec, *, interpret=None):
         super().__init__(spec, interpret=interpret)
-        self.arith = spec.arith_spec()
         self.gens_per_epoch = spec.gens_per_epoch
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
@@ -226,8 +227,6 @@ class FusedExecutor(Executor):
         if spec.mode != "arith":
             return ("Pallas kernel requires mode='arith' — LUT gathers stay "
                     "on the XLA path ('reference')")
-        if spec.problem is None or spec.arith_spec() is None:
-            return "fused FFM needs a closed-form paper problem (ArithSpec)"
         if spec.n & (spec.n - 1):
             return f"fused kernel requires power-of-two N (got {spec.n})"
         if spec.n > 1024:
@@ -240,7 +239,12 @@ class FusedExecutor(Executor):
         return None
 
     def block(self, gens: int):
-        cfg, arith, interp = self.cfg, self.arith, self.interpret
+        # the FFM stage traced into the kernel is the SAME function the
+        # reference executor evaluates (Executor.__init__ sets self.fit =
+        # spec.fitness_fn() = FitnessProgram.stage in arith mode), so any
+        # registered n-variable problem or traceable blackbox runs fused and
+        # stays bit-identical to reference by construction.
+        cfg, ffm, interp = self.cfg, self.fit, self.interpret
         mini = self.spec.minimize
         # generations folded inside one launch: the in-kernel best fold
         # (track_best) keeps best_y/best_x bit-identical to gens_per_epoch=1;
@@ -253,7 +257,7 @@ class FusedExecutor(Executor):
                 x, sel, cross, mut, by, bx = carry
                 x2, sel2, cross2, mut2, y, lby, lbx = \
                     _ga_step.ga_generation_kernel(
-                        x, sel, cross, mut, cfg=cfg, spec=arith,
+                        x, sel, cross, mut, cfg=cfg, ffm=ffm,
                         interpret=interp, gens=g, track_best=True)
                 # lby/lbx fold the best over all g in-kernel generations
                 # with the reference tie rule; the trajectory samples both

@@ -122,6 +122,8 @@ class Engine:
 
     def _result(self, seg: Segment, wall_s: float) -> EngineResult:
         scale = self.spec.fitness_scale()
+        seg.extras.setdefault("problem", self.spec.problem or "blackbox")
+        seg.extras.setdefault("n_vars", self.spec.v)
         return EngineResult(
             spec=self.spec, backend=self.backend_name,
             best_fitness=seg.best_y / scale,
@@ -187,6 +189,8 @@ class Engine:
                 "best_params": self.spec.decode(best_x),
                 "traj_best": np.empty((0,)), "wall_s": 0.0,
                 "gens_per_s": 0.0, "backend": self.backend_name,
+                "problem": self.spec.problem or "blackbox",
+                "n_vars": self.spec.v,
                 "migrations": migrations,
                 "already_complete": True,
             }
@@ -223,6 +227,8 @@ class Engine:
                 "wall_s": dt,
                 "gens_per_s": seg.gens / dt if dt > 0 else float("inf"),
                 "backend": self.backend_name,
+                "problem": self.spec.problem or "blackbox",
+                "n_vars": self.spec.v,
                 "migrations": migrations,
                 "extras": seg.extras,
             }

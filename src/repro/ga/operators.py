@@ -13,9 +13,11 @@ All operators consume the same LFSR banks as the paper's modules, so GAState
 layout (and checkpoints) are identical whichever combination is selected.
 Register your own with the ``register_*`` decorators; every registered
 selection scheme is runnable through ``repro.ga.solve`` on the reference,
-islands and eager backends (the fused Pallas backend implements the paper's
-fixed pipeline only — the capability check routes other combinations to the
-reference backend).
+islands and eager backends.  The fused Pallas backend implements the
+paper's fixed OPERATOR pipeline only — its FFM stage, by contrast, is fully
+pluggable (`FitnessProgram.stage` traced into the kernel) — so non-paper
+operator combinations route to the reference backend via the capability
+check while any problem's fitness still runs fused under the paper ops.
 """
 
 from __future__ import annotations

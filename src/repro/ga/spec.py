@@ -1,18 +1,24 @@
 """`GASpec` — one frozen description of a GA run.
 
 A spec bundles everything the old divergent drivers used to take through
-ad-hoc plumbing: the problem (a paper benchmark or a blackbox fitness over a
-box), the chromosome encoding, the operator pipeline, the run policy
+ad-hoc plumbing: the problem (a registered benchmark or a blackbox fitness
+over a box), the chromosome encoding, the operator pipeline, the run policy
 (generations, repeats, islands) and the population topology.  Every
 (topology × executor) backend consumes the same spec, so swapping
 `"reference"` ↔ `"fused"` ↔ `"islands"` ↔ `"fused-islands"` ↔ `"eager"`
 is a string, not a rewrite.
+
+The fitness side of a spec compiles to a `repro.core.fitness.FitnessProgram`
+(`spec.program()`): one object lowering the problem to the LUT ROMs, the
+XLA arith path AND the Pallas in-kernel FFM stage — which is why any
+registered n-variable problem (``problem="rastrigin:8"``) or traceable
+blackbox runs on every executor.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
@@ -25,9 +31,10 @@ from repro.ga import operators as OPS
 class GASpec:
     """Problem + encoding + operator choices + run policy (all frozen).
 
-    Exactly one of ``problem`` (a paper benchmark name, "F1"/"F2"/"F3") or
-    ``fitness`` (a batch blackbox ``(N, V) float32 -> (N,)`` with ``bounds``)
-    must be set.
+    Exactly one of ``problem`` (a registered benchmark name — ``"F1"``..,
+    ``"sphere"``, ``"rastrigin"``, .. — optionally with a ``:V`` suffix,
+    e.g. ``"rastrigin:8"``) or ``fitness`` (a batch blackbox
+    ``(N, V) float32 -> (N,)`` with ``bounds``) must be set.
     """
 
     # ---- problem --------------------------------------------------------
@@ -38,7 +45,7 @@ class GASpec:
     # ---- encoding -------------------------------------------------------
     n: int = 32                    # population size N (even)
     bits_per_var: int = 10         # c (paper: m/2)
-    n_vars: Optional[int] = None   # V; default 2 (paper) or len(bounds)
+    n_vars: Optional[int] = None   # V; default from the problem registry
     mode: str = "arith"            # FFM mode: "lut" (ROMs) | "arith" (VPU)
 
     # ---- operators ------------------------------------------------------
@@ -61,6 +68,8 @@ class GASpec:
     # state and the running best individual stay bit-identical to
     # gens_per_epoch=1; only the best/mean trajectory coarsens to one
     # sample per launch.  Ignored by the reference/eager executors.
+    # On an island_ring topology it is capped at migrate_every (the ring
+    # runs BETWEEN launches) — larger values are a validation error.
     gens_per_epoch: int = 1
 
     # ---- topology (how populations are arranged + exchanged) ------------
@@ -77,17 +86,30 @@ class GASpec:
     def __post_init__(self):
         if (self.problem is None) == (self.fitness is None):
             raise ValueError("set exactly one of problem= or fitness=")
-        if self.problem is not None and self.problem not in F.PROBLEMS:
-            raise ValueError(f"unknown problem {self.problem!r}; "
-                             f"choose from {sorted(F.PROBLEMS)}")
+        if self.mode not in ("lut", "arith"):
+            raise ValueError(f"mode must be 'lut' or 'arith', got {self.mode!r}")
+        if self.problem is not None:
+            # resolve "name:V" shorthand into (problem, n_vars) and validate
+            # through the SAME rule set compile_program enforces
+            pdef, v_suffix = F.resolve_problem(self.problem)
+            if v_suffix is not None:
+                if self.n_vars is not None and self.n_vars != v_suffix:
+                    raise ValueError(
+                        f"problem {self.problem!r} pins V={v_suffix} but "
+                        f"n_vars={self.n_vars} was also given")
+                object.__setattr__(self, "problem", pdef.name)
+                object.__setattr__(self, "n_vars", v_suffix)
+            F.resolve_vars(pdef, self.n_vars)
+            F.check_mode(pdef, self.mode)
         if self.fitness is not None and self.bounds is None:
             raise ValueError("blackbox fitness requires bounds=")
+        if self.fitness is not None and self.mode == "lut":
+            raise ValueError("blackbox fitness has no LUT lowering; "
+                             "run mode='arith'")
         if self.bounds is not None:
             object.__setattr__(self, "bounds",
                                tuple((float(lo), float(hi))
                                      for lo, hi in self.bounds))
-        if self.mode not in ("lut", "arith"):
-            raise ValueError(f"mode must be 'lut' or 'arith', got {self.mode!r}")
         # operator names must exist — fail at spec build, not mid-run
         OPS.resolve(self.selection, self.crossover, self.mutation)
         for field, lo in (("n", 2), ("bits_per_var", 1), ("generations", 1),
@@ -109,6 +131,14 @@ class GASpec:
         if self.migration not in ("ring", "none"):
             raise ValueError(f"migration must be 'ring' or 'none', "
                              f"got {self.migration!r}")
+        if (self.effective_topology == "island_ring"
+                and self.gens_per_epoch > self.migrate_every):
+            raise ValueError(
+                f"gens_per_epoch={self.gens_per_epoch} exceeds "
+                f"migrate_every={self.migrate_every}: on an island_ring "
+                "topology migration runs BETWEEN kernel launches, so one "
+                "launch can fold at most migrate_every generations — lower "
+                "gens_per_epoch or raise migrate_every")
         if self.mesh_axes is not None:
             if (not self.mesh_axes
                     or not all(isinstance(a, str) and a
@@ -121,9 +151,9 @@ class GASpec:
 
     @property
     def v(self) -> int:
-        if self.n_vars is not None:
-            return self.n_vars
-        return len(self.bounds) if self.bounds is not None else 2
+        if self.bounds is not None:
+            return len(self.bounds)
+        return F.resolve_vars(self.problem_def(), self.n_vars)
 
     @property
     def effective_topology(self) -> str:
@@ -145,38 +175,29 @@ class GASpec:
                           steps_per_draw=self.steps_per_draw,
                           seed=self.seed, mode=self.mode)
 
-    def problem_obj(self) -> Optional[F.Problem]:
+    def problem_def(self) -> Optional[F.ProblemDef]:
         return F.PROBLEMS[self.problem] if self.problem is not None else None
 
-    def arith_spec(self) -> Optional[F.ArithSpec]:
-        """Closed-form fitness for the fused kernel (problems only)."""
-        p = self.problem_obj()
-        if p is None:
-            return None
-        try:
-            return F.ArithSpec.for_problem(p)
-        except ValueError:
-            return None
+    def program(self) -> F.FitnessProgram:
+        """The spec's fitness compiled for every executor (LUT ROMs when
+        mode='lut', the shared XLA/in-kernel arith stage always)."""
+        return F.compile_program(problem=self.problem, fitness=self.fitness,
+                                 bounds=self.bounds, n_vars=self.v,
+                                 bits_per_var=self.bits_per_var,
+                                 mode=self.mode, minimize=self.minimize)
 
     def fitness_fn(self) -> G.FitnessFn:
-        cfg = self.ga_config()
-        if self.problem is not None:
-            return G.fitness_for_problem(self.problem_obj(), cfg)
-        return G.make_blackbox_fitness(self.fitness, self.bits_per_var,
-                                       self.bounds)
+        return self.program().fitness(self.mode)
 
     def fitness_scale(self) -> float:
         """Raw-fitness units per real unit (lut mode is fixed-point)."""
-        if self.problem is not None and self.mode == "lut":
-            t = F.build_tables(self.problem_obj(), 2 * self.bits_per_var)
-            return 2.0 ** t.frac_bits
-        return 1.0
+        return self.program().scale(self.mode)
 
     def var_domains(self) -> Tuple[Tuple[float, float], ...]:
         """Per-variable decode range."""
         if self.bounds is not None:
             return self.bounds
-        return (self.problem_obj().domain,) * self.v
+        return (self.problem_def().domain,) * self.v
 
     def decode(self, x: np.ndarray) -> np.ndarray:
         """Decode a uint32[V] chromosome to real variable values."""

@@ -21,23 +21,30 @@ by the (N, N) one-hot f32 matrices → N ≤ 1024 keeps it ≤ 4 MiB (checked).
 The FPGA paper tops out at N=64; larger populations use more islands or the
 pure-JAX path in repro.core.ga.
 
-Fitness inside the kernel is the TPU-native arithmetic mode (cubic α/β + γ ∈
-{identity, sqrt} on the VPU).  LUT-mode (HBM gather tables) stays in the
+The FFM stage is PLUGGABLE: the kernel takes a traceable ``ffm`` function
+``uint32[N, V] bits -> f32[N]`` (normally ``FitnessProgram.stage`` from
+repro.core.fitness — decode + the problem's jnp expression on the VPU) and
+traces it into the kernel body, so any n-variable registry problem or user
+blackbox runs fused, not just the paper's two-variable polynomials.  Because
+the reference executor evaluates the SAME function, fused stays bit-identical
+to reference for every program.  LUT-mode (HBM gather tables) stays in the
 pure-JAX path — gathers inside a TPU kernel would defeat the fusion.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.fitness import ArithSpec
 from repro.core.ga import GAConfig
+
+# The kernel-facing FFM stage: uint32 bits (N, V) -> f32 fitness (N,).
+FfmStage = Callable[[jax.Array], jax.Array]
 
 
 def _lfsr_draw(state, steps: int):
@@ -70,8 +77,8 @@ def _gen_best(x, y, cfg: GAConfig):
 
 
 def _kernel(x_ref, sel_ref, cross_ref, mut_ref,              # inputs
-            *out_refs,                                       # outputs
-            cfg: GAConfig, spec: ArithSpec, gens: int = 1,
+            *rest,                                           # consts + outputs
+            cfg: GAConfig, ffm, const_shapes=(), gens: int = 1,
             track_best: bool = False):
     """One or MANY generations per launch.
 
@@ -80,11 +87,23 @@ def _kernel(x_ref, sel_ref, cross_ref, mut_ref,              # inputs
     beats; we keep them in VMEM between generations, so HBM sees one state
     read + one write per `gens` generations instead of per generation.
 
+    `rest` leads with one VMEM ref per FFM closure constant (arrays the
+    user's fitness captured, hoisted by `jax.closure_convert` in
+    `ga_generation_kernel` — Pallas kernels cannot capture array constants
+    directly); `const_shapes` restores their original shapes.
+
     track_best=True adds two outputs (best_y, best_x) folding the running
     best individual *inside* the launch with the reference scan's strict
     improvement + first-occurrence tie rule — so a gens>1 launch loses no
     best-tracking fidelity, only per-generation trajectory resolution
     (y_out is the fitness of the LAST pre-update population)."""
+    n_consts = len(const_shapes)
+    const_refs, out_refs = rest[:n_consts], rest[n_consts:]
+    if n_consts:
+        consts = [r[0].reshape(s) for r, s in zip(const_refs, const_shapes)]
+        ffm_stage = lambda x: ffm(x, *consts)
+    else:
+        ffm_stage = ffm
     if track_best:
         x_out, sel_out, cross_out, mut_out, y_out, by_out, bx_out = out_refs
     else:
@@ -92,7 +111,7 @@ def _kernel(x_ref, sel_ref, cross_ref, mut_ref,              # inputs
 
     def step(carry):
         x, sel, cross, mut, y = carry[:5]
-        out = _one_generation(x, sel, cross, mut, y, cfg=cfg, spec=spec)
+        out = _one_generation(x, sel, cross, mut, y, cfg=cfg, ffm=ffm_stage)
         if track_best:
             by, bx = carry[5], carry[6]
             y2 = out[4]
@@ -117,21 +136,12 @@ def _kernel(x_ref, sel_ref, cross_ref, mut_ref,              # inputs
 
 
 def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
-                    *, cfg: GAConfig, spec: ArithSpec):
+                    *, cfg: GAConfig, ffm: FfmStage):
     n, v, c = cfg.n, cfg.v, cfg.c
     var_mask = jnp.uint32((1 << c) - 1)
 
-    # ---- FFM (arithmetic mode, VPU) --------------------------------------
-    lo, hi = spec.domain
-    scale = jnp.float32((hi - lo) / float((1 << c) - 1))
-    vals = jnp.float32(lo) + (x & var_mask).astype(jnp.float32) * scale
-
-    def poly3(vv, coef):
-        a3, a2, a1, a0 = (jnp.float32(t) for t in coef)
-        return ((a3 * vv + a2) * vv + a1) * vv + a0
-
-    delta = poly3(vals[:, 0], spec.alpha_coef) + poly3(vals[:, 1], spec.beta_coef)
-    y = jnp.sqrt(jnp.maximum(delta, 0.0)) if spec.gamma_sqrt else delta  # (N,)
+    # ---- FFM (pluggable traced stage: decode + problem expression, VPU) --
+    y = jnp.asarray(ffm(x), jnp.float32)                  # (N,)
 
     # ---- SM: tournaments via one-hot MXU gathers --------------------------
     sel = _lfsr_draw(sel_in, cfg.steps_per_draw)          # (2, N)
@@ -166,13 +176,15 @@ def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
 
 
 def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
-                         spec: ArithSpec, interpret: bool = False,
+                         ffm: FfmStage, interpret: bool = False,
                          gens: int = 1, track_best: bool = False
                          ) -> Tuple[jax.Array, ...]:
     """Launch the fused generation(s) over a stack of islands.
 
     x: uint32[I, N, V]; sel: uint32[I, 2, N]; cross: uint32[I, V, N//2];
     mut: uint32[I, V, N].  Returns (x', sel', cross', mut', y[I, N]).
+    ffm: the traced FFM stage — uint32[N, V] -> f32[N] (normally
+    `FitnessProgram.stage`; any traceable n-variable/blackbox objective).
     gens: generations per launch (VMEM-resident state between them).
     track_best appends (best_y[I], best_x[I, V]) — the running best over all
     `gens` in-kernel generations, reference tie rule (see `_kernel`).
@@ -182,9 +194,27 @@ def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
     i_islands, n, v = x.shape
     assert (n, v) == (cfg.n, cfg.v)
 
+    # Hoist any array constants the FFM stage closed over (decode bounds,
+    # blackbox targets, ...) into explicit kernel inputs — Pallas kernels
+    # cannot capture non-scalar constants.  `jax.closure_convert` only
+    # hoists autodiff-perturbed consts, so we lower the stage to a jaxpr
+    # ourselves and replay it inside the kernel with the consts re-read from
+    # refs.  Every const rides in replicated (block index 0 on every grid
+    # step), flattened to one 2-D (1, size) lane row for TPU friendliness
+    # and reshaped back inside the kernel.
+    closed = jax.make_jaxpr(lambda xx: jnp.asarray(ffm(xx), jnp.float32))(
+        jax.ShapeDtypeStruct((n, v), jnp.uint32))
+    ffm_consts = closed.consts
+    ffm_conv = lambda xx, *cs: jax.core.eval_jaxpr(closed.jaxpr, cs, xx)[0]
+    const_shapes = tuple(np.shape(c) for c in ffm_consts)
+    flat_consts = [jnp.reshape(jnp.asarray(c), (1, max(int(np.size(c)), 1)))
+                   for c in ffm_consts]
+
     blk = lambda *shape: pl.BlockSpec((1,) + shape, lambda i: (i,) + (0,) * len(shape))
+    cblk = lambda k: pl.BlockSpec((1, k), lambda i: (0, 0))
     grid = (i_islands,)
-    kernel = functools.partial(_kernel, cfg=cfg, spec=spec, gens=gens,
+    kernel = functools.partial(_kernel, cfg=cfg, ffm=ffm_conv,
+                               const_shapes=const_shapes, gens=gens,
                                track_best=track_best)
     out_specs = [blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n), blk(n)]
     out_shape = [
@@ -201,8 +231,9 @@ def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n)],
+        in_specs=[blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n)]
+                 + [cblk(c.shape[1]) for c in flat_consts],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(x, sel, cross, mut)
+    )(x, sel, cross, mut, *flat_consts)

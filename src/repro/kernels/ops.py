@@ -12,8 +12,8 @@ from typing import Optional
 
 import jax
 
-from repro.core.fitness import ArithSpec
 from repro.core.ga import GAConfig
+from repro.kernels.ga_step import FfmStage
 from repro.kernels import ga_step as _ga_step
 from repro.kernels import lfsr_kernel as _lfsr
 
@@ -31,13 +31,15 @@ def lfsr_advance(state: jax.Array, steps: int,
                                      interpret=_auto_interpret(interpret))
 
 
-def ga_generation(x, sel, cross, mut, *, cfg: GAConfig, spec: ArithSpec,
+def ga_generation(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
                   interpret: Optional[bool] = None, gens: int = 1,
                   track_best: bool = False):
     """Fused GA generation(s) over islands. See kernels/ga_step.py.
-    gens > 1 keeps the GA state VMEM-resident between generations;
-    track_best=True appends in-kernel (best_y[I], best_x[I, V]) outputs."""
-    fn = functools.partial(_ga_step.ga_generation_kernel, cfg=cfg, spec=spec,
+    ffm: the traced FFM stage (uint32[N, V] -> f32[N], e.g.
+    `FitnessProgram.stage`); gens > 1 keeps the GA state VMEM-resident
+    between generations; track_best=True appends in-kernel
+    (best_y[I], best_x[I, V]) outputs."""
+    fn = functools.partial(_ga_step.ga_generation_kernel, cfg=cfg, ffm=ffm,
                            interpret=_auto_interpret(interpret), gens=gens,
                            track_best=track_best)
     return jax.jit(fn)(x, sel, cross, mut)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lfsr
-from repro.core.fitness import ArithSpec, decode
+from repro.core.fitness import decode  # noqa: F401  (re-export for tests)
 from repro.core.ga import GAConfig
 
 
@@ -23,29 +23,16 @@ def lfsr_advance_ref(state: jax.Array, steps: int) -> jax.Array:
     return lfsr.steps(state, steps)
 
 
-def _fitness_ref(x: jax.Array, cfg: GAConfig, spec: ArithSpec) -> jax.Array:
-    c = cfg.c
-    mask = jnp.uint32((1 << c) - 1)
-    lo, hi = spec.domain
-    scale = jnp.float32((hi - lo) / float((1 << c) - 1))
-    vals = jnp.float32(lo) + (x & mask).astype(jnp.float32) * scale
-
-    def poly3(vv, coef):
-        a3, a2, a1, a0 = (jnp.float32(t) for t in coef)
-        return ((a3 * vv + a2) * vv + a1) * vv + a0
-
-    d = poly3(vals[:, 0], spec.alpha_coef) + poly3(vals[:, 1], spec.beta_coef)
-    return jnp.sqrt(jnp.maximum(d, 0.0)) if spec.gamma_sqrt else d
-
-
-def ga_generation_ref(x, sel, cross, mut, *, cfg: GAConfig, spec: ArithSpec
+def ga_generation_ref(x, sel, cross, mut, *, cfg: GAConfig, ffm
                       ) -> Tuple[jax.Array, ...]:
-    """Oracle for ga_step: operates on stacked islands via vmap."""
+    """Oracle for ga_step: operates on stacked islands via vmap.
+    `ffm` is the same traced FFM stage the kernel consumes
+    (uint32[N, V] -> f32[N])."""
 
     def one(x, sel, cross, mut):
         n, v, c = cfg.n, cfg.v, cfg.c
         var_mask = jnp.uint32((1 << c) - 1)
-        y = _fitness_ref(x, cfg, spec)
+        y = jnp.asarray(ffm(x), jnp.float32)
 
         sel2 = lfsr.steps(sel, cfg.steps_per_draw)
         i1 = (sel2[0] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)

@@ -1,23 +1,28 @@
-"""GA launcher — run the paper's experiments from the command line.
+"""GA launcher — run the paper's experiments (and beyond) from the CLI.
 
     PYTHONPATH=src python -m repro.launch.ga_run --problem F1 --n 32 --m 26
     PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --backend fused
+    PYTHONPATH=src python -m repro.launch.ga_run --problem rastrigin:8 \
+        --backend fused --mode arith
     PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --islands 16
-    PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --islands 8 \
-        --backend fused-islands --topology island_ring
-    PYTHONPATH=src python -m repro.launch.ga_run --selection roulette \
-        --backend reference --repeats 8
-    PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --islands 8 \
-        --backend fused-islands --mesh auto --gens-per-epoch 4
+    PYTHONPATH=src python -m repro.launch.ga_run --problem ackley:4 \
+        --islands 8 --backend fused-islands --mesh auto --gens-per-epoch 4
+    PYTHONPATH=src python -m repro.launch.ga_run --problem F3 --chunk 25 \
+        --metrics-port 9100      # scrape http://localhost:9100/metrics
 
-Any registered backend (reference | fused | islands | fused-islands | eager
-| auto — each a topology × executor composition) and any registered
-selection scheme work from one spec; `--topology` pins the population
-layout explicitly; `--mesh` shards the island axis over devices ("auto",
-"4", "2x4", ... — see repro.launch.mesh.parse_mesh) with `lax.ppermute`
-ring migration, bit-identical to the single-device run; `--gens-per-epoch`
-folds generations inside one Pallas launch on the fused executors;
-`--kernel` is kept as a deprecated alias for `--backend fused`.
+`--problem` takes any registered problem name (repro.core.fitness.PROBLEMS:
+F1/F2/F3 pin the paper's two-variable layout; sphere/rastrigin/rosenbrock/
+ackley take an optional `:V` variable-count suffix).  Any registered backend
+(reference | fused | islands | fused-islands | eager | auto — each a
+topology × executor composition) runs any problem the capability matrix
+allows; the fused Pallas executors trace the problem's FFM stage into the
+kernel, n-variable suites and blackboxes included.  `--mesh` shards the
+island axis over devices ("auto", "4", "2x4", ... — see
+repro.launch.mesh.parse_mesh) with `lax.ppermute` ring migration,
+bit-identical to the single-device run; `--gens-per-epoch` folds generations
+inside one Pallas launch; `--metrics-port` exposes live GA_METRICS as a
+Prometheus /metrics endpoint while the run streams; `--kernel` is kept as a
+deprecated alias for `--backend fused`.
 """
 
 from __future__ import annotations
@@ -29,10 +34,14 @@ import numpy as np
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--problem", default="F3", choices=["F1", "F2", "F3"])
+    ap.add_argument("--problem", default="F3",
+                    help="registered problem, optionally 'name:V' "
+                         "(F1 | F2 | F3 | sphere | rastrigin | rosenbrock "
+                         "| ackley; e.g. 'rastrigin:8')")
     ap.add_argument("--n", type=int, default=32)
     ap.add_argument("--m", type=int, default=20,
-                    help="chromosome bits (2 variables of m/2 bits)")
+                    help="paper chromosome bits for V=2 problems (c = m/2 "
+                         "bits per variable)")
     ap.add_argument("--k", type=int, default=100, help="generations")
     ap.add_argument("--mode", default="lut", choices=["lut", "arith"])
     ap.add_argument("--mutation-rate", type=float, default=0.02)
@@ -64,28 +73,36 @@ def main():
                     help="stream telemetry every CHUNK generations")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint/resume directory for chunked runs")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="opt-in: serve GA_METRICS as Prometheus text at "
+                         "http://0.0.0.0:PORT/metrics for the run's duration")
     ap.add_argument("--seed", type=int, default=1)
     args = ap.parse_args()
 
     from repro import ga
+    from repro.core import fitness as F
 
     backend = args.backend
     if args.kernel:
         backend = "fused"
     n_islands = max(args.islands, 1)
+    pdef, _ = F.resolve_problem(args.problem)   # fail fast on unknown names
     mode = args.mode
     if backend in ("fused", "fused-islands") and mode == "lut":
         mode = "arith"   # the kernel's FFM is arithmetic-only
+    if mode == "lut" and not pdef.separable:
+        print(f"note: {pdef.name} has no LUT (ROM) lowering; using arith")
+        mode = "arith"
 
-    spec = ga.paper_spec(args.problem, n=args.n, m=args.m, mode=mode,
-                         mutation_rate=args.mutation_rate, seed=args.seed,
-                         generations=args.k, n_islands=n_islands,
-                         migrate_every=args.migrate_every,
-                         n_repeats=args.repeats, selection=args.selection,
-                         gens_per_epoch=args.gens_per_epoch,
-                         topology=None if args.topology == "auto"
-                         else args.topology,
-                         migration=args.migration)
+    spec = ga.GASpec(problem=args.problem, n=args.n, bits_per_var=args.m // 2,
+                     mode=mode, mutation_rate=args.mutation_rate,
+                     seed=args.seed, generations=args.k, n_islands=n_islands,
+                     migrate_every=args.migrate_every,
+                     n_repeats=args.repeats, selection=args.selection,
+                     gens_per_epoch=args.gens_per_epoch,
+                     topology=None if args.topology == "auto"
+                     else args.topology,
+                     migration=args.migration)
 
     mesh = None
     if args.mesh:
@@ -93,17 +110,38 @@ def main():
         mesh = parse_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)} ({mesh.devices.size} device(s))")
 
-    if args.chunk > 0:
+    server = None
+    if args.metrics_port is not None:
+        from repro.serve.metrics_http import start_metrics_server
+        server = start_metrics_server(args.metrics_port)
+        print(f"metrics: http://0.0.0.0:{server.server_address[1]}/metrics")
+
+    if args.chunk > 0 or server is not None:
+        from repro.serve.engine import GA_METRICS
         eng = ga.Engine(spec, backend, mesh=mesh)
         last = None
-        for tele in eng.run_chunked(chunk_generations=args.chunk,
-                                    ckpt_dir=args.ckpt_dir):
-            print(f"[{tele['backend']}] chunk {tele['chunk']}: "
-                  f"{tele['gens_done']}/{tele['gens_total']} gens, "
-                  f"best={tele['best_fitness']:.4f}, "
-                  f"{tele['gens_per_s']:.0f} gens/s, "
-                  f"{tele.get('migrations', 0)} migrations")
-            last = tele
+        job = GA_METRICS.start_job(
+            GA_METRICS.allocate_job_id(spec.problem), backend=eng.backend_name,
+            gens_total=spec.generations, problem=spec.problem,
+            n_vars=spec.v)
+        try:
+            for tele in eng.run_chunked(
+                    chunk_generations=args.chunk or None,
+                    ckpt_dir=args.ckpt_dir):
+                GA_METRICS.record_chunk(job.job_id, tele)
+                print(f"[{tele['backend']}] chunk {tele['chunk']}: "
+                      f"{tele['gens_done']}/{tele['gens_total']} gens, "
+                      f"best={tele['best_fitness']:.4f}, "
+                      f"{tele['gens_per_s']:.0f} gens/s, "
+                      f"{tele.get('migrations', 0)} migrations")
+                last = tele
+            GA_METRICS.finish_job(job.job_id)
+        except BaseException as e:   # mirror run_ga_job: /metrics must not
+            GA_METRICS.finish_job(job.job_id, error=repr(e))   # stay "running"
+            raise
+        finally:
+            if server is not None:
+                server.shutdown()
         if last is not None:
             print(f"decoded vars: {np.round(last['best_params'], 4)}")
         return
@@ -113,6 +151,8 @@ def main():
     topo_name = out.extras.get("topology")
     comp = f" ({exec_name} x {topo_name})" if exec_name and topo_name else ""
     print(f"backend: {out.backend}{comp}")
+    print(f"problem: {out.extras.get('problem', spec.problem)} "
+          f"({spec.v} variable(s), mode={mode})")
     if out.extras.get("sharded"):
         print(f"shards: {out.extras['n_shards']} "
               f"({spec.n_islands // out.extras['n_shards']} island(s) each)")

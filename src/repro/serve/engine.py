@@ -139,6 +139,8 @@ class GAJobStats:
 
     job_id: str
     backend: str = "?"
+    problem: str = "?"               # registry name or "blackbox"
+    n_vars: int = 0                  # decoded variable count V
     status: str = "pending"          # pending | running | done | failed
     gens_done: int = 0
     gens_total: int = 0
@@ -166,6 +168,8 @@ class GAJobStats:
         return {
             "job_id": self.job_id,
             "backend": self.backend,
+            "problem": self.problem,
+            "n_vars": self.n_vars,
             "status": self.status,
             "generations_done": self.gens_done,
             "generations_total": self.gens_total,
@@ -203,9 +207,11 @@ class GAMetricsRegistry:
             return jid
 
     def start_job(self, job_id: str, backend: str = "?",
-                  gens_total: int = 0) -> GAJobStats:
+                  gens_total: int = 0, problem: str = "?",
+                  n_vars: int = 0) -> GAJobStats:
         with self._lock:
             job = GAJobStats(job_id=job_id, backend=backend,
+                             problem=problem, n_vars=n_vars,
                              gens_total=gens_total, status="running")
             self._jobs[job_id] = job
             return job
@@ -215,6 +221,8 @@ class GAMetricsRegistry:
         with self._lock:
             job = self._jobs[job_id]
             job.backend = tele.get("backend", job.backend)
+            job.problem = tele.get("problem", job.problem)
+            job.n_vars = int(tele.get("n_vars", job.n_vars))
             job.gens_done = int(tele.get("gens_done", job.gens_done))
             job.gens_total = int(tele.get("gens_total", job.gens_total))
             job.chunks += 1
@@ -275,7 +283,8 @@ def run_ga_job(spec, backend: str = "auto", *, job_id: Optional[str] = None,
         job_id = registry.allocate_job_id(spec.problem or "blackbox")
     eng = ga.Engine(spec, backend, mesh=mesh)
     registry.start_job(job_id, backend=eng.backend_name,
-                       gens_total=spec.generations)
+                       gens_total=spec.generations,
+                       problem=spec.problem or "blackbox", n_vars=spec.v)
     try:
         for tele in eng.run_chunked(chunk_generations=chunk_generations,
                                     ckpt_dir=ckpt_dir):

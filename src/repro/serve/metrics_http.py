@@ -1,0 +1,121 @@
+"""Minimal stdlib /metrics endpoint for the GA serving telemetry.
+
+`GA_METRICS` (repro.serve.engine) aggregates `Engine.run_chunked` telemetry
+per job; this module makes that snapshot scrapeable before a full RPC stack
+lands: a `http.server` daemon thread rendering the registry in Prometheus
+text exposition format.
+
+    from repro.serve.metrics_http import start_metrics_server
+    server = start_metrics_server(9100)          # or 0 for an ephemeral port
+    ... run GA jobs (serve.engine.run_ga_job) ...
+    server.shutdown()
+
+Endpoints: `/metrics` (Prometheus text, version 0.0.4) and `/healthz`.
+Opt-in from the CLI with `repro.launch.ga_run --metrics-port PORT`.
+"""
+
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+_PREFIX = "repro_ga"
+
+# per-job numeric gauges: (metrics()-dict key, prometheus suffix, help)
+_JOB_GAUGES = (
+    ("generations_done", "generations_done", "Generations completed"),
+    ("generations_total", "generations_total", "Generations requested"),
+    ("chunks", "chunks", "Telemetry chunks recorded"),
+    ("generations_per_s", "generations_per_s", "Generations per second"),
+    ("islands", "islands", "Concurrently evolving populations"),
+    ("shards", "shards", "Mesh shards the island axis spans"),
+    ("generations_per_s_per_shard", "generations_per_s_per_shard",
+     "Island-generations per second per mesh shard"),
+    ("best_fitness", "best_fitness", "Best fitness seen (real units)"),
+    ("migration_count", "migrations", "Ring migrations performed"),
+    ("n_vars", "n_vars", "Decoded variable count V"),
+    ("wall_s", "wall_seconds", "Wall-clock seconds spent"),
+)
+
+_FLEET_GAUGES = (
+    ("job_count", "jobs", "GA jobs known to the registry"),
+    ("jobs_done", "jobs_done", "GA jobs finished successfully"),
+    ("generations_total", "fleet_generations", "Generations done, all jobs"),
+    ("migrations_total", "fleet_migrations", "Migrations, all jobs"),
+)
+
+
+def _esc(v) -> str:
+    return str(v).replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def render_prometheus(snapshot: dict) -> str:
+    """Serialize a `GAMetricsRegistry.metrics()` snapshot as Prometheus
+    text exposition format (one gauge family per numeric job stat, the job
+    identity carried in labels)."""
+    lines = []
+    jobs = snapshot.get("jobs", {})
+
+    def label_str(j):
+        return (f'job_id="{_esc(j["job_id"])}",backend="{_esc(j["backend"])}"'
+                f',problem="{_esc(j["problem"])}"')
+
+    for key, suffix, help_ in _JOB_GAUGES:
+        name = f"{_PREFIX}_{suffix}"
+        lines.append(f"# HELP {name} {help_}")
+        lines.append(f"# TYPE {name} gauge")
+        for j in jobs.values():
+            val = j.get(key)
+            if val is None:
+                continue
+            lines.append(f"{name}{{{label_str(j)}}} {float(val):g}")
+    # job status as a one-hot info gauge
+    name = f"{_PREFIX}_job_status"
+    lines.append(f"# HELP {name} Job state (1 for the current status label)")
+    lines.append(f"# TYPE {name} gauge")
+    for j in jobs.values():
+        lines.append(
+            f'{name}{{{label_str(j)},status="{_esc(j["status"])}"}} 1')
+    for key, suffix, help_ in _FLEET_GAUGES:
+        name = f"{_PREFIX}_{suffix}"
+        lines.append(f"# HELP {name} {help_}")
+        lines.append(f"# TYPE {name} gauge")
+        lines.append(f"{name} {float(snapshot.get(key, 0)):g}")
+    return "\n".join(lines) + "\n"
+
+
+def start_metrics_server(port: int = 0, registry=None,
+                         host: str = "0.0.0.0") -> ThreadingHTTPServer:
+    """Serve `registry` (default: the process-global GA_METRICS) at
+    /metrics on a daemon thread.  Returns the server; its bound port is
+    `server.server_address[1]` (useful with port=0), stop with
+    `server.shutdown()`."""
+    if registry is None:
+        from repro.serve.engine import GA_METRICS
+        registry = GA_METRICS
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802  (http.server API)
+            if self.path.split("?")[0] not in ("/metrics", "/healthz", "/"):
+                self.send_error(404)
+                return
+            if self.path.startswith("/healthz"):
+                body = b"ok\n"
+                ctype = "text/plain"
+            else:
+                body = render_prometheus(registry.metrics()).encode()
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):   # keep scrapes out of stdout
+            pass
+
+    server = ThreadingHTTPServer((host, port), Handler)
+    thread = threading.Thread(target=server.serve_forever,
+                              name="ga-metrics-http", daemon=True)
+    thread.start()
+    return server

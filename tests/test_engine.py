@@ -25,8 +25,11 @@ def _spec(**kw):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("problem", ["F1", "F3"])
+@pytest.mark.parametrize("problem", ["F1", "F3", "rastrigin:6", "ackley:4",
+                                     "rosenbrock:5"])
 def test_reference_vs_fused_bit_exact(problem):
+    """Paper problems AND the n-variable suite: the kernel's pluggable FFM
+    stage is the same traced function the reference executor evaluates."""
     spec = _spec(problem=problem, n=64, generations=4)
     ref = ga.Engine(spec, "reference")
     fus = ga.Engine(spec, "fused")
@@ -73,6 +76,55 @@ def test_every_backend_from_one_spec():
             results["fused-islands"].best_fitness
         assert results["reference"].best_fitness == pytest.approx(
             results["eager"].best_fitness, rel=1e-4)
+
+
+def test_blackbox_runs_fused_bit_exact():
+    """Acceptance: a traceable blackbox (no closed form, captures its own
+    arrays) is no longer rejected by the fused backend and runs the Pallas
+    kernel bit-identical to the reference executor."""
+    import jax.numpy as jnp
+    target = jnp.asarray([0.25, -1.5, 2.0], jnp.float32)
+    spec = ga.GASpec(fitness=lambda p: jnp.sum((p - target) ** 2, axis=-1),
+                     bounds=((-4.0, 4.0),) * 3, n=32, bits_per_var=12,
+                     mutation_rate=0.05, seed=13, generations=12)
+    assert ga.capability_matrix(spec)["fused"] is None
+    r = ga.solve(spec, backend="reference")
+    f = ga.solve(spec, backend="fused")
+    assert f.backend == "fused"
+    assert r.best_fitness == f.best_fitness
+    np.testing.assert_array_equal(r.best_x, f.best_x)
+    np.testing.assert_array_equal(r.traj_best, f.traj_best)
+    assert r.best_params.shape == (3,)
+
+
+def test_problem_registry_spec_plumbing():
+    """'name:V' shorthand, registry validation and per-problem telemetry."""
+    spec = _spec(problem="rastrigin:8")
+    assert spec.problem == "rastrigin" and spec.v == 8
+    assert spec.program().modes == ("lut", "arith")
+    r = ga.solve(spec, backend="reference")
+    assert r.extras["problem"] == "rastrigin" and r.extras["n_vars"] == 8
+    assert r.best_params.shape == (8,)
+    with pytest.raises(ValueError, match="unknown problem"):
+        _spec(problem="nope")
+    with pytest.raises(ValueError, match="V=2"):
+        _spec(problem="F3:4")
+    with pytest.raises(ValueError, match="at least 2"):
+        _spec(problem="rosenbrock:1")
+    with pytest.raises(ValueError, match="separable"):
+        _spec(problem="ackley", mode="lut")
+    # custom problems register and run end to end (on the fused kernel too)
+    import jax.numpy as jnp
+    ga.register_problem(ga.ProblemDef(
+        name="_test_tilted",
+        fn=lambda v: jnp.sum(v * v + 0.5 * v, axis=-1),
+        domain=(-3.0, 3.0)))
+    try:
+        r = ga.solve(_spec(problem="_test_tilted:3", generations=10),
+                     backend="fused")
+        assert r.backend == "fused" and np.isfinite(r.best_fitness)
+    finally:
+        del ga.PROBLEMS["_test_tilted"]
 
 
 # ---------------------------------------------------------------------------

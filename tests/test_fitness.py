@@ -1,4 +1,6 @@
-"""FFM tests: LUT (faithful ROM) vs arithmetic (TPU-native) fitness modes."""
+"""FFM tests: the FitnessProgram abstraction — LUT (faithful stacked ROMs)
+vs arithmetic (TPU-native) lowerings agree, the registry validates problem
+shapes, and the bits -> values decode respects its bounds (property test)."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -6,35 +8,81 @@ import pytest
 
 from repro.core import fitness as F
 from repro.core import ga as G
+from repro.testing.hypothesis_fallback import given, settings, st
 
 
-@pytest.mark.parametrize("name", ["F1", "F2", "F3"])
-@pytest.mark.parametrize("m", [20, 26])
-def test_lut_matches_arith_within_quantization(name, m):
-    problem = F.PROBLEMS[name]
-    c = m // 2
-    t = F.build_tables(problem, m)
-    spec = F.ArithSpec.for_problem(problem)
+@pytest.mark.parametrize("name,n_vars", [("F1", 2), ("F2", 2), ("F3", 2),
+                                         ("sphere", 4), ("rastrigin", 4)])
+@pytest.mark.parametrize("c", [10, 13])
+def test_lut_matches_arith_within_quantization(name, n_vars, c):
+    """The stacked per-variable ROMs quantize the same function the arith
+    stage evaluates — for the paper's F1–F3 AND the n-variable suite."""
+    pdef = F.PROBLEMS[name]
+    t = F.build_tables(pdef, c, n_vars)
+    prog = F.compile_program(problem=name, n_vars=n_vars, bits_per_var=c,
+                             mode="lut")
     rng = np.random.default_rng(0)
-    px = jnp.asarray(rng.integers(0, 1 << c, 256), jnp.int32)
-    qx = jnp.asarray(rng.integers(0, 1 << c, 256), jnp.int32)
-    y_lut = np.asarray(F.lut_fitness(px, qx, t)).astype(np.float64) / 2.0 ** t.frac_bits
-    y_ari = np.asarray(F.arith_fitness(px.astype(jnp.uint32),
-                                       qx.astype(jnp.uint32), c, spec))
+    x = jnp.asarray(rng.integers(0, 1 << c, (256, n_vars)), jnp.uint32)
+    y_lut = np.asarray(prog.lut_stage(x)).astype(np.float64) / 2.0 ** t.frac_bits
+    y_ari = np.asarray(prog.stage(x))
     scale = np.maximum(np.abs(y_ari), 1.0)
     # quantization: frac_bits rounding + γ table addressing granularity
-    tol = (2.0 ** -t.frac_bits) * 4 + (2.0 ** t.delta_shift) * 2.0 ** -t.frac_bits
+    tol = (2.0 ** -t.frac_bits) * (2 + n_vars) \
+        + (2.0 ** t.delta_shift) * 2.0 ** -t.frac_bits
     assert np.max(np.abs(y_lut - y_ari) / scale) < max(tol, 1e-2)
 
 
 def test_tables_fixed_point_autoscale():
-    t1 = F.build_tables(F.F1, 26)   # F1 spans ±6.9e10 -> negative frac bits
+    t1 = F.build_tables(F.F1, 13, 2)   # F1 spans ±6.9e10 -> negative frac bits
     assert t1.frac_bits < 0
-    t3 = F.build_tables(F.F3, 20)   # F3 small range -> fractional precision
+    t3 = F.build_tables(F.F3, 10, 2)   # F3 small range -> fractional precision
     assert t3.frac_bits > 0
-    assert t3.gamma_t is not None   # sqrt needs the third ROM
-    t2 = F.build_tables(F.F2, 20)
-    assert t2.gamma_t is None       # identity γ -> ROM elided (paper's F1/F2)
+    assert t3.gamma_t is not None      # sqrt needs the third ROM
+    t2 = F.build_tables(F.F2, 10, 2)
+    assert t2.gamma_t is None          # identity γ -> ROM elided (paper F1/F2)
+    # per-variable ROMs stack on the leading axis
+    assert F.build_tables(F.PROBLEMS["rastrigin"], 8, 6).var_t.shape == (6, 256)
+
+
+def test_non_separable_problems_reject_lut():
+    for name in ("rosenbrock", "ackley"):
+        assert not F.PROBLEMS[name].separable
+        with pytest.raises(ValueError, match="separable"):
+            F.build_tables(F.PROBLEMS[name], 10, 4)
+        with pytest.raises(ValueError, match="separable"):
+            F.compile_program(problem=name, n_vars=4, bits_per_var=10,
+                              mode="lut")
+        # arith mode compiles fine and reports its modes honestly
+        prog = F.compile_program(problem=name, n_vars=4, bits_per_var=10)
+        assert prog.modes == ("arith",)
+        with pytest.raises(ValueError, match="arith"):
+            prog.fitness("lut")
+
+
+def test_registry_resolution_and_validation():
+    pdef, v = F.resolve_problem("rastrigin:8")
+    assert pdef.name == "rastrigin" and v == 8
+    assert F.resolve_problem("F3") == (F.F3, None)
+    with pytest.raises(ValueError, match="unknown problem"):
+        F.resolve_problem("nope")
+    with pytest.raises(ValueError, match="integer"):
+        F.resolve_problem("sphere:abc")
+    # paper problems pin V=2
+    with pytest.raises(ValueError, match="V=2"):
+        F.compile_program(problem="F3", n_vars=5, bits_per_var=10)
+    # rosenbrock's coupled terms need at least two variables
+    with pytest.raises(ValueError, match="at least 2"):
+        F.compile_program(problem="rosenbrock", n_vars=1, bits_per_var=10)
+
+
+def test_known_optima_of_nvar_suite():
+    """Every registry problem evaluates its known optimum correctly."""
+    zeros = np.zeros((1, 4), np.float32)
+    assert float(F.PROBLEMS["sphere"].f(zeros)[0]) == 0.0
+    assert float(F.PROBLEMS["rastrigin"].f(zeros)[0]) == pytest.approx(0.0, abs=1e-4)
+    assert float(F.PROBLEMS["ackley"].f(zeros)[0]) == pytest.approx(0.0, abs=1e-4)
+    ones = np.ones((1, 4), np.float32)
+    assert float(F.PROBLEMS["rosenbrock"].f(ones)[0]) == 0.0
 
 
 def test_decode_domain_mapping():
@@ -42,21 +90,49 @@ def test_decode_domain_mapping():
     np.testing.assert_allclose(np.asarray(v), [-128.0, 127.0], rtol=1e-6)
 
 
+@given(st.integers(4, 16), st.integers(1, 6), st.integers(0, 10_000),
+       st.floats(-100.0, 99.0), st.floats(0.5, 200.0))
+@settings(max_examples=30, deadline=None)
+def test_decode_round_trip_stays_in_bounds(c, n_vars, seed, lo, width):
+    """Blackbox decode property: any c-bit gene pattern decodes inside its
+    per-variable box, endpoints map to the box edges exactly, and the
+    mapping is monotone in the gene value."""
+    hi = lo + width
+    prog = F.compile_program(fitness=lambda p: jnp.sum(p, -1),
+                             bounds=((lo, hi),) * n_vars, bits_per_var=c)
+    rng = np.random.default_rng(seed)
+    # full uint32 words: decode must mask to c bits first
+    x = jnp.asarray(rng.integers(0, 1 << 32, (64, n_vars), dtype=np.uint64)
+                    .astype(np.uint32))
+    vals = np.asarray(prog.decode(x))
+    assert vals.shape == (64, n_vars)
+    eps = 1e-4 * max(abs(lo), abs(hi), 1.0)
+    assert (vals >= lo - eps).all() and (vals <= hi + eps).all()
+    ends = np.asarray(prog.decode(
+        jnp.asarray([[0] * n_vars, [(1 << c) - 1] * n_vars], jnp.uint32)))
+    np.testing.assert_allclose(ends[0], lo, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(ends[1], hi, rtol=1e-5, atol=1e-3)
+    u = np.sort(rng.integers(0, 1 << c, 16))
+    mono = np.asarray(prog.decode(
+        jnp.asarray(np.tile(u[:, None], (1, n_vars)), jnp.uint32)))
+    assert (np.diff(mono[:, 0]) >= 0).all()
+
+
 @pytest.mark.parametrize("name,n,m,k", [("F1", 32, 26, 100),
                                         ("F3", 64, 20, 100)])
 def test_paper_convergence_claims(name, n, m, k):
     """Paper Figs. 11–12: F1 (N=32, m=26) reaches its global minimum within
     100 generations; F3 (N=64, m=20) gets near zero."""
-    problem = F.PROBLEMS[name]
+    pdef = F.PROBLEMS[name]
     best = np.inf
     for seed in (1, 2, 3):
         cfg = G.GAConfig(n=n, c=m // 2, v=2, mutation_rate=0.05, seed=seed,
                          mode="lut")
-        t = F.build_tables(problem, m)
+        t = F.build_tables(pdef, m // 2, 2)
         out = G.run_scan(cfg, G.make_lut_fitness(t), k)
         best = min(best, float(out.best_y) / 2.0 ** t.frac_bits)
     if name == "F1":
-        target = float(problem.f(np.array(0.0), np.array(-4096.0)))
+        target = float(pdef.f(np.array([0.0, -4096.0])))
         assert best <= target * 0.98  # within 2% of the global minimum
     else:
         assert best < 2.0             # near zero (grid-limited)

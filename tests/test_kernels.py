@@ -1,8 +1,10 @@
-"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracle."""
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracle.
 
-import dataclasses
+The FFM stage is pluggable (`FitnessProgram.stage` traced into the kernel),
+so the sweeps cover the paper problems, the n-variable registry suite AND a
+user blackbox closing over its own arrays (the closure-constant hoisting
+path)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -19,17 +21,61 @@ def _states(cfg, n_islands=2):
     return ISL.init_islands_fast(icfg)
 
 
+def _ffm(problem: str, cfg: G.GAConfig):
+    return F.compile_program(problem=problem, n_vars=cfg.v,
+                             bits_per_var=cfg.c).stage
+
+
 @pytest.mark.parametrize("n", [16, 64, 256, 1024])
 @pytest.mark.parametrize("problem", ["F1", "F2", "F3"])
 def test_ga_step_matches_ref_population_sweep(n, problem):
     cfg = G.GAConfig(n=n, c=10, v=2, mutation_rate=0.03, seed=n, mode="arith")
-    spec = F.ArithSpec.for_problem(F.PROBLEMS[problem])
+    ffm = _ffm(problem, cfg)
     st = _states(cfg)
     k = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                          cfg=cfg, spec=spec)
+                          cfg=cfg, ffm=ffm)
     r = ref.ga_generation_ref(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                              cfg=cfg, spec=spec)
+                              cfg=cfg, ffm=ffm)
     for a, b in zip(k[:4], r[:4]):       # uint32 state: bit-exact
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(k[4]), np.asarray(r[4]), rtol=2e-5)
+
+
+@pytest.mark.parametrize("problem,v", [("sphere", 4), ("rastrigin", 6),
+                                       ("rosenbrock", 4), ("ackley", 8)])
+def test_ga_step_nvar_suite_matches_ref(problem, v):
+    """The V-variable decode + suite objectives run inside the kernel and
+    stay bit-exact with the oracle (which evaluates the same stage)."""
+    cfg = G.GAConfig(n=64, c=10, v=v, mutation_rate=0.03, seed=v,
+                     mode="arith")
+    ffm = _ffm(problem, cfg)
+    st = _states(cfg, n_islands=3)
+    k = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+                          cfg=cfg, ffm=ffm)
+    r = ref.ga_generation_ref(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+                              cfg=cfg, ffm=ffm)
+    for a, b in zip(k[:4], r[:4]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(k[4]), np.asarray(r[4]), rtol=2e-5)
+
+
+def test_ga_step_blackbox_closure_constants():
+    """A user fitness closing over its own arrays runs in-kernel: the
+    captured constants are hoisted into kernel inputs (Pallas forbids
+    implicit array captures), bit-exact with the XLA evaluation."""
+    cfg = G.GAConfig(n=32, c=12, v=5, mutation_rate=0.05, seed=9,
+                     mode="arith")
+    target = jnp.asarray(np.linspace(-1.0, 1.0, 5), jnp.float32)
+    weight = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0], jnp.float32)
+    prog = F.compile_program(
+        fitness=lambda p: jnp.sum(weight * (p - target) ** 2, axis=-1),
+        bounds=((-2.0, 2.0),) * 5, bits_per_var=cfg.c)
+    st = _states(cfg, n_islands=2)
+    k = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+                          cfg=cfg, ffm=prog.stage)
+    r = ref.ga_generation_ref(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+                              cfg=cfg, ffm=prog.stage)
+    for a, b in zip(k[:4], r[:4]):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_allclose(np.asarray(k[4]), np.asarray(r[4]), rtol=2e-5)
 
@@ -38,12 +84,12 @@ def test_ga_step_matches_ref_population_sweep(n, problem):
 @pytest.mark.parametrize("mr", [0.01, 0.1])
 def test_ga_step_matches_ref_width_sweep(c, mr):
     cfg = G.GAConfig(n=64, c=c, v=2, mutation_rate=mr, seed=c, mode="arith")
-    spec = F.ArithSpec.for_problem(F.F3)
+    ffm = _ffm("F3", cfg)
     st = _states(cfg, n_islands=3)
     k = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                          cfg=cfg, spec=spec)
+                          cfg=cfg, ffm=ffm)
     r = ref.ga_generation_ref(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                              cfg=cfg, spec=spec)
+                              cfg=cfg, ffm=ffm)
     for a, b in zip(k[:4], r[:4]):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -52,12 +98,12 @@ def test_ga_step_matches_ref_width_sweep(c, mr):
 def test_ga_step_minimize_maximize(minimize):
     cfg = G.GAConfig(n=128, c=10, v=2, mutation_rate=0.02, seed=5,
                      minimize=minimize, mode="arith")
-    spec = F.ArithSpec.for_problem(F.F2)
+    ffm = _ffm("F2", cfg)
     st = _states(cfg)
     k = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                          cfg=cfg, spec=spec)
+                          cfg=cfg, ffm=ffm)
     r = ref.ga_generation_ref(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                              cfg=cfg, spec=spec)
+                              cfg=cfg, ffm=ffm)
     np.testing.assert_array_equal(np.asarray(k[0]), np.asarray(r[0]))
 
 
@@ -65,10 +111,10 @@ def test_ga_kernel_multi_generation_converges():
     """One launch, 100 in-kernel generations (gens>1 VMEM residency), with
     the in-kernel best fold — converges near the F3 optimum."""
     cfg = G.GAConfig(n=64, c=10, v=2, mutation_rate=0.05, seed=11, mode="arith")
-    spec = F.ArithSpec.for_problem(F.F3)
+    ffm = _ffm("F3", cfg)
     st = _states(cfg, n_islands=4)
     out = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                            cfg=cfg, spec=spec, gens=100, track_best=True)
+                            cfg=cfg, ffm=ffm, gens=100, track_best=True)
     best_y = out[5]
     assert best_y.shape == (4,)
     assert float(jnp.min(best_y)) < 1.0  # near the F3 optimum
@@ -80,10 +126,10 @@ def test_ga_kernel_track_best_matches_oracle(gens):
     reference argmin tie rule: re-running generation by generation and
     folding outside must give bit-identical (best_y, best_x)."""
     cfg = G.GAConfig(n=32, c=10, v=2, mutation_rate=0.05, seed=3, mode="arith")
-    spec = F.ArithSpec.for_problem(F.F1)
+    ffm = _ffm("F1", cfg)
     st = _states(cfg, n_islands=3)
     out = ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                            cfg=cfg, spec=spec, gens=gens, track_best=True)
+                            cfg=cfg, ffm=ffm, gens=gens, track_best=True)
     by_k, bx_k = np.asarray(out[5]), np.asarray(out[6])
 
     x, sel, cross, mut = st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr
@@ -91,7 +137,7 @@ def test_ga_kernel_track_best_matches_oracle(gens):
     bx = np.zeros((3, cfg.v), np.uint32)
     for _ in range(gens):
         x2, sel, cross, mut, y = ops.ga_generation(x, sel, cross, mut,
-                                                   cfg=cfg, spec=spec)
+                                                   cfg=cfg, ffm=ffm)
         y = np.asarray(y)
         idx = np.argmin(y, axis=1)
         gb = y[np.arange(3), idx]
@@ -116,8 +162,8 @@ def test_lfsr_kernel_matches_ref(shape, steps):
 
 def test_kernel_rejects_oversize_population():
     cfg = G.GAConfig(n=2048, c=10, v=2, seed=1, mode="arith")
-    spec = F.ArithSpec.for_problem(F.F3)
+    ffm = _ffm("F3", cfg)
     st = _states(cfg, 1)
     with pytest.raises(AssertionError):
         ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
-                          cfg=cfg, spec=spec)
+                          cfg=cfg, ffm=ffm)

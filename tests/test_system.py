@@ -26,7 +26,7 @@ def test_f1_paper_reproduction_lut_mode():
     spec = ga.paper_spec("F1", n=32, m=26, mode="lut", mutation_rate=0.05,
                          seed=7, generations=100)
     r = ga.solve(spec, backend="reference")
-    target = float(F.F1.f(np.array(0.0), np.array(-4096.0)))
+    target = float(F.F1.f(np.array([0.0, -4096.0])))
     assert r.best_fitness <= 0.98 * target   # real units (descaled)
     # decoded solution sits at the domain edge the paper reports
     assert r.best_params[1] == pytest.approx(-4096.0, abs=2.0)

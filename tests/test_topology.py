@@ -58,6 +58,42 @@ def test_fused_islands_bit_identical_to_reference_islands(problem):
     assert seg_f.extras["topology"] == seg_r.extras["topology"] == "island_ring"
 
 
+@pytest.mark.parametrize("problem", ["rastrigin:4", "ackley:6"])
+def test_fused_islands_nvar_bit_identical(problem):
+    """Acceptance: n-variable registry problems run fused-islands (the
+    pluggable in-kernel FFM stage) bit-identical to reference islands."""
+    spec = _spec(problem=problem)
+    seg_r = _segment(spec, "islands", 15)
+    seg_f = _segment(spec, "fused-islands", 15)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(seg_f.state, field)),
+                                      np.asarray(getattr(seg_r.state, field)),
+                                      err_msg=field)
+    assert seg_f.best_y == seg_r.best_y
+    np.testing.assert_array_equal(seg_f.best_x, seg_r.best_x)
+
+
+def test_fused_islands_blackbox_bit_identical():
+    """Acceptance: a blackbox fitness (captured arrays and all) runs
+    fused-islands bit-identical to reference islands — the old
+    'fused FFM needs a closed-form paper problem' gate is gone."""
+    import jax.numpy as jnp
+    t = jnp.asarray([1.0, -0.5, 0.25], jnp.float32)
+    spec = ga.GASpec(fitness=lambda p: jnp.sum(jnp.abs(p - t), axis=-1),
+                     bounds=((-2.0, 2.0),) * 3, n=32, bits_per_var=10,
+                     mutation_rate=0.05, seed=11, generations=15,
+                     n_islands=4, migrate_every=5)
+    assert ga.capability_matrix(spec)["fused-islands"] is None
+    seg_r = _segment(spec, "islands", 15)
+    seg_f = _segment(spec, "fused-islands", 15)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(seg_f.state, field)),
+                                      np.asarray(getattr(seg_r.state, field)),
+                                      err_msg=field)
+    assert seg_f.best_y == seg_r.best_y
+    np.testing.assert_array_equal(seg_f.traj_best, seg_r.traj_best)
+
+
 def test_fused_islands_end_to_end_solve():
     """`ga.solve(spec, backend="fused-islands")` runs the Pallas step kernel
     under an island ring with migration and converges on the paper problem."""
@@ -236,14 +272,20 @@ def test_mesh_multi_device_bit_identical_in_process(backend):
 
 def test_fused_islands_mesh_bit_identical_subprocess_8dev():
     """Acceptance: fused-islands on a host-platform mesh of 8 devices is
-    bit-identical to the single-device run at equal seeds — F1–F3, plus an
-    n_repeats>1 on-mesh case (spawned so the forced device count doesn't
-    leak into this process)."""
+    bit-identical to the single-device run at equal seeds — F1–F3, an
+    n-variable registry problem (rastrigin:4) and a blackbox through the
+    in-kernel FFM stage, an n_repeats>1 on-mesh case, AND a mesh built
+    with a custom (reversed) device permutation, which must form the SAME
+    logical ring (ring_shift_sharded orders by logical mesh coordinates,
+    not physical devices).  Spawned so the forced device count doesn't
+    leak into this process."""
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses
 import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import Mesh
 from repro import ga
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 
@@ -251,19 +293,38 @@ def seg(spec, backend, gens, mesh=None):
     eng = ga.Engine(spec, backend, mesh=mesh)
     return eng.backend.segment(eng.init_state(), gens)
 
-for problem in ("F1", "F2", "F3"):
-    spec = ga.GASpec(problem=problem, n=32, bits_per_var=10, mode="arith",
-                     mutation_rate=0.05, seed=11, generations=15,
-                     n_islands=8, migrate_every=5)
+def check(spec, mesh, tag):
     local = seg(spec, "fused-islands", 15)
     shard = seg(spec, "fused-islands", 15, mesh=mesh)
     for f in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
         np.testing.assert_array_equal(np.asarray(getattr(shard.state, f)),
                                       np.asarray(getattr(local.state, f)),
-                                      err_msg=problem + " " + f)
-    assert shard.best_y == local.best_y
+                                      err_msg=tag + " " + f)
+    assert shard.best_y == local.best_y, tag
     np.testing.assert_array_equal(shard.traj_best, local.traj_best)
     assert shard.extras["sharded"] is True and shard.extras["n_shards"] == 8
+
+for problem in ("F1", "F2", "F3", "rastrigin:4"):
+    spec = ga.GASpec(problem=problem, n=32, bits_per_var=10, mode="arith",
+                     mutation_rate=0.05, seed=11, generations=15,
+                     n_islands=8, migrate_every=5)
+    check(spec, mesh, problem)
+
+# blackbox (captured-array FFM stage) on the mesh
+t = jnp.asarray([0.5, -1.0, 1.5], jnp.float32)
+bb = ga.GASpec(fitness=lambda p: jnp.sum((p - t) ** 2, axis=-1),
+               bounds=((-2.0, 2.0),) * 3, n=32, bits_per_var=10,
+               mutation_rate=0.05, seed=11, generations=15,
+               n_islands=8, migrate_every=5)
+check(bb, mesh, "blackbox")
+
+# custom device permutation: same LOGICAL ring, bit-identical run
+perm_mesh = Mesh(np.asarray(jax.devices())[::-1].reshape(2, 4),
+                 ("data", "model"))
+spec = ga.GASpec(problem="F3", n=32, bits_per_var=10, mode="arith",
+                 mutation_rate=0.05, seed=11, generations=15,
+                 n_islands=8, migrate_every=5)
+check(spec, perm_mesh, "permuted-devices")
 
 spec = ga.GASpec(problem="F3", n=32, bits_per_var=10, mode="arith",
                  mutation_rate=0.05, seed=11, generations=10,
@@ -304,6 +365,22 @@ def test_topology_field_validation():
         _spec(gens_per_epoch=0)
     with pytest.raises(ValueError, match="mesh_axes must be"):
         _spec(mesh_axes=())
+
+
+def test_gens_per_epoch_capped_by_migrate_every():
+    """On an island_ring topology the ring runs BETWEEN kernel launches, so
+    one launch can fold at most migrate_every generations — exceeding the
+    cap is a spec-build error with an actionable message, not a silent
+    truncation."""
+    with pytest.raises(ValueError) as ei:
+        _spec(migrate_every=4, gens_per_epoch=8)
+    msg = str(ei.value)
+    assert "gens_per_epoch=8" in msg and "migrate_every=4" in msg
+    assert "BETWEEN kernel launches" in msg
+    # equality is fine (one launch per epoch), and single topology is uncapped
+    assert _spec(migrate_every=4, gens_per_epoch=4).gens_per_epoch == 4
+    solo = _spec(n_islands=1, gens_per_epoch=64)
+    assert solo.effective_topology == "single"
 
 
 def test_auto_and_fallback_routing():
@@ -358,6 +435,7 @@ def test_serve_ga_job_metrics():
                      chunk_generations=5, registry=reg)
     assert out["status"] == "done"
     assert out["backend"] == "islands"
+    assert out["problem"] == "F3" and out["n_vars"] == 2
     assert out["generations_done"] == 10
     assert out["migration_count"] == 2
     assert out["generations_per_s"] > 0
@@ -373,3 +451,39 @@ def test_serve_ga_job_metrics():
     assert snap["migrations_total"] == 2
     assert snap["generations_total"] == 10
     assert "job-a" in snap["jobs"]
+
+
+def test_metrics_http_endpoint_scrapes_prometheus_text():
+    """The stdlib /metrics endpoint serves the registry snapshot in
+    Prometheus text format (and /healthz answers) while jobs run."""
+    import urllib.request
+
+    from repro.serve.engine import GAMetricsRegistry, run_ga_job
+    from repro.serve.metrics_http import render_prometheus, start_metrics_server
+
+    reg = GAMetricsRegistry()
+    server = start_metrics_server(0, registry=reg, host="127.0.0.1")
+    try:
+        port = server.server_address[1]
+        spec = _spec(problem="rastrigin:4", generations=10, migrate_every=5)
+        run_ga_job(spec, backend="islands", job_id="job-m",
+                   chunk_generations=5, registry=reg)
+        url = f"http://127.0.0.1:{port}"
+        with urllib.request.urlopen(f"{url}/metrics") as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            txt = resp.read().decode()
+        line = ('repro_ga_generations_done{job_id="job-m",'
+                'backend="islands",problem="rastrigin"} 10')
+        assert line in txt, txt[:500]
+        assert 'status="done"' in txt
+        assert "repro_ga_jobs 1" in txt
+        assert 'repro_ga_n_vars{job_id="job-m"' in txt
+        with urllib.request.urlopen(f"{url}/healthz") as resp:
+            assert resp.read() == b"ok\n"
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{url}/nope")
+        # the renderer is pure: re-rendering the snapshot reproduces the scrape
+        assert render_prometheus(reg.metrics()) == txt
+    finally:
+        server.shutdown()
