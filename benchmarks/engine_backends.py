@@ -9,6 +9,10 @@ Island-topology rows use 8 islands (total chromosome throughput is
 islands × gens/s); on CPU the fused rows run the Pallas kernel in interpret
 mode, so their absolute numbers only mean something on TPU — which is why
 `scripts/check_bench.py` gates combo-vs-combo RATIOS, not absolutes.
+The `fused-islands` rows run with `gens_per_epoch = 2 * migrate_every`,
+i.e. the RESIDENT epoch kernel (ring migration folded into the VMEM-resident
+launch; the intra-shard part on mesh rows) — their ratio row is the
+regression gate for that optimization.
 
 The island backends additionally run as mesh combos (`...@mesh{D}`): the
 island axis shard_mapped over D devices with `ppermute` ring migration —
@@ -48,7 +52,14 @@ def _spec_for(backend: str, problem: str, *, n: int, m: int,
     base = ga.GASpec(problem=problem, n=n, bits_per_var=m // 2, mode="arith",
                      mutation_rate=0.02, seed=1, generations=generations,
                      migrate_every=migrate_every)
-    if backend.split("@")[0] in ("islands", "fused-islands"):
+    if backend.split("@")[0] == "fused-islands":
+        # fold 2 migration intervals per launch: the resident-epoch kernel
+        # keeps the island stack + ring migration in VMEM (falls back to
+        # gridded per-interval launches if the VMEM budget says no), so this
+        # row gates the resident path's gens/s-vs-reference ratio
+        return dataclasses.replace(base, n_islands=n_islands,
+                                   gens_per_epoch=2 * migrate_every)
+    if backend.split("@")[0] == "islands":
         return dataclasses.replace(base, n_islands=n_islands)
     return base
 
@@ -71,9 +82,12 @@ def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
              mesh=None, devices: int = 1):
     eng = ga.Engine(spec, backend, mesh=mesh)
     out = eng.run()           # compile + warm caches
-    # interpret-mode Pallas and the eager loop are slow; fewer iters
+    # interpret-mode Pallas and the eager loop are slow; fewer iters.  The
+    # cheap XLA backends keep 3 timed iters even in smoke mode — the
+    # reference row is the anchor every ratio divides by, so its noise
+    # multiplies into every gated combo.
     slow = backend in ("fused", "fused-islands", "eager")
-    iters = 1 if (slow or smoke) else 3
+    iters = 1 if slow else 3
     dt, out = time_call(eng.run, warmup=0, iters=iters)
     gens = out.generations * max(spec.n_islands, spec.n_repeats)
     payload = json.dumps({"backend": out.backend,
@@ -86,6 +100,7 @@ def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
                           "n": spec.n,
                           "islands": spec.n_islands,
                           "devices": devices,
+                          "epoch_mode": out.extras.get("epoch_mode", "-"),
                           "migrations": out.extras.get("migrations", 0)},
                          separators=(",", ":"))
     # island epochs round K up to whole migration epochs — divide by

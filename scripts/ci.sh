@@ -18,10 +18,11 @@ echo "== n-variable smoke (rastrigin:4 through the fused kernel FFM stage) =="
 timeout 120 python -m repro.launch.ga_run \
     --problem rastrigin:4 --n 16 --k 20 --backend fused --mode arith
 
-echo "== distributed smoke (fused-islands on a mesh, in-kernel epochs) =="
+echo "== distributed smoke (fused-islands on a mesh, RESIDENT epochs:"
+echo "   gens_per_epoch > migrate_every, ring migration in VMEM) =="
 timeout 180 python -m repro.launch.ga_run \
     --problem rastrigin:4 --n 16 --k 16 --islands 2 --migrate-every 4 \
-    --backend fused-islands --mesh auto --gens-per-epoch 4
+    --backend fused-islands --mesh auto --gens-per-epoch 8
 
 echo "== backend-matrix smoke (1 tiny config per topology x executor x problem) =="
 mkdir -p artifacts

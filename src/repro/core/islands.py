@@ -91,14 +91,82 @@ def _splice_elites(states: G.GAState, y: jax.Array, elites: jax.Array,
     return splice_elites(states, y, elites, minimize=cfg.ga.minimize)
 
 
+# ---------------------------------------------------------------------------
+# Kernel-traceable migration math — THE rule set for elite/worst selection
+# and splicing, shared verbatim by the XLA epoch path AND the Pallas
+# resident-epoch kernel (kernels/ga_step.ga_epoch_kernel).  Everything here
+# is gather/scatter-free: first-occurrence argmin/argmax is a min-reduction
+# over a masked 2-D iota, and "gather row idx" / "scatter row idx" are a
+# masked sum / a select — exact for uint32 (single nonzero per mask) and
+# legal inside a TPU kernel, where dynamic per-row gathers are not.
+# ---------------------------------------------------------------------------
+
+
+def best_slot(y: jax.Array, *, minimize: bool) -> jax.Array:
+    """First-occurrence best index per island: (I, N) -> int32 (I,).
+    Matches jnp.argmin/argmax (which take the FIRST hit on ties) for
+    finite fitness — the engine's contract.  NaN fitness is out of
+    contract: the masked-iota form returns the out-of-range sentinel N
+    (no slot matches), making take_slot/splice_at no-ops rather than
+    propagating an argmin-style NaN index."""
+    yf = y.astype(jnp.float32)
+    m = (jnp.min(yf, axis=1, keepdims=True) if minimize
+         else jnp.max(yf, axis=1, keepdims=True))
+    iota = jax.lax.broadcasted_iota(jnp.int32, yf.shape, 1)
+    return jnp.min(jnp.where(yf == m, iota, yf.shape[1]), axis=1)
+
+
+def worst_slot(y: jax.Array, *, minimize: bool) -> jax.Array:
+    """First-occurrence worst index per island (the slot migration fills)."""
+    return best_slot(y, minimize=not minimize)
+
+
+def take_slot(a: jax.Array, slot: jax.Array) -> jax.Array:
+    """a[i, slot[i]] for an island-stacked array (I, N, ...) — expressed as
+    a one-hot masked sum (exact: one nonzero per row, any dtype)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, a.shape[:2], 1)
+    hit = iota == slot[:, None]
+    hit = hit.reshape(hit.shape + (1,) * (a.ndim - 2))
+    return jnp.sum(jnp.where(hit, a, jnp.zeros_like(a)), axis=1)
+
+
+def splice_at(x: jax.Array, slot: jax.Array, rows: jax.Array,
+              island_mask: jax.Array = None) -> jax.Array:
+    """x with x[i, slot[i]] <- rows[i] (a select, no scatter).  island_mask
+    (bool (I, 1), optional) disables the splice for masked-off islands —
+    the sharded path uses it to leave island 0 for the boundary elite."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape[:2], 1)
+    hit = iota == slot[:, None]
+    if island_mask is not None:
+        hit = hit & island_mask
+    return jnp.where(hit[..., None], rows[:, None, :], x)
+
+
+def elites_stack(x: jax.Array, y: jax.Array, *, minimize: bool
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Per-island elite over a raw stack: (elite_x [I, V], elite_y [I])."""
+    slot = best_slot(y, minimize=minimize)
+    return take_slot(x, slot), take_slot(y.astype(jnp.float32), slot)
+
+
+def ring_migrate_stack(x: jax.Array, y: jax.Array, *, minimize: bool
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One full ring migration over an in-block island stack (I, N, V):
+    elite extraction -> shift-by-one across the island axis (the `jnp.roll`
+    ring, written as a concat so it traces into a kernel) -> worst-slot
+    splice.  Returns (x', elite_x, elite_y).  Shared by `migrate_ring`
+    (XLA, between launches) and the resident-epoch kernel (in VMEM)."""
+    elite_x, elite_y = elites_stack(x, y, minimize=minimize)
+    shifted = jnp.concatenate([elite_x[-1:], elite_x[:-1]], axis=0)
+    x2 = splice_at(x, worst_slot(y, minimize=minimize), shifted)
+    return x2, elite_x, elite_y
+
+
 def splice_elites(states: G.GAState, y: jax.Array, elites: jax.Array,
                   *, minimize: bool) -> G.GAState:
     """Replace each island's worst individual with the incoming elite.
     states: island-stacked [I, ...]; y: fitness of states.x [I, N]."""
-    yf = y.astype(jnp.float32)
-    worst = jnp.argmax(yf, axis=1) if minimize else jnp.argmin(yf, axis=1)
-    I = states.x.shape[0]
-    x = states.x.at[jnp.arange(I), worst].set(elites)
+    x = splice_at(states.x, worst_slot(y, minimize=minimize), elites)
     return states._replace(x=x)
 
 
@@ -108,10 +176,7 @@ def _best_of(states: G.GAState, y: jax.Array, cfg: IslandConfig):
 
 def best_of(states: G.GAState, y: jax.Array, *, minimize: bool):
     """Per-island elite: (elite_x [I, V], elite_y [I]) of the current pops."""
-    yf = y.astype(jnp.float32)
-    best = jnp.argmin(yf, axis=1) if minimize else jnp.argmax(yf, axis=1)
-    I = states.x.shape[0]
-    return states.x[jnp.arange(I), best], yf[jnp.arange(I), best]
+    return elites_stack(states.x, y, minimize=minimize)
 
 
 def migrate_ring(states: G.GAState, y: jax.Array, *, minimize: bool
@@ -122,16 +187,15 @@ def migrate_ring(states: G.GAState, y: jax.Array, *, minimize: bool
     (i + 1) mod I — the `jnp.roll` analogue of the inter-FPGA elite links
     ([19]); `lax.ppermute` plays the same role on a device mesh (see
     `migrate_ring_sharded`).  This is THE migration step shared by
-    `make_local_step` and the engine's island_ring topology (any executor):
-    migration happens *between* generation blocks / kernel launches, so the
-    fused Pallas executor composes with islands without touching the kernel.
+    `make_local_step` and the engine's island_ring topology (any executor).
+    It delegates to `ring_migrate_stack`, the kernel-traceable form — so the
+    between-launch XLA migration and the resident-epoch kernel's in-VMEM
+    migration are the same math by construction.
 
     Returns (new_states, elite_x [I, V], elite_y [I]).
     """
-    elite_x, elite_y = best_of(states, y, minimize=minimize)
-    shifted = jnp.roll(elite_x, 1, axis=0)
-    states = splice_elites(states, y, shifted, minimize=minimize)
-    return states, elite_x, elite_y
+    x2, elite_x, elite_y = ring_migrate_stack(states.x, y, minimize=minimize)
+    return states._replace(x=x2), elite_x, elite_y
 
 
 # ---------------------------------------------------------------------------

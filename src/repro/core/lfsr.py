@@ -89,6 +89,37 @@ def seeds(key_or_int, n: int) -> jax.Array:
 
 
 @functools.lru_cache(maxsize=None)
+def leap_feedback_masks(t: int) -> Tuple[int, ...]:
+    """GF(2) masks for a t-step leap in shift+parity form (0 < t < 32).
+
+    Advancing the register t clocks is linear over GF(2): the top 32-t bits
+    are a plain left shift, and each of the t inserted feedback bits is the
+    parity of the ORIGINAL register masked by a precomputed 32-bit mask:
+
+        state_t  =  (s << t)  |  Σ_j  parity(s & M_j) << j
+
+    (bit j of the result was the feedback computed at clock t-1-j).  The
+    masks come from symbolically simulating `step` with each state bit
+    represented as a mask over the original bits — computed once per t and
+    cached.  This is the kernel-side replacement for the unrolled
+    shift-per-clock loop: the per-bit parities are independent (no
+    clock-to-clock dependency chain) and share the `s >> b` subterms, so the
+    VPU op count stops growing with the full feedback recurrence per step.
+    Bit-identical to `steps(state, t)` by construction (asserted in
+    tests/test_lfsr.py).
+    """
+    if not 0 < t < 32:
+        raise ValueError(f"leap_feedback_masks needs 0 < t < 32, got {t}")
+    bits = [1 << i for i in range(32)]   # bit i as a mask over the original s
+    for _ in range(t):
+        fb = 0
+        for b in TAPS:
+            fb ^= bits[b]
+        bits = [fb] + bits[:-1]          # s' = (s << 1) | fb
+    return tuple(bits[:t])
+
+
+@functools.lru_cache(maxsize=None)
 def _leap_matrix(t: int) -> Tuple[int, ...]:
     """Column representation of the t-step LFSR transition over GF(2).
 

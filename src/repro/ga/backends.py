@@ -25,9 +25,14 @@ A **topology** owns population layout, the epoch loop and migration:
   island_ring  `n_islands` populations; every `migrate_every` generations
                the best individual of each island ring-shifts to the next
                (`repro.core.islands.migrate_ring`, `lax.ppermute` on a
-               mesh), replacing the recipient's worst.  Migration runs
-               *between* executor blocks — i.e. between Pallas kernel
-               launches on the fused executor — so any executor composes.
+               mesh), replacing the recipient's worst.  By default
+               migration runs *between* executor blocks — i.e. between
+               Pallas kernel launches on the fused executor — so any
+               executor composes; with the fused executor, ring migration
+               and `gens_per_epoch >= migrate_every` the epoch planner
+               instead folds the migration INTO the VMEM-resident launch
+               (see IslandRingTopology's docstring — resident /
+               resident-sharded / gridded modes, all bit-identical).
                `n_repeats` replicas are vmapped OUTSIDE the island axis.
                Given a mesh, the island axis is `shard_map`ped over the
                mesh axes (`spec.mesh_axes`, default all) with EITHER
@@ -41,7 +46,9 @@ The registry exposes the compositions under the familiar names:
   reference     = reference × single
   fused         = fused     × single
   islands       = reference × island_ring  (shard_mapped when mesh given)
-  fused-islands = fused     × island_ring  (ring migration between launches,
+  fused-islands = fused     × island_ring  (ring migration between
+                                            launches, or in-VMEM on the
+                                            resident epoch plan;
                                             shard_mapped when mesh given)
   eager         = python-loop driver for non-traceable fitness (no
                   composition — fitness cannot be traced into a block)
@@ -236,6 +243,21 @@ class FusedExecutor(Executor):
             return ("fused kernel hardwires the paper pipeline "
                     "(tournament/single_point/xor); other operators run on "
                     "'reference'")
+        # size-gate hoisted FFM closure constants: the kernel replicates
+        # them into VMEM on every grid step, so a fitness capturing a large
+        # array (e.g. a dataset) must stream on the reference path instead
+        # of silently blowing the VMEM budget
+        try:
+            const_bytes = _ga_step.ffm_const_bytes(spec.program().stage,
+                                                   spec.ga_config())
+        except Exception as e:                   # pragma: no cover — defensive
+            return f"FFM stage failed to trace for the kernel ({e!r})"
+        limit = _ga_step.ffm_const_limit()
+        if const_bytes > limit:
+            return (f"FFM stage captures {const_bytes} bytes of array "
+                    f"constants (> the {limit}-byte VMEM gate): hoisted "
+                    "consts replicate into VMEM per grid step — run "
+                    "'reference' (REPRO_FFM_CONST_LIMIT overrides)")
         return None
 
     def block(self, gens: int):
@@ -407,7 +429,26 @@ class IslandRingTopology(Topology):
     fused executor — and migration becomes `islands.migrate_ring_sharded`
     (boundary-elite `lax.ppermute` between launches), which is bit-identical
     to the single-device `jnp.roll` ring.  Replicas vmap inside each shard,
-    so `n_repeats > 1` and `migration='none'` compose with the mesh too."""
+    so `n_repeats > 1` and `migration='none'` compose with the mesh too.
+
+    Epoch planning (fused executor, ring migration): when
+    `gens_per_epoch >= migrate_every` AND the shard's island stack fits the
+    VMEM budget (`kernels.ga_step.resident_fit_reason`), the RESIDENT epoch
+    kernel replaces the gridded one — all local islands live in one program
+    instance's VMEM and the ring migration runs inside the launch:
+
+      resident          (no mesh)  one launch folds
+                        gens_per_epoch // migrate_every whole migration
+                        intervals, full in-VMEM ring (`ring_migrate_stack`).
+      resident-sharded  (mesh)     one launch per interval; the intra-shard
+                        migrations run in VMEM and only the boundary elite
+                        crosses shards via `ppermute` between launches.
+      gridded           otherwise — the per-grid-step kernel with migration
+                        between launches (automatic fallback when the VMEM
+                        budget says the resident block will not fit).
+
+    All three are bit-identical in state and best tracking; resident mode
+    coarsens the trajectory to one sample per launch."""
 
     name = "island_ring"
 
@@ -420,6 +461,25 @@ class IslandRingTopology(Topology):
                                      n_islands=spec.n_islands,
                                      migrate_every=spec.migrate_every,
                                      axis_names=axis_names)
+        self.i_local = max(1, spec.n_islands // max(1, self.n_shards))
+        self.plan = self._epoch_plan()
+
+    def _epoch_plan(self) -> Dict[str, Any]:
+        """Resident vs. gridded decision (see class docstring)."""
+        spec, E = self.spec, self.spec.migrate_every
+        if (self.executor.name != "fused" or spec.migration != "ring"
+                or spec.gens_per_epoch < E):
+            return {"mode": "gridded", "epochs_per_launch": 1}
+        const_bytes = _ga_step.ffm_const_bytes(self.executor.fit, self.cfg)
+        reason = _ga_step.resident_fit_reason(self.cfg, self.i_local,
+                                              const_bytes)
+        if reason is not None:
+            return {"mode": "gridded", "epochs_per_launch": 1,
+                    "fallback": reason}
+        if self.mesh is not None:
+            return {"mode": "resident-sharded", "epochs_per_launch": 1}
+        return {"mode": "resident",
+                "epochs_per_launch": max(1, spec.gens_per_epoch // E)}
 
     @staticmethod
     def supports(spec: GASpec, mesh, executor_cls) -> Optional[str]:
@@ -453,6 +513,74 @@ class IslandRingTopology(Topology):
                                  *([None] * (x.ndim - 1 - lead))))), states)
         return states
 
+    def _resident_runner(self, k: int):
+        """Jitted resident launch (no mesh): ONE `ga_epoch_kernel` call
+        folding k whole migration intervals (k*migrate_every generations,
+        ring migration in VMEM).  Returns the same (state', by, bx, tb, tm)
+        contract as `_epoch`, with one trajectory sample per launch."""
+        key = ("resident", k)
+        if key in self._cache:
+            return self._cache[key]
+        E = self.icfg.migrate_every
+        R = self.spec.n_repeats
+        mini = self.spec.minimize
+        cfg, ffm = self.cfg, self.executor.fit
+        interp = self.executor.interpret
+        g4 = (lambda a: a) if R > 1 else (lambda a: a[None])
+        sq = (lambda a: a) if R > 1 else (lambda a: a[0])
+
+        def launch(states):                    # states: [R?, I, ...]
+            x, sel, cross, mut, y, by, bx = _ga_step.ga_epoch_kernel(
+                g4(states.x), g4(states.sel_lfsr), g4(states.cross_lfsr),
+                g4(states.mut_lfsr), cfg=cfg, ffm=ffm, migrate_every=E,
+                intervals=k, interpret=interp)
+            state = G.GAState(sq(x), sq(sel), sq(cross), sq(mut),
+                              states.k + k * E)
+            tb = jnp.min(y, axis=-1) if mini else jnp.max(y, axis=-1)
+            return (state, sq(by), sq(bx), sq(tb)[..., None],
+                    sq(jnp.mean(y, axis=-1))[..., None])
+
+        self._cache[key] = jax.jit(launch)
+        return self._cache[key]
+
+    def _resident_sharded_epoch(self):
+        """Shard-local epoch body for the resident-sharded plan: one
+        `ga_epoch_kernel(boundary=True)` launch runs `migrate_every`
+        generations + the INTRA-shard migrations in VMEM, then the boundary
+        elite crosses to the next shard via the `ppermute` ring and lands in
+        the first island's (in-kernel decided) worst slot.  Globally
+        bit-identical to `migrate_ring_sharded` — same elite/worst rules,
+        same logical-coordinate ring."""
+        E = self.icfg.migrate_every
+        R = self.spec.n_repeats
+        cfg, ffm = self.cfg, self.executor.fit
+        interp = self.executor.interpret
+        mesh, axes = self.mesh, self.icfg.axis_names
+        mini = self.spec.minimize
+        g4 = (lambda a: a) if R > 1 else (lambda a: a[None])
+        sq = (lambda a: a) if R > 1 else (lambda a: a[0])
+
+        def epoch(states):                     # states: [R?, I_loc, ...]
+            x, sel, cross, mut, y, by, bx, send, w0 = \
+                _ga_step.ga_epoch_kernel(
+                    g4(states.x), g4(states.sel_lfsr),
+                    g4(states.cross_lfsr), g4(states.mut_lfsr), cfg=cfg,
+                    ffm=ffm, migrate_every=E, intervals=1, boundary=True,
+                    interpret=interp)
+            # send: [G, V] boundary elites (one ring per replica group);
+            # ppermute moves the whole block to the next shard at once, and
+            # the received elite lands in island 0's in-kernel-decided worst
+            # slot through the same splice rule set as every other splice
+            recv = ISL.ring_shift_sharded(send, mesh, axes)
+            x = x.at[:, 0].set(ISL.splice_at(x[:, 0], w0, recv))
+            state = G.GAState(sq(x), sq(sel), sq(cross), sq(mut),
+                              states.k + E)
+            tb = jnp.min(y, axis=-1) if mini else jnp.max(y, axis=-1)
+            return (state, sq(by), sq(bx), sq(tb)[..., None],
+                    sq(jnp.mean(y, axis=-1))[..., None])
+
+        return epoch
+
     def _epoch(self):
         """Jitted epoch over the canonical state layout ([I,...] or
         [R, I, ...]); returns (state', by, bx, tb, tm) with by/bx/tb/tm in
@@ -467,39 +595,42 @@ class IslandRingTopology(Topology):
         mini = self.spec.minimize
         migrate = self.spec.migration == "ring"
         mesh, axes = self.mesh, self.icfg.axis_names
-        blk = self.executor.block(E)
-        fit_stack = self.executor.final_fitness
-
-        if mesh is None:
-            mig = lambda s, yy: ISL.migrate_ring(s, yy, minimize=mini)
+        if self.plan["mode"] == "resident-sharded":
+            epoch = self._resident_sharded_epoch()
         else:
-            mig = lambda s, yy: ISL.migrate_ring_sharded(
-                s, yy, minimize=mini, mesh=mesh, axis_names=axes)
+            blk = self.executor.block(E)
+            fit_stack = self.executor.final_fitness
 
-        def one(states):                       # states: [I(_loc), ...]
-            states, by, bx, tb, tm = blk(states)
-            if migrate:
-                y = fit_stack(states)          # [I(_loc), N]
-                states, _ex, _ey = mig(states, y)
-            return states, by, bx, tb, tm
+            if mesh is None:
+                mig = lambda s, yy: ISL.migrate_ring(s, yy, minimize=mini)
+            else:
+                mig = lambda s, yy: ISL.migrate_ring_sharded(
+                    s, yy, minimize=mini, mesh=mesh, axis_names=axes)
 
-        if R == 1:
-            epoch = one
-        else:
-            def epoch(states):                 # states: [R, I(_loc), ...]
-                il = states.x.shape[1]
-                flat = jax.tree.map(
-                    lambda a: a.reshape((R * il,) + a.shape[2:]), states)
-                flat, by, bx, tb, tm = blk(flat)
-                states = jax.tree.map(
-                    lambda a: a.reshape((R, il) + a.shape[1:]), flat)
+            def one(states):                   # states: [I(_loc), ...]
+                states, by, bx, tb, tm = blk(states)
                 if migrate:
-                    y = jax.vmap(fit_stack)(states)        # [R, I_loc, N]
-                    states, _ex, _ey = jax.vmap(mig)(states, y)
-                return (states, by.reshape(R, il),
-                        bx.reshape((R, il) + bx.shape[1:]),
-                        tb.reshape((R, il) + tb.shape[1:]),
-                        tm.reshape((R, il) + tm.shape[1:]))
+                    y = fit_stack(states)      # [I(_loc), N]
+                    states, _ex, _ey = mig(states, y)
+                return states, by, bx, tb, tm
+
+            if R == 1:
+                epoch = one
+            else:
+                def epoch(states):             # states: [R, I(_loc), ...]
+                    il = states.x.shape[1]
+                    flat = jax.tree.map(
+                        lambda a: a.reshape((R * il,) + a.shape[2:]), states)
+                    flat, by, bx, tb, tm = blk(flat)
+                    states = jax.tree.map(
+                        lambda a: a.reshape((R, il) + a.shape[1:]), flat)
+                    if migrate:
+                        y = jax.vmap(fit_stack)(states)    # [R, I_loc, N]
+                        states, _ex, _ey = jax.vmap(mig)(states, y)
+                    return (states, by.reshape(R, il),
+                            bx.reshape((R, il) + bx.shape[1:]),
+                            tb.reshape((R, il) + tb.shape[1:]),
+                            tm.reshape((R, il) + tm.shape[1:]))
 
         if mesh is not None:
             from jax.sharding import PartitionSpec as P
@@ -522,16 +653,23 @@ class IslandRingTopology(Topology):
     def segment(self, state, gens: int) -> Segment:
         E = self.icfg.migrate_every
         epochs = max(1, math.ceil(gens / E))
+        per_launch = self.plan["epochs_per_launch"]
+        resident_local = self.plan["mode"] == "resident"
         R = self.spec.n_repeats
         mini = self.spec.minimize
         reduce = np.min if mini else np.max
-        epoch = self._epoch()
-        # running per-replica best across epochs
+        # running per-replica best across launches (a launch covers
+        # `per_launch` whole migration intervals on the resident plan, one
+        # otherwise — telemetry arrays get one sample per launch)
         rep_y = np.full((R,), np.inf if mini else -np.inf, np.float32)
         rep_x = np.zeros((R, self.cfg.v), np.uint32)
         tb_ep, tm_ep = [], []
-        for _ in range(epochs):
-            state, by, bx, tb, tm = epoch(state)
+        left, launches = epochs, 0
+        while left:
+            k = min(per_launch, left)
+            runner = self._resident_runner(k) if resident_local \
+                else self._epoch()
+            state, by, bx, tb, tm = runner(state)
             by = np.asarray(by).reshape(R, -1)              # [R, I]
             bx = np.asarray(bx).reshape(R, -1, self.cfg.v)  # [R, I, V]
             i = np.argmin(by, axis=1) if mini else np.argmax(by, axis=1)
@@ -542,11 +680,17 @@ class IslandRingTopology(Topology):
             rep_x = np.where(better[:, None], ep_x, rep_x)
             tb_ep.append(float(reduce(by)))
             tm_ep.append(float(np.asarray(tm).mean()))
+            left -= k
+            launches += 1
         r = _arg_best(rep_y, mini)
-        extras = {"telemetry_unit_gens": E,
+        extras = {"telemetry_unit_gens": E * per_launch,
                   "n_islands": self.icfg.n_islands,
                   "n_shards": self.n_shards,
+                  "epoch_mode": self.plan["mode"],
+                  "launches": launches,
                   "migrations": epochs if self.spec.migration == "ring" else 0}
+        if "fallback" in self.plan:
+            extras["resident_fallback"] = self.plan["fallback"]
         if self.mesh is not None:
             extras["sharded"] = True
         if R > 1:

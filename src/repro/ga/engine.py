@@ -151,9 +151,21 @@ class Engine:
 
         With `ckpt_dir`, each chunk checkpoints the backend-native state; a
         restarted run with the same spec/ckpt_dir resumes at the last chunk.
+
+        Telemetry granularity follows the backend's LAUNCH unit: island
+        topologies sample trajectories once per launch, and a resident-epoch
+        launch covers several migration intervals — UP TO
+        `telemetry_unit_gens` generations per `traj_best` entry (a
+        segment's final launch folds only the remaining intervals);
+        `migrations` counts every ring migration including the ones folded
+        inside resident launches.
         """
         total = generations or self.spec.generations
-        chunk = chunk_generations or max(1, total // 10)
+        # the default chunk never undercuts gens_per_epoch: a chunk smaller
+        # than one resident launch would cap the interval folding the spec
+        # asked for (an explicit chunk_generations is honored as given)
+        chunk = chunk_generations or max(1, total // 10,
+                                         self.spec.gens_per_epoch)
         scale = self.spec.fitness_scale()
         mini = self.spec.minimize
 
@@ -230,6 +242,8 @@ class Engine:
                 "problem": self.spec.problem or "blackbox",
                 "n_vars": self.spec.v,
                 "migrations": migrations,
+                "telemetry_unit_gens": int(
+                    seg.extras.get("telemetry_unit_gens", 1)),
                 "extras": seg.extras,
             }
 

@@ -68,8 +68,19 @@ class GASpec:
     # state and the running best individual stay bit-identical to
     # gens_per_epoch=1; only the best/mean trajectory coarsens to one
     # sample per launch.  Ignored by the reference/eager executors.
-    # On an island_ring topology it is capped at migrate_every (the ring
-    # runs BETWEEN launches) — larger values are a validation error.
+    # On an island_ring topology with migration="ring" and a fused
+    # executor, >= migrate_every engages the RESIDENT epoch kernel: the
+    # whole island shard stays in VMEM and the ring migration runs inside
+    # the launch, folding gens_per_epoch//migrate_every migration intervals
+    # per launch — so values beyond migrate_every must be a whole multiple
+    # of it (validated here; migration="none" has no interval boundary and
+    # is exempt, but also gets no resident folding — its launches stay
+    # clamped at migrate_every generations).  Whether resident mode
+    # actually runs is a VMEM-budget decision (kernels/ga_step.
+    # resident_fit_reason); when the island stack + one-hot working set
+    # exceed the budget the engine falls back to the gridded
+    # one-interval-per-launch kernel — a perf fallback, never an error
+    # (extras["epoch_mode"] / extras["resident_fallback"] report it).
     gens_per_epoch: int = 1
 
     # ---- topology (how populations are arranged + exchanged) ------------
@@ -131,14 +142,19 @@ class GASpec:
         if self.migration not in ("ring", "none"):
             raise ValueError(f"migration must be 'ring' or 'none', "
                              f"got {self.migration!r}")
+        # the whole-interval rule only binds when a ring actually runs —
+        # the migration='none' ablation has no interval boundary to respect
         if (self.effective_topology == "island_ring"
-                and self.gens_per_epoch > self.migrate_every):
+                and self.migration == "ring"
+                and self.gens_per_epoch > self.migrate_every
+                and self.gens_per_epoch % self.migrate_every):
             raise ValueError(
-                f"gens_per_epoch={self.gens_per_epoch} exceeds "
+                f"gens_per_epoch={self.gens_per_epoch} is not a multiple of "
                 f"migrate_every={self.migrate_every}: on an island_ring "
-                "topology migration runs BETWEEN kernel launches, so one "
-                "launch can fold at most migrate_every generations — lower "
-                "gens_per_epoch or raise migrate_every")
+                "topology a resident launch folds WHOLE migration intervals "
+                "(the ring migration runs in VMEM between them), so "
+                "gens_per_epoch beyond migrate_every must be a multiple of "
+                "it — round to a multiple or lower it to migrate_every")
         if self.mesh_axes is not None:
             if (not self.mesh_axes
                     or not all(isinstance(a, str) and a

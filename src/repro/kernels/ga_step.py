@@ -29,11 +29,47 @@ blackbox runs fused, not just the paper's two-variable polynomials.  Because
 the reference executor evaluates the SAME function, fused stays bit-identical
 to reference for every program.  LUT-mode (HBM gather tables) stays in the
 pure-JAX path — gathers inside a TPU kernel would defeat the fusion.
+
+Epoch planning & VMEM budget — resident vs. gridded kernel modes:
+
+  The file exposes two launch shapes for the island_ring topology, picked by
+  the engine's epoch planner (`ga/backends.IslandRingTopology`):
+
+  * gridded (`ga_generation_kernel`) — one island per grid step; a launch
+    folds up to `migrate_every` generations and the ring migration runs
+    BETWEEN launches in XLA (`islands.migrate_ring`).  VMEM per program
+    instance holds ONE island.
+  * resident (`ga_epoch_kernel`) — the island axis moves out of the grid
+    into the kernel block: all (local-shard) islands live in one program
+    instance's VMEM, and the launch folds `intervals × migrate_every`
+    generations with the ring migration (`islands.ring_migrate_stack`, the
+    same elite/worst tie rules) executed INSIDE the `fori_loop`.  One launch
+    spans many migration intervals, so `gens_per_epoch` is no longer capped
+    at `migrate_every`.  On a mesh, `boundary=True` keeps one interval per
+    launch and performs the intra-shard part of the migration in VMEM; the
+    boundary elite is handed back for the between-launch `lax.ppermute`.
+
+  The planner chooses resident mode only when `resident_fit_reason` says the
+  working set fits the VMEM budget: the island state stack (population +
+  LFSR banks + fitness) PLUS the per-island one-hot tournament set — which
+  materializes as [I, N, N] under the in-kernel island vmap — PLUS any
+  hoisted FFM constants must stay under `resident_vmem_budget()` (default
+  16 MiB ≈ one TPU core's VMEM; override with REPRO_RESIDENT_VMEM_BUDGET).
+  When it does not fit, the engine silently falls back to the gridded
+  kernel (capping generations per launch at `migrate_every` again) — a
+  perf fallback, never an error.
+
+  Hoisted FFM closure constants are size-gated separately: both kernels
+  refuse constants above `ffm_const_limit()` (default 2 MiB, override with
+  REPRO_FFM_CONST_LIMIT) because every grid step re-reads them into VMEM —
+  a large captured array (e.g. a dataset) should run on the reference path
+  (the engine's capability check does that fallback automatically).
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Callable, Tuple
 
 import jax
@@ -41,6 +77,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import islands as ISL
+from repro.core import lfsr
 from repro.core.ga import GAConfig
 
 # The kernel-facing FFM stage: uint32 bits (N, V) -> f32 fitness (N,).
@@ -48,12 +86,32 @@ FfmStage = Callable[[jax.Array], jax.Array]
 
 
 def _lfsr_draw(state, steps: int):
-    """In-kernel LFSR-32 advance (paper polynomial r^32+r^22+r^2+1)."""
-    s = state
-    for _ in range(steps):
-        fb = ((s >> 31) ^ (s >> 21) ^ (s >> 1) ^ s) & jnp.uint32(1)
-        s = (s << 1) | fb
-    return s
+    """In-kernel LFSR-32 advance (paper polynomial r^32+r^22+r^2+1).
+
+    Uses the precomputed GF(2) leap (`lfsr.leap_feedback_masks`): the
+    register shifts `steps` bits at once and each inserted feedback bit is
+    an XOR of masked original-state bits — bit-identical to `steps`
+    sequential clocks, without the clock-to-clock dependency chain of the
+    unrolled shift loop (the parities are independent and share their
+    `s >> b` subterms)."""
+    while steps > 0:                      # leap in chunks of < 32 clocks
+        t = min(steps, 31)
+        masks = lfsr.leap_feedback_masks(t)
+        shifted = {}
+        out = state << jnp.uint32(t)
+        for j, m in enumerate(masks):
+            acc = None
+            for b in range(32):
+                if not (m >> b) & 1:
+                    continue
+                if b not in shifted:
+                    shifted[b] = state >> jnp.uint32(b) if b else state
+                acc = shifted[b] if acc is None else acc ^ shifted[b]
+            bit = acc & jnp.uint32(1)
+            out = out | (bit << jnp.uint32(j) if j else bit)
+        state = out
+        steps -= t
+    return state
 
 
 def _onehot_gather_u32(oh: jax.Array, x: jax.Array) -> jax.Array:
@@ -63,6 +121,95 @@ def _onehot_gather_u32(oh: jax.Array, x: jax.Array) -> jax.Array:
     ghi = jax.lax.dot(oh, hi, precision=jax.lax.Precision.HIGHEST)
     glo = jax.lax.dot(oh, lo, precision=jax.lax.Precision.HIGHEST)
     return (ghi.astype(jnp.uint32) << 16) | glo.astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# FFM closure-constant hoisting + size gates / VMEM budget
+# ---------------------------------------------------------------------------
+
+
+def _hoist_ffm(ffm: FfmStage, n: int, v: int):
+    """Lower the FFM stage to a jaxpr and hoist its captured array constants
+    into explicit kernel inputs (Pallas kernels cannot capture non-scalar
+    constants; `jax.closure_convert` only hoists autodiff-perturbed consts).
+    Returns (conv_fn(x, *consts), const_shapes, flat_consts, const_bytes):
+    each const rides in flattened to one 2-D (1, size) lane row for TPU
+    friendliness and is reshaped back inside the kernel."""
+    closed = jax.make_jaxpr(lambda xx: jnp.asarray(ffm(xx), jnp.float32))(
+        jax.ShapeDtypeStruct((n, v), jnp.uint32))
+    consts = closed.consts
+    conv = lambda xx, *cs: jax.core.eval_jaxpr(closed.jaxpr, cs, xx)[0]
+    const_shapes = tuple(np.shape(c) for c in consts)
+    flat = [jnp.reshape(jnp.asarray(c), (1, max(int(np.size(c)), 1)))
+            for c in consts]
+    nbytes = int(sum(int(np.size(c)) * np.dtype(jnp.asarray(c).dtype).itemsize
+                     for c in consts))
+    return conv, const_shapes, flat, nbytes
+
+
+def ffm_const_bytes(ffm: FfmStage, cfg: GAConfig) -> int:
+    """Total bytes of array constants the FFM stage closes over (what the
+    kernels would replicate into VMEM) — the engine's capability check uses
+    this to route oversized-const programs to the reference path.  Trace
+    only: sizes come from the jaxpr consts' metadata, no flattening or
+    device transfers (this runs at capability-check time, possibly against
+    MB-scale captured arrays)."""
+    closed = jax.make_jaxpr(lambda xx: jnp.asarray(ffm(xx), jnp.float32))(
+        jax.ShapeDtypeStruct((cfg.n, cfg.v), jnp.uint32))
+    return int(sum(int(np.size(c)) * np.dtype(c.dtype).itemsize
+                   for c in closed.consts))
+
+
+def ffm_const_limit() -> int:
+    """Hoisted-const VMEM gate (bytes); REPRO_FFM_CONST_LIMIT overrides."""
+    return int(os.environ.get("REPRO_FFM_CONST_LIMIT", str(2 << 20)))
+
+
+def _check_const_gate(nbytes: int) -> None:
+    limit = ffm_const_limit()
+    if nbytes > limit:
+        raise ValueError(
+            f"FFM stage captures {nbytes} bytes of array constants > the "
+            f"{limit}-byte VMEM gate: hoisted consts are replicated into "
+            "VMEM on every grid step, so large captured arrays (datasets, "
+            "big tables) should run on the 'reference' backend instead — "
+            "the engine's capability check does this fallback automatically "
+            "(REPRO_FFM_CONST_LIMIT overrides the gate)")
+
+
+def resident_vmem_budget() -> int:
+    """VMEM byte budget for the resident-epoch kernel (default 16 MiB ≈ one
+    TPU core); REPRO_RESIDENT_VMEM_BUDGET overrides."""
+    return int(os.environ.get("REPRO_RESIDENT_VMEM_BUDGET", str(16 << 20)))
+
+
+def resident_vmem_bytes(cfg: GAConfig, n_islands: int,
+                        const_bytes: int = 0) -> int:
+    """Estimated VMEM working set of one resident-epoch program instance:
+    the island state stack (population, LFSR banks, fitness) plus the
+    per-island one-hot tournament set — the dominant term, since the
+    in-kernel island vmap materializes the (N, N) iota/one-hot matrices as
+    [I, N, N] — plus offspring temporaries and the hoisted FFM consts."""
+    n, v = cfg.n, cfg.v
+    state = 4 * (n * v + 2 * n + v * (n // 2) + v * n + n)  # x/sel/cross/mut/y
+    onehot = 4 * 4 * n * n              # iota + oh1 + oh2 + winner, f32
+    work = 4 * (2 * n * v + 4 * n)      # offspring + tournament temporaries
+    best = 4 * (1 + v)                  # running best fold
+    return n_islands * (state + onehot + work + best) + const_bytes
+
+
+def resident_fit_reason(cfg: GAConfig, n_islands: int, const_bytes: int = 0,
+                        budget: int = None) -> str:
+    """None when `n_islands` VMEM-resident islands fit the budget, else the
+    reason string — the epoch planner's fallback-to-gridded decision."""
+    budget = resident_vmem_budget() if budget is None else budget
+    need = resident_vmem_bytes(cfg, n_islands, const_bytes)
+    if need > budget:
+        return (f"resident epoch needs ~{need} B of VMEM for {n_islands} "
+                f"island(s) at N={cfg.n} (> budget {budget} B); falling "
+                "back to the gridded per-interval kernel "
+                "(REPRO_RESIDENT_VMEM_BUDGET overrides)")
+    return None
 
 
 def _gen_best(x, y, cfg: GAConfig):
@@ -196,19 +343,11 @@ def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
 
     # Hoist any array constants the FFM stage closed over (decode bounds,
     # blackbox targets, ...) into explicit kernel inputs — Pallas kernels
-    # cannot capture non-scalar constants.  `jax.closure_convert` only
-    # hoists autodiff-perturbed consts, so we lower the stage to a jaxpr
-    # ourselves and replay it inside the kernel with the consts re-read from
-    # refs.  Every const rides in replicated (block index 0 on every grid
-    # step), flattened to one 2-D (1, size) lane row for TPU friendliness
-    # and reshaped back inside the kernel.
-    closed = jax.make_jaxpr(lambda xx: jnp.asarray(ffm(xx), jnp.float32))(
-        jax.ShapeDtypeStruct((n, v), jnp.uint32))
-    ffm_consts = closed.consts
-    ffm_conv = lambda xx, *cs: jax.core.eval_jaxpr(closed.jaxpr, cs, xx)[0]
-    const_shapes = tuple(np.shape(c) for c in ffm_consts)
-    flat_consts = [jnp.reshape(jnp.asarray(c), (1, max(int(np.size(c)), 1)))
-                   for c in ffm_consts]
+    # cannot capture non-scalar constants.  Every const rides in replicated
+    # (block index 0 on every grid step), which is why oversized consts are
+    # rejected by the VMEM gate — see the module docstring.
+    ffm_conv, const_shapes, flat_consts, const_bytes = _hoist_ffm(ffm, n, v)
+    _check_const_gate(const_bytes)
 
     blk = lambda *shape: pl.BlockSpec((1,) + shape, lambda i: (i,) + (0,) * len(shape))
     cblk = lambda k: pl.BlockSpec((1, k), lambda i: (0, 0))
@@ -233,6 +372,170 @@ def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
         grid=grid,
         in_specs=[blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n)]
                  + [cblk(c.shape[1]) for c in flat_consts],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, sel, cross, mut, *flat_consts)
+
+
+# ---------------------------------------------------------------------------
+# Resident-epoch kernel: whole island shard in VMEM, migration in the loop
+# ---------------------------------------------------------------------------
+
+
+def _epoch_body(x_ref, sel_ref, cross_ref, mut_ref,          # inputs
+                *rest,                                       # consts + outputs
+                cfg: GAConfig, ffm, const_shapes=(),
+                migrate_every: int, intervals: int, boundary: bool):
+    """`intervals × migrate_every` generations + in-VMEM ring migration.
+
+    The block holds a whole island stack [I, N, V] (the grid axis is the
+    replica axis, not the island axis): generations vmap over the islands,
+    and after every `migrate_every` of them the migration fitness is
+    evaluated in-kernel and `islands.ring_migrate_stack` splices the shifted
+    elites — the same masked-iota/select math the XLA path runs between
+    launches, so state stays bit-identical to reference × island_ring.
+
+    boundary=True is the sharded variant (intervals == 1): the ring wraps
+    across shards, so the kernel performs only the INTRA-shard part (islands
+    1..I-1 receive elites 0..I-2) and instead of splicing island 0 it
+    outputs (boundary elite of island I-1, worst slot of island 0) for the
+    between-launch `lax.ppermute` + splice.
+
+    The per-island running best folds every generation with the reference
+    strict-improvement/first-occurrence rule; the y output is the migration
+    fitness of the final (pre-splice) populations — one trajectory sample
+    per launch.
+    """
+    n_consts = len(const_shapes)
+    const_refs, out_refs = rest[:n_consts], rest[n_consts:]
+    if n_consts:
+        consts = [r[0].reshape(s) for r, s in zip(const_refs, const_shapes)]
+        ffm_stage = lambda x: ffm(x, *consts)
+    else:
+        ffm_stage = ffm
+    x_out, sel_out, cross_out, mut_out, y_out, by_out, bx_out = out_refs[:7]
+    mini = cfg.minimize
+    i_islands = x_ref.shape[1]
+
+    vgen = jax.vmap(functools.partial(_one_generation, cfg=cfg,
+                                      ffm=ffm_stage))
+    vfit = jax.vmap(lambda xx: jnp.asarray(ffm_stage(xx), jnp.float32))
+
+    def gen_step(carry):
+        x, sel, cross, mut, y, by, bx = carry
+        x2, sel2, cross2, mut2, y2 = vgen(x, sel, cross, mut, y)
+        gx, gb = ISL.elites_stack(x, y2, minimize=mini)  # y2 scores x
+        better = gb < by if mini else gb > by
+        by = jnp.where(better, gb, by)
+        bx = jnp.where(better[:, None], gx, bx)
+        return (x2, sel2, cross2, mut2, y2, by, bx)
+
+    def block(carry):
+        """One migration interval's generations + the migration fitness."""
+        carry = jax.lax.fori_loop(0, migrate_every,
+                                  lambda _, c: gen_step(c), carry)
+        x = carry[0]
+        return carry, vfit(x)                            # scores final pops
+
+    init = (x_ref[0], sel_ref[0], cross_ref[0], mut_ref[0],
+            jnp.zeros((i_islands, cfg.n), jnp.float32),
+            jnp.full((i_islands,), jnp.inf if mini else -jnp.inf,
+                     jnp.float32),
+            jnp.zeros((i_islands, cfg.v), jnp.uint32))
+
+    if boundary:
+        send_out, w0_out = out_refs[7:]
+        carry, ymig = block(init)
+        x, sel, cross, mut, _y, by, bx = carry
+        elite_x, _elite_y = ISL.elites_stack(x, ymig, minimize=mini)
+        widx = ISL.worst_slot(ymig, minimize=mini)
+        # islands 1..I-1 take elites 0..I-2; island 0 waits for the ppermute
+        shifted = jnp.concatenate([elite_x[:1], elite_x[:-1]], axis=0)
+        not_first = (jax.lax.broadcasted_iota(jnp.int32, (i_islands, 1), 0)
+                     >= 1)
+        x = ISL.splice_at(x, widx, shifted, island_mask=not_first)
+        send_out[0], w0_out[0] = elite_x[-1], widx[0]
+    else:
+        def interval(_, carry):
+            carry, ymig = block(carry)
+            x, sel, cross, mut, _y, by, bx = carry
+            x2, _ex, _ey = ISL.ring_migrate_stack(x, ymig, minimize=mini)
+            return (x2, sel, cross, mut, ymig, by, bx)
+
+        x, sel, cross, mut, ymig, by, bx = jax.lax.fori_loop(
+            0, intervals, interval, init)
+
+    x_out[0], sel_out[0], cross_out[0], mut_out[0] = x, sel, cross, mut
+    y_out[0], by_out[0], bx_out[0] = ymig, by, bx
+
+
+def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
+                    migrate_every: int, intervals: int = 1,
+                    boundary: bool = False, interpret: bool = False
+                    ) -> Tuple[jax.Array, ...]:
+    """Launch the resident-epoch kernel over replica-stacked island shards.
+
+    x: uint32[G, I, N, V]; sel: uint32[G, I, 2, N]; cross: uint32[G, I, V,
+    N//2]; mut: uint32[G, I, V, N] — G independent replica groups ride the
+    grid, each program instance keeps its I islands VMEM-resident for
+    `intervals × migrate_every` generations with the ring migration folded
+    into the loop (see `_epoch_body`; `boundary=True` for the sharded
+    intra-shard variant, which requires intervals == 1).
+
+    Returns (x', sel', cross', mut', y[G, I, N], best_y[G, I],
+    best_x[G, I, V]) — y is the final migration fitness (pre-splice) —
+    plus (send_elite[G, V], worst0[G]) when boundary=True.
+
+    Callers should consult `resident_fit_reason` first; this function
+    asserts the budget (and the hoisted-const gate) rather than silently
+    overflowing VMEM.
+    """
+    assert cfg.n & (cfg.n - 1) == 0, "kernel path requires power-of-two N"
+    assert cfg.n <= 1024, "one-hot (N,N) must fit VMEM; use more islands"
+    assert intervals >= 1 and migrate_every >= 1
+    assert not (boundary and intervals != 1), \
+        "boundary (sharded) epochs exchange elites between launches: one " \
+        "migration interval per launch"
+    g_grid, i_islands, n, v = x.shape
+    assert (n, v) == (cfg.n, cfg.v)
+
+    ffm_conv, const_shapes, flat_consts, const_bytes = _hoist_ffm(ffm, n, v)
+    _check_const_gate(const_bytes)
+    reason = resident_fit_reason(cfg, i_islands, const_bytes)
+    if reason is not None:
+        raise ValueError(reason)
+
+    blk = lambda *shape: pl.BlockSpec((1,) + shape,
+                                      lambda i: (i,) + (0,) * len(shape))
+    cblk = lambda k: pl.BlockSpec((1, k), lambda i: (0, 0))
+    kernel = functools.partial(_epoch_body, cfg=cfg, ffm=ffm_conv,
+                               const_shapes=const_shapes,
+                               migrate_every=migrate_every,
+                               intervals=intervals, boundary=boundary)
+    state_blks = [blk(i_islands, n, v), blk(i_islands, 2, n),
+                  blk(i_islands, v, n // 2), blk(i_islands, v, n)]
+    state_shapes = [
+        jax.ShapeDtypeStruct((g_grid, i_islands, n, v), jnp.uint32),
+        jax.ShapeDtypeStruct((g_grid, i_islands, 2, n), jnp.uint32),
+        jax.ShapeDtypeStruct((g_grid, i_islands, v, n // 2), jnp.uint32),
+        jax.ShapeDtypeStruct((g_grid, i_islands, v, n), jnp.uint32),
+    ]
+    out_specs = state_blks + [blk(i_islands, n), blk(i_islands),
+                              blk(i_islands, v)]
+    out_shape = state_shapes + [
+        jax.ShapeDtypeStruct((g_grid, i_islands, n), jnp.float32),
+        jax.ShapeDtypeStruct((g_grid, i_islands), jnp.float32),
+        jax.ShapeDtypeStruct((g_grid, i_islands, v), jnp.uint32),
+    ]
+    if boundary:
+        out_specs += [blk(v), blk()]
+        out_shape += [jax.ShapeDtypeStruct((g_grid, v), jnp.uint32),
+                      jax.ShapeDtypeStruct((g_grid,), jnp.int32)]
+    return pl.pallas_call(
+        kernel,
+        grid=(g_grid,),
+        in_specs=state_blks + [cblk(c.shape[1]) for c in flat_consts],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,

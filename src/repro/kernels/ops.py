@@ -45,3 +45,17 @@ def ga_generation(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
     return jax.jit(fn)(x, sel, cross, mut)
 
 
+def ga_epoch(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
+             migrate_every: int, intervals: int = 1, boundary: bool = False,
+             interpret: Optional[bool] = None):
+    """Resident-epoch launch over replica-stacked island shards
+    ([G, I, ...]): `intervals x migrate_every` generations with the ring
+    migration folded into the in-VMEM loop.  See kernels/ga_step.py
+    (`ga_epoch_kernel`) for the contract and the VMEM budget."""
+    fn = functools.partial(_ga_step.ga_epoch_kernel, cfg=cfg, ffm=ffm,
+                           migrate_every=migrate_every, intervals=intervals,
+                           boundary=boundary,
+                           interpret=_auto_interpret(interpret))
+    return jax.jit(fn)(x, sel, cross, mut)
+
+

@@ -66,7 +66,10 @@ def main():
                          "'4', '2x4', ... (repro.launch.mesh.parse_mesh)")
     ap.add_argument("--gens-per-epoch", type=int, default=1,
                     help=">1 folds generations inside one Pallas launch "
-                         "(fused executors; amortizes launch overhead)")
+                         "(fused executors; amortizes launch overhead); "
+                         ">= migrate_every engages the RESIDENT epoch "
+                         "kernel with in-VMEM ring migration (whole "
+                         "multiples fold several intervals per launch)")
     ap.add_argument("--kernel", action="store_true",
                     help="deprecated: same as --backend fused")
     ap.add_argument("--chunk", type=int, default=0,

@@ -204,6 +204,31 @@ def test_unknown_backend_raises():
         ga.solve(_spec(), backend="gpu_farm")
 
 
+def test_large_captured_consts_route_off_the_kernel():
+    """A fitness closing over a big array (> the hoisted-const VMEM gate)
+    is fused-incompatible with an actionable reason and falls back to the
+    reference path instead of replicating the array per grid step."""
+    import jax.numpy as jnp
+
+    big = jnp.arange(1024 * 1024, dtype=jnp.float32)     # 4 MiB of consts
+    spec = ga.GASpec(fitness=lambda p: jnp.sum(p * p, axis=-1) + big[0],
+                     bounds=((-1.0, 1.0),) * 2, n=16, bits_per_var=8,
+                     generations=5, seed=3)
+    caps = ga.capability_matrix(spec)
+    assert caps["fused"] is not None and "VMEM gate" in caps["fused"]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = ga.solve(spec, backend="fused")
+    assert r.backend == "reference"
+    assert any("falling back" in str(x.message) for x in w)
+    # a small captured const stays fused-eligible
+    small = jnp.asarray([0.5, -0.5], jnp.float32)
+    ok = ga.GASpec(fitness=lambda p: jnp.sum((p - small) ** 2, axis=-1),
+                   bounds=((-1.0, 1.0),) * 2, n=16, bits_per_var=8,
+                   generations=5, seed=3)
+    assert ga.capability_matrix(ok)["fused"] is None
+
+
 # ---------------------------------------------------------------------------
 # Vmapped multi-seed repeats (paper Table 3 methodology)
 # ---------------------------------------------------------------------------

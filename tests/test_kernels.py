@@ -160,6 +160,78 @@ def test_lfsr_kernel_matches_ref(shape, steps):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_ga_epoch_kernel_matches_local_step_oracle():
+    """The resident-epoch kernel (islands in one VMEM block, ring migration
+    inside the fori_loop) reproduces repro.core.islands.make_local_step —
+    the independent between-launch oracle — bit-for-bit over 3 migration
+    intervals in a SINGLE launch."""
+    cfg = G.GAConfig(n=32, c=10, v=2, mutation_rate=0.05, seed=11,
+                     mode="arith")
+    ffm = _ffm("F3", cfg)
+    icfg = ISL.IslandConfig(ga=cfg, n_islands=4, migrate_every=5)
+    states = ISL.init_islands_fast(icfg)
+    oracle = states
+    epoch = ISL.make_local_step(icfg, ffm)
+    for _ in range(3):
+        oracle, _ex, _ey = epoch(oracle)
+
+    x, sel, cross, mut, y, by, bx = ops.ga_epoch(
+        states.x[None], states.sel_lfsr[None], states.cross_lfsr[None],
+        states.mut_lfsr[None], cfg=cfg, ffm=ffm, migrate_every=5,
+        intervals=3)
+    np.testing.assert_array_equal(np.asarray(x[0]), np.asarray(oracle.x))
+    np.testing.assert_array_equal(np.asarray(sel[0]),
+                                  np.asarray(oracle.sel_lfsr))
+    np.testing.assert_array_equal(np.asarray(cross[0]),
+                                  np.asarray(oracle.cross_lfsr))
+    np.testing.assert_array_equal(np.asarray(mut[0]),
+                                  np.asarray(oracle.mut_lfsr))
+    assert by.shape == (1, 4) and bx.shape == (1, 4, 2)
+    assert y.shape == (1, 4, cfg.n)
+
+
+def test_ga_epoch_kernel_boundary_is_partial_ring():
+    """boundary=True leaves island 0 for the between-launch ppermute: the
+    intra-shard splices match the full in-kernel ring everywhere but island
+    0, and (send elite, island-0 worst slot) equal what the full ring would
+    have used."""
+    cfg = G.GAConfig(n=32, c=10, v=2, mutation_rate=0.05, seed=7,
+                     mode="arith")
+    ffm = _ffm("F1", cfg)
+    st = _states(cfg, n_islands=4)
+    full = ops.ga_epoch(st.x[None], st.sel_lfsr[None], st.cross_lfsr[None],
+                        st.mut_lfsr[None], cfg=cfg, ffm=ffm,
+                        migrate_every=3, intervals=1)
+    part = ops.ga_epoch(st.x[None], st.sel_lfsr[None], st.cross_lfsr[None],
+                        st.mut_lfsr[None], cfg=cfg, ffm=ffm,
+                        migrate_every=3, intervals=1, boundary=True)
+    xf, xp = np.asarray(full[0][0]), np.asarray(part[0][0])
+    send, w0 = np.asarray(part[7][0]), int(np.asarray(part[8][0]))
+    np.testing.assert_array_equal(xp[1:], xf[1:])       # intra-shard splices
+    # island 0: splicing send (the wrap elite on a 1-shard ring) at w0
+    # reproduces the full ring
+    xp0 = xp[0].copy()
+    xp0[w0] = send
+    np.testing.assert_array_equal(xp0, xf[0])
+    # migration fitness + best tracking identical either way
+    np.testing.assert_array_equal(np.asarray(part[4]), np.asarray(full[4]))
+    np.testing.assert_array_equal(np.asarray(part[5]), np.asarray(full[5]))
+
+
+def test_kernel_ffm_const_size_gate():
+    """Hoisted FFM closure constants above the VMEM gate are rejected with
+    an actionable error instead of silently replicating per grid step."""
+    cfg = G.GAConfig(n=16, c=8, v=2, seed=1, mode="arith")
+    big = jnp.zeros((1024, 1024), jnp.float32)          # 4 MiB > 2 MiB gate
+    prog = F.compile_program(
+        fitness=lambda p: jnp.sum(p, axis=-1) + big[0, 0],
+        bounds=((-1.0, 1.0),) * 2, bits_per_var=cfg.c)
+    st = _states(cfg, 1)
+    with pytest.raises(ValueError, match="VMEM gate"):
+        ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+                          cfg=cfg, ffm=prog.stage)
+
+
 def test_kernel_rejects_oversize_population():
     cfg = G.GAConfig(n=2048, c=10, v=2, seed=1, mode="arith")
     ffm = _ffm("F3", cfg)

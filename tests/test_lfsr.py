@@ -42,6 +42,30 @@ def test_leap_equals_iterated_steps(seeds, t):
         np.asarray(lfsr.leap(s, t)), np.asarray(lfsr.steps(s, t)))
 
 
+@pytest.mark.parametrize("t", [1, 2, 3, 5, 13, 31])
+def test_leap_feedback_masks_shift_parity_form(t):
+    """The precomputed GF(2) masks reproduce t sequential clocks exactly in
+    the shift+parity form  (s << t) | Σ_j parity(s & M_j) << j  — the
+    kernel's `_lfsr_draw` replacement for the unrolled shift loop."""
+    masks = lfsr.leap_feedback_masks(t)
+    assert len(masks) == t
+    s = np.asarray(lfsr.seeds(41, 64), np.uint32)
+    out = (s << np.uint32(t)).astype(np.uint32)
+    for j, m in enumerate(masks):
+        par = np.zeros_like(s)
+        for b in range(32):
+            if (m >> b) & 1:
+                par ^= s >> np.uint32(b)
+        out |= (par & np.uint32(1)) << np.uint32(j)
+    np.testing.assert_array_equal(out, lfsr.np_steps(s, t))
+
+
+def test_leap_feedback_masks_range_checked():
+    for bad in (0, 32, -1):
+        with pytest.raises(ValueError):
+            lfsr.leap_feedback_masks(bad)
+
+
 @given(st.integers(1, 2**32 - 1), st.integers(1, 31))
 @settings(max_examples=30, deadline=None)
 def test_truncate_keeps_msbs(seed, bits):

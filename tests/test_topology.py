@@ -200,6 +200,96 @@ def test_gens_per_epoch_remainder_launch_on_single_topology():
 
 
 # ---------------------------------------------------------------------------
+# Resident-epoch kernel: gens_per_epoch beyond migrate_every folds the ring
+# migration INTO the VMEM-resident launch — bit-identical to the
+# between-launch ring at equal seeds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("problem", ["F1", "F2", "F3", "rastrigin:4"])
+def test_resident_epoch_bit_identical_to_reference_islands(problem):
+    """gens_per_epoch=10 > migrate_every=5 engages the resident kernel (2
+    migration intervals per launch, in-VMEM ring).  State AND best must be
+    bit-identical to reference × island_ring; 15 generations = one 2-interval
+    launch + one 1-interval remainder launch, so the trajectory coarsens to
+    2 samples while migrations still count every in-kernel ring."""
+    spec = _spec(problem=problem, gens_per_epoch=10)
+    seg_r = _segment(dataclasses.replace(spec, gens_per_epoch=1),
+                     "islands", 15)
+    seg_f = _segment(spec, "fused-islands", 15)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(seg_f.state, field)),
+                                      np.asarray(getattr(seg_r.state, field)),
+                                      err_msg=field)
+    assert seg_f.best_y == seg_r.best_y
+    np.testing.assert_array_equal(seg_f.best_x, seg_r.best_x)
+    assert seg_f.extras["epoch_mode"] == "resident"
+    assert seg_f.extras["launches"] == 2
+    assert seg_f.extras["migrations"] == seg_r.extras["migrations"] == 3
+    assert seg_f.extras["telemetry_unit_gens"] == 10
+    assert seg_f.traj_best.shape == (2,)
+
+
+def test_resident_epoch_n_repeats_matches_reference():
+    """Replica groups ride the resident kernel's grid axis — each replica's
+    in-VMEM ring stays independent and bit-identical to the reference run."""
+    spec = _spec(n_repeats=3, generations=10, gens_per_epoch=10)
+    r_ref = ga.solve(dataclasses.replace(spec, gens_per_epoch=1),
+                     backend="islands")
+    r_res = ga.solve(spec, backend="fused-islands")
+    np.testing.assert_array_equal(r_ref.extras["per_repeat_best"],
+                                  r_res.extras["per_repeat_best"])
+    assert r_ref.best_fitness == r_res.best_fitness
+    assert r_res.extras["epoch_mode"] == "resident"
+
+
+def test_resident_sharded_epoch_on_one_device_mesh():
+    """On a mesh the resident plan keeps one migration interval per launch
+    (the boundary elite must ppermute between launches) but runs the
+    intra-shard migrations in VMEM — bit-identical to the local reference
+    ring even on a 1-device mesh (where the ppermute ring is the wrap)."""
+    spec = _spec(gens_per_epoch=10)
+    ref = _segment(dataclasses.replace(spec, gens_per_epoch=1),
+                   "islands", 15)
+    eng = ga.Engine(spec, "fused-islands", mesh=_mesh1())
+    shard = eng.backend.segment(eng.init_state(), 15)
+    for field in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(shard.state, field)),
+                                      np.asarray(getattr(ref.state, field)),
+                                      err_msg=field)
+    assert shard.best_y == ref.best_y
+    assert shard.extras["epoch_mode"] == "resident-sharded"
+    assert shard.extras["sharded"] is True
+
+
+def test_resident_vmem_budget_fallback_decision():
+    """The VMEM-budget estimator drives the fallback: an island stack whose
+    one-hot working set exceeds the budget silently reverts to the gridded
+    per-interval kernel (still bit-identical), never errors."""
+    from repro.kernels import ga_step as K
+
+    cfg = _spec().ga_config()
+    # unit decision: the same stack fits a large budget, not a small one
+    assert K.resident_fit_reason(cfg, 4, 0, budget=1 << 30) is None
+    reason = K.resident_fit_reason(cfg, 4, 0, budget=1 << 10)
+    assert reason is not None and "VMEM" in reason
+    # big captured consts count against the same budget
+    assert K.resident_fit_reason(cfg, 4, 1 << 30) is not None
+    # estimator scales with the one-hot term: N=512 x 4 islands > 16 MiB
+    big = _spec(n=512, gens_per_epoch=10)
+    eng = ga.Engine(big, "fused-islands")
+    plan = eng.backend.topology.plan
+    assert plan["mode"] == "gridded" and "VMEM" in plan["fallback"]
+    # integration: the fallback path still runs and matches reference
+    seg_f = eng.backend.segment(eng.init_state(), 10)
+    seg_r = _segment(dataclasses.replace(big, gens_per_epoch=1),
+                     "islands", 10)
+    np.testing.assert_array_equal(np.asarray(seg_f.state.x),
+                                  np.asarray(seg_r.state.x))
+    assert seg_f.extras["resident_fallback"] == plan["fallback"]
+
+
+# ---------------------------------------------------------------------------
 # Mesh path: shard_map over the island axis + ppermute ring migration,
 # bit-identical to the single-device run (any executor, any n_repeats)
 # ---------------------------------------------------------------------------
@@ -334,6 +424,30 @@ shard = ga.solve(spec, backend="fused-islands", mesh=mesh)
 np.testing.assert_array_equal(local.extras["per_repeat_best"],
                               shard.extras["per_repeat_best"])
 assert local.best_fitness == shard.best_fitness
+
+# RESIDENT epochs on the mesh: gens_per_epoch=10 > migrate_every=5 runs the
+# boundary kernel (intra-shard migration in VMEM, elite ppermute between
+# launches) — state/best bit-identical to the local reference ring, on the
+# row-major mesh AND a reversed-device mesh (same logical ring), with
+# n_repeats riding the kernel grid axis
+def check_resident(tag, use_mesh, n_repeats=1):
+    spec = ga.GASpec(problem="rastrigin:4", n=32, bits_per_var=10,
+                     mode="arith", mutation_rate=0.05, seed=11,
+                     generations=15, n_islands=8, migrate_every=5,
+                     n_repeats=n_repeats, gens_per_epoch=10)
+    ref = seg(dataclasses.replace(spec, gens_per_epoch=1), "islands", 15)
+    res = seg(spec, "fused-islands", 15, mesh=use_mesh)
+    assert res.extras["epoch_mode"] == "resident-sharded", tag
+    for f in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
+        np.testing.assert_array_equal(np.asarray(getattr(res.state, f)),
+                                      np.asarray(getattr(ref.state, f)),
+                                      err_msg=tag + " " + f)
+    assert res.best_y == ref.best_y, tag
+    np.testing.assert_array_equal(res.best_x, ref.best_x)
+
+check_resident("resident", mesh)
+check_resident("resident-permuted", perm_mesh)
+check_resident("resident-repeats", mesh, n_repeats=2)
 print("MESH_OK")
 """
     env = dict(os.environ, PYTHONPATH="src")
@@ -367,20 +481,25 @@ def test_topology_field_validation():
         _spec(mesh_axes=())
 
 
-def test_gens_per_epoch_capped_by_migrate_every():
-    """On an island_ring topology the ring runs BETWEEN kernel launches, so
-    one launch can fold at most migrate_every generations — exceeding the
-    cap is a spec-build error with an actionable message, not a silent
-    truncation."""
-    with pytest.raises(ValueError) as ei:
-        _spec(migrate_every=4, gens_per_epoch=8)
-    msg = str(ei.value)
-    assert "gens_per_epoch=8" in msg and "migrate_every=4" in msg
-    assert "BETWEEN kernel launches" in msg
-    # equality is fine (one launch per epoch), and single topology is uncapped
+def test_gens_per_epoch_beyond_migrate_every_needs_whole_intervals():
+    """The gens_per_epoch <= migrate_every cap is GONE (the resident kernel
+    folds ring migrations in VMEM); what remains is the whole-interval rule:
+    beyond migrate_every, gens_per_epoch must be a multiple of it so every
+    launch folds complete migration intervals."""
+    # multiples are valid now — this used to be a spec-build error
+    assert _spec(migrate_every=4, gens_per_epoch=8).gens_per_epoch == 8
     assert _spec(migrate_every=4, gens_per_epoch=4).gens_per_epoch == 4
-    solo = _spec(n_islands=1, gens_per_epoch=64)
+    with pytest.raises(ValueError) as ei:
+        _spec(migrate_every=4, gens_per_epoch=7)
+    msg = str(ei.value)
+    assert "gens_per_epoch=7" in msg and "migrate_every=4" in msg
+    assert "multiple" in msg
+    # single topology is uncapped and rule-free
+    solo = _spec(n_islands=1, gens_per_epoch=63)
     assert solo.effective_topology == "single"
+    # migration='none' has no interval boundary — no multiple rule either
+    none = _spec(migrate_every=4, gens_per_epoch=7, migration="none")
+    assert none.gens_per_epoch == 7
 
 
 def test_auto_and_fallback_routing():
