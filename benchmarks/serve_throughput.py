@@ -1,0 +1,116 @@
+"""Serving throughput: K packed jobs vs K sequential solo runs.
+
+The scheduler's replica-axis packing multiplexes shape-compatible jobs onto
+one launch; this benchmark measures what that buys in AGGREGATE throughput
+(sum of all jobs' generations / wall time) for K tenants submitting the
+same spec shape with different seeds:
+
+    engine_reference[F3]   the solo anchor every ratio divides by
+    serve_seq[F3]          K solo Engine runs back to back (no packing)
+    serve_packed[F3]       one PackedEngine launch, K slots down n_repeats
+
+`serve_packed / engine_reference` is the regression gate for the packing
+path (scripts/check_bench.py --baseline
+benchmarks/baseline_serve_throughput.json): results stay bit-identical to
+solo runs, so the packed row should approach K × the vectorization win and
+must never fall below its committed ratio.  Like every bench here, ratios
+(not absolutes) are gated — CPU numbers only rank compositions.
+
+Standalone smoke mode for CI:
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput --smoke \
+        --out artifacts/serve_throughput.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.ga_common import time_call
+from repro import ga
+
+K_JOBS = 4
+SMOKE = dict(n=16, m=16, generations=8)
+FULL = dict(n=64, m=20, generations=100)
+PROBLEM = "F3"
+
+
+def _specs(problem: str, *, n: int, m: int, generations: int):
+    return [ga.GASpec(problem=problem, n=n, bits_per_var=m // 2,
+                      mode="arith", mutation_rate=0.02, seed=1 + i,
+                      generations=generations) for i in range(K_JOBS)]
+
+
+def _row(name: str, gens: int, dt: float, extra: dict):
+    payload = json.dumps({"problem": PROBLEM.split(":")[0], "n_vars": 2,
+                          "gens_per_s": round(gens / dt, 1),
+                          "jobs": K_JOBS, "devices": 1, **extra},
+                         separators=(",", ":"))
+    return (name, dt / gens * 1e6, payload)
+
+
+def run(smoke: bool = False):
+    sizes = SMOKE if smoke else FULL
+    specs = _specs(PROBLEM, **sizes)
+    gens = sizes["generations"]
+    rows = []
+
+    # anchor: one solo reference run (the denominator of every ratio)
+    solo = ga.Engine(specs[0], "reference")
+    solo.run()                                     # compile + warm caches
+    dt, out = time_call(solo.run, warmup=0, iters=3)
+    rows.append(_row(f"engine_reference[{PROBLEM}]", gens, dt,
+                     {"backend": "reference", "best":
+                      round(out.best_fitness, 4)}))
+
+    # K sequential solo runs: what K tenants cost without the scheduler
+    engines = [ga.Engine(s, "reference") for s in specs]
+    for e in engines:
+        e.run()
+
+    def seq():
+        return [e.run() for e in engines]
+
+    dt, outs = time_call(seq, warmup=0, iters=3)
+    rows.append(_row(f"serve_seq[{PROBLEM}]", gens * K_JOBS, dt,
+                     {"backend": "reference",
+                      "best": round(outs[0].best_fitness, 4)}))
+
+    # K jobs packed down the replica axis: one launch, bit-identical slots
+    pe = ga.PackedEngine(specs, "reference")
+    pe.run()
+
+    dt, jobs = time_call(pe.run, warmup=0, iters=3)
+    rows.append(_row(f"serve_packed[{PROBLEM}]", gens * K_JOBS, dt,
+                     {"backend": "reference", "pack_size": K_JOBS,
+                      "best": round(jobs[0]["best_fitness"], 4)}))
+    # packing must not change results: packed slot 0 == solo job 0
+    assert jobs[0]["best_fitness"] == outs[0].best_fitness, \
+        "packed slot diverged from its solo run"
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config (CI regression gate; seconds)")
+    ap.add_argument("--out", default=None,
+                    help="write the rows as a JSON artifact here")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_gen,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        artifact = [{"name": name, "us_per_gen": round(us, 2),
+                     **json.loads(derived)} for name, us, derived in rows]
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

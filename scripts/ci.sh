@@ -24,13 +24,23 @@ timeout 180 python -m repro.launch.ga_run \
     --problem rastrigin:4 --n 16 --k 16 --islands 2 --migrate-every 4 \
     --backend fused-islands --mesh auto --gens-per-epoch 8
 
+echo "== scheduler smoke (multi-tenant packing + preemption on an"
+echo "   8-fake-device mesh; per-job bests bit-identical to solo runs) =="
+timeout 420 python scripts/scheduler_smoke.py
+
 echo "== backend-matrix smoke (1 tiny config per topology x executor x problem) =="
 mkdir -p artifacts
 timeout 420 python -m benchmarks.engine_backends --smoke \
     --out artifacts/engine_backends.json
 cat artifacts/engine_backends.json
 
+echo "== serve-throughput smoke (K packed jobs vs K sequential) =="
+timeout 420 python -m benchmarks.serve_throughput --smoke \
+    --out artifacts/serve_throughput.json
+
 echo "== bench regression gate (relative combo-vs-reference ratios) =="
 python scripts/check_bench.py artifacts/engine_backends.json
+python scripts/check_bench.py artifacts/serve_throughput.json \
+    --baseline benchmarks/baseline_serve_throughput.json
 
 echo "CI OK"

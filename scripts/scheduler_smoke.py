@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""CI smoke for GA-as-a-service: the multi-tenant scheduler on a mesh.
+
+Forces an 8-device host-platform mesh, submits heterogeneous jobs —
+two shape-compatible island jobs (packed down the replica axis), an
+incompatible rastrigin job, and a late high-priority arrival that preempts
+the running low-priority pack — then asserts:
+
+  * every per-job best is bit-identical to its solo `ga.solve` run
+    (packing and checkpoint/resume preemption change scheduling, never
+    results);
+  * at least one pack held >= 2 jobs and at least one preemption happened;
+  * the resubmitted spec shape hit the compiled-runner cache;
+  * /metrics serves the `repro_ga_sched_*` + compile-cache gauges.
+
+    PYTHONPATH=src python scripts/scheduler_smoke.py
+"""
+
+import os
+import re
+import sys
+import urllib.request
+
+# must precede the first jax import: fake an 8-device host platform
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import ga                                    # noqa: E402
+from repro.launch.mesh import make_island_mesh          # noqa: E402
+from repro.serve.engine import GAMetricsRegistry        # noqa: E402
+from repro.serve.metrics_http import start_metrics_server   # noqa: E402
+from repro.serve.scheduler import GAScheduler           # noqa: E402
+
+
+def _spec(**kw):
+    base = dict(problem="F3", n=32, bits_per_var=10, mode="arith",
+                mutation_rate=0.05, seed=11, generations=24,
+                n_islands=8, migrate_every=4)
+    base.update(kw)
+    return ga.GASpec(**base)
+
+
+def main():
+    mesh = make_island_mesh(8)
+    print(f"mesh: {dict(mesh.shape)}")
+    reg = GAMetricsRegistry()
+    sched = GAScheduler(mesh=mesh, registry=reg, backend="islands",
+                        chunk_generations=8)
+    server = start_metrics_server(0, registry=reg, host="127.0.0.1")
+    port = server.server_address[1]
+    try:
+        # a long low-priority job the hot job will preempt mid-run
+        lo_spec = _spec(seed=3, generations=96)
+        lo = sched.submit(lo_spec, priority=0)
+        # two shape-compatible jobs -> one packed launch (submitted while
+        # lo runs, so they queue together and pack at dispatch)
+        pa_spec, pb_spec = _spec(seed=11), _spec(seed=40)
+        pa, pb = sched.submit(pa_spec), sched.submit(pb_spec)
+        # heterogeneous: different problem/shape, cannot pack with the pair
+        ra_spec = _spec(problem="rastrigin:4", seed=5)
+        ra = sched.submit(ra_spec)
+        # the preemptor: submitted only once lo has streamed a chunk (i.e.
+        # is demonstrably mid-run), so the strictly higher priority must
+        # park lo between chunks rather than just winning the initial race
+        hot_spec = _spec(problem="ackley:4", seed=7)
+        hot = None
+        for event in sched.stream(lo, timeout=600):
+            if event.get("event") == "chunk" and hot is None:
+                hot = sched.submit(hot_spec, priority=10)
+                break
+        assert hot is not None, "lo ended before streaming a single chunk"
+
+        results = {j: sched.result(j, timeout=600)
+                   for j in (lo, pa, pb, ra, hot)}
+
+        # 1) bit-identical to solo runs, packing and preemption included
+        for job_id, spec in ((lo, lo_spec), (pa, pa_spec), (pb, pb_spec),
+                             (ra, ra_spec), (hot, hot_spec)):
+            solo = ga.solve(spec, backend="islands", mesh=mesh)
+            got = results[job_id]["best_fitness"]
+            assert got == solo.best_fitness, \
+                f"{job_id}: packed/preempted best {got} != solo " \
+                f"{solo.best_fitness}"
+            print(f"{job_id}: best={got:.6f} "
+                  f"pack={results[job_id]['pack_size']} (== solo)")
+
+        # 2) packing + preemption actually exercised
+        stats = sched.stats()
+        print(f"stats: {stats}")
+        assert max(r["pack_size"] for r in results.values()) >= 2, \
+            "no pack held >= 2 jobs"
+        assert stats["jobs_packed"] >= 2
+        assert stats["preemptions"] >= 1, "no preemption happened"
+        assert reg.metrics()["jobs"][lo]["preemptions"] >= 1
+
+        # 3) identical spec shape resubmitted -> compiled-runner cache hit
+        hits0 = stats["cache_hits"]
+        again = sched.submit(_spec(seed=77))
+        sched.result(again, timeout=600)
+        assert sched.stats()["cache_hits"] > hits0, \
+            "resubmitted spec shape missed the compile cache"
+
+        # 4) the gauges are scrapeable
+        text = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10).read().decode()
+        for gauge in ("repro_ga_sched_queue_depth",
+                      "repro_ga_sched_jobs_running",
+                      "repro_ga_sched_packs_launched",
+                      "repro_ga_sched_preemptions",
+                      "repro_ga_compile_cache_hits"):
+            assert gauge in text, f"missing gauge {gauge}"
+        hits = float(re.search(r"^repro_ga_compile_cache_hits (\S+)$",
+                               text, re.M).group(1))
+        assert hits > 0
+        print(f"/metrics OK (compile_cache_hits={hits:g})")
+        print("scheduler smoke OK")
+    finally:
+        server.shutdown()
+        sched.shutdown()
+
+
+if __name__ == "__main__":
+    main()

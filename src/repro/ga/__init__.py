@@ -79,15 +79,18 @@ from repro.ga.operators import (CROSSOVER, MUTATION, PAPER_PIPELINE,
                                 register_selection)
 from repro.ga.backends import (BACKENDS, EXECUTORS, TOPOLOGIES, Backend,
                                Executor, Segment, Topology)
+from repro.ga.compile_cache import RUNNER_CACHE, CompileCache
 from repro.ga.engine import (BackendUnsupported, Engine, EngineResult,
-                             capability_matrix, resolve_backend, solve)
+                             PackedEngine, capability_matrix,
+                             resolve_backend, solve)
 
 __all__ = [
     "GASpec", "paper_spec",
     "PROBLEMS", "ProblemDef", "FitnessProgram", "compile_program",
     "register_problem", "resolve_problem",
-    "Engine", "EngineResult", "solve", "resolve_backend",
+    "Engine", "EngineResult", "PackedEngine", "solve", "resolve_backend",
     "capability_matrix", "BackendUnsupported",
+    "RUNNER_CACHE", "CompileCache",
     "BACKENDS", "Backend", "Segment",
     "EXECUTORS", "TOPOLOGIES", "Executor", "Topology",
     "SELECTION", "CROSSOVER", "MUTATION", "PAPER_PIPELINE",

@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.core import ga as G
 from repro.core import islands as ISL
+from repro.ga import compile_cache as CC
 from repro.ga import operators as OPS
 from repro.ga.spec import GASpec
 from repro.kernels import ga_step as _ga_step
@@ -99,24 +100,38 @@ def _arg_best(y: np.ndarray, minimize: bool) -> int:
     return int(np.argmin(y) if minimize else np.argmax(y))
 
 
+def _stack_states_seeded(cfg: G.GAConfig, seeds):
+    """One replica per entry of `seeds`, stacked on a new leading axis.
+    Replica i is bit-identical to a solo run seeded `seeds[i]` — the
+    contract job packing relies on: a packed slot reproduces the job it
+    came from exactly."""
+    states = [G.init_state(dataclasses.replace(cfg, seed=s)) for s in seeds]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
 def _stack_states(cfg: G.GAConfig, n_replicas: int):
     """Replica r is seeded `seed + r` — replica 0 reproduces the solo run
     bit-exactly (asserted in tests), and the splitmix seed hash decorrelates
     consecutive integers."""
-    states = [G.init_state(dataclasses.replace(cfg, seed=cfg.seed + r))
-              for r in range(n_replicas)]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    return _stack_states_seeded(cfg, [cfg.seed + r for r in range(n_replicas)])
+
+
+def _stack_island_replicas_seeded(icfg: ISL.IslandConfig, seeds):
+    """[R, I, ...] stack with one island set per seed (see
+    `_stack_states_seeded` for the per-slot bit-identity contract)."""
+    reps = []
+    for s in seeds:
+        ga_r = dataclasses.replace(icfg.ga, seed=s)
+        reps.append(ISL.init_islands_fast(dataclasses.replace(icfg, ga=ga_r)))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
 
 
 def _stack_island_replicas(icfg: ISL.IslandConfig, n_replicas: int):
     """[R, I, ...] stack: replica r re-seeds the island seed stream with
     `seed + r` (same convention as `_stack_states`, so replica 0 reproduces
     the n_repeats=1 island run bit-exactly)."""
-    reps = []
-    for r in range(n_replicas):
-        ga_r = dataclasses.replace(icfg.ga, seed=icfg.ga.seed + r)
-        reps.append(ISL.init_islands_fast(dataclasses.replace(icfg, ga=ga_r)))
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    return _stack_island_replicas_seeded(
+        icfg, [icfg.ga.seed + r for r in range(n_replicas)])
 
 
 class Backend:
@@ -138,6 +153,15 @@ class Backend:
 
     def init(self):
         raise NotImplementedError
+
+    def init_packed(self, seeds):
+        """Stacked state with one replica SLOT per seed — the layout job
+        packing (repro.ga.engine.PackedEngine) runs many tenants through:
+        slot i is bit-identical to a solo run seeded `seeds[i]`.  Backends
+        whose replica axis is a host loop (eager) cannot pack."""
+        raise NotImplementedError(
+            f"backend {self.name!r} does not support packed (multi-job) "
+            "state initialization")
 
     def segment(self, state, gens: int) -> Segment:
         raise NotImplementedError
@@ -349,7 +373,17 @@ class Topology:
         self.cfg = spec.ga_config()
         self.executor = executor
         self.mesh = mesh
-        self._cache: Dict[Any, Any] = {}
+        self._cache: Dict[Any, Any] = {}   # instance memo over RUNNER_CACHE
+
+    def _cached_runner(self, key, builder):
+        """Instance memo in front of the process-global RUNNER_CACHE, so the
+        global hit/miss counters record one resolution per topology instance
+        (i.e. per Engine build) instead of one per segment launch."""
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = CC.RUNNER_CACHE.get_or_build(key, builder)
+            self._cache[key] = fn
+        return fn
 
     @staticmethod
     def supports(spec: GASpec, mesh, executor_cls) -> Optional[str]:
@@ -384,13 +418,19 @@ class SingleTopology(Topology):
             return G.init_state(self.cfg)
         return _stack_states(self.cfg, self.spec.n_repeats)
 
+    def init_packed(self, seeds):
+        if len(seeds) != self.spec.n_repeats:
+            raise ValueError(f"{len(seeds)} seeds packed into a spec with "
+                             f"n_repeats={self.spec.n_repeats}")
+        return _stack_states_seeded(self.cfg, seeds)
+
     def _runner(self, gens: int, solo: bool):
-        key = (gens, solo)
-        if key not in self._cache:
-            fn = (self.executor.solo(gens) if solo
-                  else self.executor.block(gens))
-            self._cache[key] = jax.jit(fn)
-        return self._cache[key]
+        key = CC.runner_key(self.spec, self.name, self.executor.name,
+                            getattr(self.executor, "interpret", None),
+                            self.mesh, "block", gens, solo)
+        return self._cached_runner(
+            key, lambda: jax.jit(self.executor.solo(gens) if solo
+                                 else self.executor.block(gens)))
 
     def segment(self, state, gens: int) -> Segment:
         mini = self.spec.minimize
@@ -412,7 +452,9 @@ class SingleTopology(Topology):
                        traj_mean=np.asarray(tm).mean(axis=0),
                        gens=gens,
                        extras={"per_repeat_best": per_rep,
-                               "per_repeat_traj_best": tb})
+                               "per_repeat_best_x": np.asarray(bx),
+                               "per_repeat_traj_best": tb,
+                               "per_repeat_traj_mean": np.asarray(tm)})
 
 
 class IslandRingTopology(Topology):
@@ -497,6 +539,17 @@ class IslandRingTopology(Topology):
                         f"the {n_shards} mesh shard(s)")
         return None
 
+    def _place(self, states, lead: int):
+        """Shard the island axis of a fresh state stack over the mesh."""
+        if self.mesh is None:
+            return states
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axes = self.icfg.axis_names
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(
+                self.mesh, P(*([None] * lead), axes,
+                             *([None] * (x.ndim - 1 - lead))))), states)
+
     def init(self):
         if self.spec.n_repeats > 1:
             states = _stack_island_replicas(self.icfg, self.spec.n_repeats)
@@ -504,23 +557,32 @@ class IslandRingTopology(Topology):
         else:
             states = ISL.init_islands_fast(self.icfg)
             lead = 0
-        if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            axes = self.icfg.axis_names
-            states = jax.tree.map(
-                lambda x: jax.device_put(x, NamedSharding(
-                    self.mesh, P(*([None] * lead), axes,
-                                 *([None] * (x.ndim - 1 - lead))))), states)
-        return states
+        return self._place(states, lead)
+
+    def init_packed(self, seeds):
+        if len(seeds) != self.spec.n_repeats:
+            raise ValueError(f"{len(seeds)} seeds packed into a spec with "
+                             f"n_repeats={self.spec.n_repeats}")
+        lead = 1 if self.spec.n_repeats > 1 else 0
+        if lead == 0:
+            ga_s = dataclasses.replace(self.icfg.ga, seed=seeds[0])
+            states = ISL.init_islands_fast(
+                dataclasses.replace(self.icfg, ga=ga_s))
+        else:
+            states = _stack_island_replicas_seeded(self.icfg, seeds)
+        return self._place(states, lead)
+
+    def _runner_key(self, *parts):
+        return CC.runner_key(self.spec, self.name, self.executor.name,
+                             getattr(self.executor, "interpret", None),
+                             self.mesh, *parts)
 
     def _resident_runner(self, k: int):
         """Jitted resident launch (no mesh): ONE `ga_epoch_kernel` call
         folding k whole migration intervals (k*migrate_every generations,
         ring migration in VMEM).  Returns the same (state', by, bx, tb, tm)
         contract as `_epoch`, with one trajectory sample per launch."""
-        key = ("resident", k)
-        if key in self._cache:
-            return self._cache[key]
+        key = self._runner_key("resident", k)
         E = self.icfg.migrate_every
         R = self.spec.n_repeats
         mini = self.spec.minimize
@@ -540,8 +602,7 @@ class IslandRingTopology(Topology):
             return (state, sq(by), sq(bx), sq(tb)[..., None],
                     sq(jnp.mean(y, axis=-1))[..., None])
 
-        self._cache[key] = jax.jit(launch)
-        return self._cache[key]
+        return self._cached_runner(key, lambda: jax.jit(launch))
 
     def _resident_sharded_epoch(self):
         """Shard-local epoch body for the resident-sharded plan: one
@@ -588,8 +649,9 @@ class IslandRingTopology(Topology):
         mesh the epoch body is shard_mapped over the island axis — the body
         sees [R?, I/n_shards, ...] blocks and the ring crosses shards via
         `ppermute`; telemetry comes back as the same global arrays."""
-        if "epoch" in self._cache:
-            return self._cache["epoch"]
+        key = self._runner_key("epoch", self.plan["mode"])
+        if key in self._cache:
+            return self._cache[key]
         E = self.icfg.migrate_every
         R = self.spec.n_repeats
         mini = self.spec.minimize
@@ -647,8 +709,7 @@ class IslandRingTopology(Topology):
                 epoch, mesh, in_specs=(state_specs,),
                 out_specs=(state_specs, pfor(0), pfor(1), pfor(1), pfor(1)))
 
-        self._cache["epoch"] = jax.jit(epoch)
-        return self._cache["epoch"]
+        return self._cached_runner(key, lambda: jax.jit(epoch))
 
     def segment(self, state, gens: int) -> Segment:
         E = self.icfg.migrate_every
@@ -663,7 +724,7 @@ class IslandRingTopology(Topology):
         # otherwise — telemetry arrays get one sample per launch)
         rep_y = np.full((R,), np.inf if mini else -np.inf, np.float32)
         rep_x = np.zeros((R, self.cfg.v), np.uint32)
-        tb_ep, tm_ep = [], []
+        tb_ep, tm_ep = [], []          # per-launch, per-replica ([R] each)
         left, launches = epochs, 0
         while left:
             k = min(per_launch, left)
@@ -678,26 +739,33 @@ class IslandRingTopology(Topology):
             better = ep_y < rep_y if mini else ep_y > rep_y
             rep_y = np.where(better, ep_y, rep_y)
             rep_x = np.where(better[:, None], ep_x, rep_x)
-            tb_ep.append(float(reduce(by)))
-            tm_ep.append(float(np.asarray(tm).mean()))
+            tb_ep.append(reduce(by, axis=1))                           # [R]
+            tm_ep.append(np.asarray(tm).reshape(R, -1).mean(axis=1))   # [R]
             left -= k
             launches += 1
         r = _arg_best(rep_y, mini)
+        tb_rep = np.stack(tb_ep, axis=1)                    # [R, launches]
+        tm_rep = np.stack(tm_ep, axis=1)
         extras = {"telemetry_unit_gens": E * per_launch,
                   "n_islands": self.icfg.n_islands,
                   "n_shards": self.n_shards,
                   "epoch_mode": self.plan["mode"],
                   "launches": launches,
-                  "migrations": epochs if self.spec.migration == "ring" else 0}
+                  "migrations": epochs if self.spec.migration == "ring" else 0,
+                  # per-replica views: job packing (PackedEngine) unpacks
+                  # each tenant's best/trajectory from its slot range here
+                  "per_repeat_best": rep_y,
+                  "per_repeat_best_x": rep_x,
+                  "per_repeat_traj_best": tb_rep,
+                  "per_repeat_traj_mean": tm_rep}
         if "fallback" in self.plan:
             extras["resident_fallback"] = self.plan["fallback"]
         if self.mesh is not None:
             extras["sharded"] = True
-        if R > 1:
-            extras["per_repeat_best"] = rep_y
         return Segment(state=state, best_y=float(rep_y[r]),
                        best_x=rep_x[r],
-                       traj_best=np.asarray(tb_ep), traj_mean=np.asarray(tm_ep),
+                       traj_best=reduce(tb_rep, axis=0),
+                       traj_mean=tm_rep.mean(axis=0),
                        gens=epochs * E, extras=extras)
 
 
@@ -733,6 +801,9 @@ class ComposedBackend(Backend):
 
     def init(self):
         return self.topology.init()
+
+    def init_packed(self, seeds):
+        return self.topology.init_packed(seeds)
 
     def segment(self, state, gens: int) -> Segment:
         seg = self.topology.segment(state, gens)

@@ -254,3 +254,221 @@ def solve(spec: GASpec, backend: str = "auto", *,
     """Run a GASpec end to end and return the uniform result."""
     return Engine(spec, backend, mesh=mesh,
                   interpret=interpret).run(generations)
+
+
+class PackedEngine:
+    """K shape-compatible GASpecs multiplexed through ONE backend run.
+
+    The engine already vmaps `n_repeats` independent replicas down a stack
+    axis; packing reuses that axis as a *tenant* axis: job j contributes
+    `n_repeats` slots seeded `seed+0..seed+r-1` — exactly the seeds the job
+    would use alone — so every slot, and therefore every job's result, is
+    bit-identical to running that job solo (the per-replica bit-identity the
+    repeat tests already pin down).  Specs must share `compile_key()` and
+    `generations`; only seeds and repeat counts may differ.
+
+        pe = PackedEngine([spec_a, spec_b, spec_c])
+        for tele in pe.run_chunked(ckpt_dir="/tmp/pack"):
+            for jt in tele["jobs"]:
+                print(jt["job_index"], jt["best_fitness"])
+
+    `run_chunked` mirrors `Engine.run_chunked` (chunked telemetry +
+    checkpoint/resume — the scheduler's preemption primitive) but yields a
+    pack-level dict whose `"jobs"` list carries one Engine-style telemetry
+    dict per job, unpacked from the per-replica segment extras."""
+
+    def __init__(self, specs, backend: str = "auto", *,
+                 mesh=None, interpret: Optional[bool] = None):
+        specs = list(specs)
+        if not specs:
+            raise ValueError("PackedEngine needs at least one spec")
+        key0, gens0 = specs[0].compile_key(), specs[0].generations
+        for s in specs[1:]:
+            if s.compile_key() != key0:
+                raise BackendUnsupported(
+                    "specs are not shape-compatible for packing (their "
+                    "compile_key()s differ); submit them separately")
+            if s.generations != gens0:
+                raise BackendUnsupported(
+                    "packed jobs must share generations= (the pack runs the "
+                    "stack lock-step); submit unequal-length jobs separately")
+        self.specs = specs
+        self.slots, self.seeds = [], []
+        off = 0
+        for s in specs:
+            self.slots.append((off, s.n_repeats))
+            self.seeds.extend(s.seed + r for r in range(s.n_repeats))
+            off += s.n_repeats
+        self.n_slots = off
+        self.batch_spec = dataclasses.replace(specs[0], n_repeats=self.n_slots)
+        self.backend_name = resolve_backend(self.batch_spec, backend, mesh)
+        if self.backend_name == "eager":
+            raise BackendUnsupported(
+                "the eager backend steps replicas in a host loop — nothing "
+                "to pack; run eager jobs singly")
+        # a single 1-repeat job has no stack axis to pack: delegate to the
+        # plain Engine (same result layout, zero packing overhead)
+        self._solo: Optional[Engine] = None
+        if self.n_slots == 1:
+            self._solo = Engine(specs[0], self.backend_name, mesh=mesh,
+                                interpret=interpret)
+            self.backend = self._solo.backend
+        else:
+            self.backend = BACKENDS[self.backend_name](
+                self.batch_spec, mesh=mesh, interpret=interpret)
+
+    def init_state(self):
+        if self._solo is not None:
+            return self._solo.init_state()
+        return self.backend.init_packed(list(self.seeds))
+
+    def _job_tele(self, j: int, *, chunk_idx, done, total, dt, seg_gens,
+                  slot_y, slot_x, chunk_y, traj, migrations, extras):
+        off, cnt = self.slots[j]
+        spec = self.specs[j]
+        scale = spec.fitness_scale()
+        mini = spec.minimize
+        yj = slot_y[off:off + cnt]
+        r = off + (int(np.argmin(yj)) if mini else int(np.argmax(yj)))
+        cyj = chunk_y[off:off + cnt]
+        tj = traj[off:off + cnt]                     # [r_j, T]
+        return {
+            "chunk": chunk_idx, "gens_done": done, "gens_total": total,
+            "chunk_gens": seg_gens,
+            "chunk_best": float(np.min(cyj) if mini else np.max(cyj)) / scale,
+            "best_fitness": float(slot_y[r]) / scale,
+            "best_params": spec.decode(slot_x[r]),
+            "traj_best": (np.min(tj, axis=0) if mini
+                          else np.max(tj, axis=0)) / scale,
+            "wall_s": dt,
+            "gens_per_s": seg_gens / dt if dt > 0 else float("inf"),
+            "backend": self.backend_name,
+            "problem": spec.problem or "blackbox",
+            "n_vars": spec.v,
+            "migrations": migrations,
+            "telemetry_unit_gens": int(extras.get("telemetry_unit_gens", 1)),
+            "job_index": j, "pack_size": len(self.specs),
+            "slots": (off, cnt),
+            "extras": {k: extras[k] for k in ("n_islands", "n_shards",
+                                              "epoch_mode")
+                       if k in extras},
+        }
+
+    def run_chunked(self, *, chunk_generations: Optional[int] = None,
+                    ckpt_dir: Optional[str] = None,
+                    resume: bool = True) -> Iterator[Dict[str, Any]]:
+        """Chunked pack run: yields {"chunk", "gens_done", ..., "jobs": [...]}
+        with one Engine-style telemetry dict per job.  With `ckpt_dir`, every
+        chunk checkpoints the whole packed state + per-slot bests, so an
+        abandoned run (preemption) resumes bit-identically — the checkpoint
+        records the slot seeds and refuses a mismatched pack composition."""
+        if self._solo is not None:
+            for tele in self._solo.run_chunked(
+                    chunk_generations=chunk_generations,
+                    ckpt_dir=ckpt_dir, resume=resume):
+                jt = dict(tele)
+                jt.update(job_index=0, pack_size=1, slots=(0, 1))
+                yield {"chunk": tele["chunk"], "gens_done": tele["gens_done"],
+                       "gens_total": tele["gens_total"],
+                       "chunk_gens": tele["chunk_gens"],
+                       "wall_s": tele["wall_s"],
+                       "gens_per_s": tele["gens_per_s"],
+                       "backend": self.backend_name, "pack_size": 1,
+                       "jobs": [jt]}
+            return
+
+        spec = self.batch_spec
+        total = spec.generations
+        chunk = chunk_generations or max(1, total // 10, spec.gens_per_epoch)
+        mini = spec.minimize
+        L = self.n_slots
+
+        state = self.init_state()
+        done, chunk_idx, migrations = 0, 0, 0
+        slot_y = np.full((L,), np.inf if mini else -np.inf, np.float32)
+        slot_x = np.zeros((L, spec.v), np.uint32)
+        if ckpt_dir and resume:
+            step = CKPT.latest_step(ckpt_dir)
+            if step is not None:
+                state, extra = CKPT.restore(ckpt_dir, step, state)
+                ck_backend = extra.get("backend")
+                if ck_backend is not None and ck_backend != self.backend_name:
+                    raise ValueError(
+                        f"checkpoint in {ckpt_dir} was written by the "
+                        f"{ck_backend!r} backend; resuming it with "
+                        f"{self.backend_name!r} would load a mismatched "
+                        "state layout")
+                ck_seeds = [int(s) for s in extra.get("seeds", [])]
+                if ck_seeds and ck_seeds != [int(s) for s in self.seeds]:
+                    raise ValueError(
+                        f"checkpoint in {ckpt_dir} holds a pack with slot "
+                        f"seeds {ck_seeds}, not {list(self.seeds)} — a pack "
+                        "must resume with the same jobs in the same order")
+                done = int(extra["gens_done"])
+                chunk_idx = int(extra.get("chunk_idx", 0))
+                migrations = int(extra.get("migrations", 0))
+                slot_y = np.asarray(extra["slot_y"], np.float32)
+                slot_x = np.asarray(extra["slot_x"],
+                                    np.uint32).reshape(L, spec.v)
+
+        if done >= total:
+            # resumed a finished pack: surface the stored per-job results
+            yield {
+                "chunk": chunk_idx, "gens_done": done, "gens_total": total,
+                "chunk_gens": 0, "wall_s": 0.0, "gens_per_s": 0.0,
+                "backend": self.backend_name, "pack_size": len(self.specs),
+                "already_complete": True,
+                "jobs": [self._job_tele(
+                    j, chunk_idx=chunk_idx, done=done, total=total, dt=0.0,
+                    seg_gens=0, slot_y=slot_y, slot_x=slot_x, chunk_y=slot_y,
+                    traj=slot_y[:, None], migrations=migrations, extras={})
+                    for j in range(len(self.specs))],
+            }
+            return
+
+        while done < total:
+            t0 = time.perf_counter()
+            seg = self.backend.segment(state, min(chunk, total - done))
+            jax.block_until_ready(jax.tree.leaves(seg.state))
+            dt = time.perf_counter() - t0
+            state = seg.state
+            done += seg.gens
+            chunk_idx += 1
+            migrations += int(seg.extras.get("migrations", 0))
+            by = np.asarray(seg.extras["per_repeat_best"],
+                            np.float32).reshape(L)
+            bx = np.asarray(seg.extras["per_repeat_best_x"],
+                            np.uint32).reshape(L, spec.v)
+            traj = np.asarray(seg.extras["per_repeat_traj_best"],
+                              np.float32).reshape(L, -1)
+            better = by < slot_y if mini else by > slot_y
+            slot_y = np.where(better, by, slot_y)
+            slot_x = np.where(better[:, None], bx, slot_x)
+            if ckpt_dir:
+                CKPT.save(ckpt_dir, step=done, tree=state,
+                          extra={"gens_done": done, "chunk_idx": chunk_idx,
+                                 "migrations": migrations,
+                                 "slot_y": [float(v) for v in slot_y],
+                                 "slot_x": [[int(v) for v in row]
+                                            for row in slot_x],
+                                 "seeds": [int(s) for s in self.seeds],
+                                 "backend": self.backend_name})
+            yield {
+                "chunk": chunk_idx, "gens_done": done, "gens_total": total,
+                "chunk_gens": seg.gens, "wall_s": dt,
+                "gens_per_s": seg.gens / dt if dt > 0 else float("inf"),
+                "backend": self.backend_name, "pack_size": len(self.specs),
+                "jobs": [self._job_tele(
+                    j, chunk_idx=chunk_idx, done=done, total=total, dt=dt,
+                    seg_gens=seg.gens, slot_y=slot_y, slot_x=slot_x,
+                    chunk_y=by, traj=traj, migrations=migrations,
+                    extras=seg.extras) for j in range(len(self.specs))],
+            }
+
+    def run(self, *, chunk_generations: Optional[int] = None):
+        """Run the pack to completion; returns the final per-job telemetry
+        list (one Engine-style dict per job)."""
+        last = None
+        for last in self.run_chunked(chunk_generations=chunk_generations):
+            pass
+        return last["jobs"]

@@ -196,11 +196,42 @@ class GASpec:
 
     def program(self) -> F.FitnessProgram:
         """The spec's fitness compiled for every executor (LUT ROMs when
-        mode='lut', the shared XLA/in-kernel arith stage always)."""
-        return F.compile_program(problem=self.problem, fitness=self.fitness,
-                                 bounds=self.bounds, n_vars=self.v,
-                                 bits_per_var=self.bits_per_var,
-                                 mode=self.mode, minimize=self.minimize)
+        mode='lut', the shared XLA/in-kernel arith stage always).
+
+        Cached per spec instance: every caller (capability checks, epoch
+        planning, executor construction) sees the SAME FitnessProgram, so
+        its bound `.stage` method hashes/compares equal across calls and
+        downstream trace caches (kernels.ga_step) key on one object instead
+        of re-tracing a fresh program each time."""
+        cached = self.__dict__.get("_program")
+        if cached is None:
+            cached = F.compile_program(problem=self.problem,
+                                       fitness=self.fitness,
+                                       bounds=self.bounds, n_vars=self.v,
+                                       bits_per_var=self.bits_per_var,
+                                       mode=self.mode, minimize=self.minimize)
+            object.__setattr__(self, "_program", cached)
+        return cached
+
+    def compile_key(self) -> tuple:
+        """Hashable trace-shape identity: two specs with equal keys lower to
+        identical traced computations — only `seed` (consumed exclusively by
+        `init_state`), `generations` and `n_repeats` (loop/stack extents the
+        runners re-trace by shape anyway) may differ.  This is the key the
+        compiled-runner cache (repro.ga.compile_cache) and the serving
+        scheduler's job packing both use.
+
+        Blackbox fitnesses are keyed by callable identity — safe because a
+        cache entry's runner closes over the fitness (keeping it alive), so
+        an id can never be recycled while its entry exists."""
+        fit_id = (self.problem if self.problem is not None
+                  else ("blackbox", id(self.fitness), self.bounds))
+        return (fit_id, self.v, self.n, self.bits_per_var, self.mode,
+                self.selection, self.crossover, self.mutation,
+                self.mutation_rate, self.minimize, self.steps_per_draw,
+                self.n_islands, self.migrate_every, self.gens_per_epoch,
+                self.effective_topology, self.migration, self.mesh_axes,
+                self.jit_fitness)
 
     def fitness_fn(self) -> G.FitnessFn:
         return self.program().fitness(self.mode)

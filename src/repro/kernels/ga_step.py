@@ -128,6 +128,27 @@ def _onehot_gather_u32(oh: jax.Array, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=64)
+def _ffm_jaxpr(ffm: FfmStage, n: int, v: int):
+    """One shared trace of the FFM stage per (ffm, n, v).
+
+    A fused engine build consults this trace up to three times — the
+    `supports` const gate, the epoch planner's VMEM budget check and
+    `_hoist_ffm` at kernel-build time — so a slow-to-trace blackbox fitness
+    must not pay 3×.  `ffm` is a bound `FitnessProgram.stage` method (the
+    spec caches its program, so the SAME bound method arrives each call) or
+    a user callable; both hash by identity, and the cached jaxpr's consts
+    keep any captured arrays (and the callable itself) alive, so id-keyed
+    entries can't go stale."""
+    return jax.make_jaxpr(lambda xx: jnp.asarray(ffm(xx), jnp.float32))(
+        jax.ShapeDtypeStruct((n, v), jnp.uint32))
+
+
+def ffm_trace_cache_info():
+    """Hit/miss counters of the shared FFM trace cache (for tests/metrics)."""
+    return _ffm_jaxpr.cache_info()
+
+
 def _hoist_ffm(ffm: FfmStage, n: int, v: int):
     """Lower the FFM stage to a jaxpr and hoist its captured array constants
     into explicit kernel inputs (Pallas kernels cannot capture non-scalar
@@ -135,8 +156,7 @@ def _hoist_ffm(ffm: FfmStage, n: int, v: int):
     Returns (conv_fn(x, *consts), const_shapes, flat_consts, const_bytes):
     each const rides in flattened to one 2-D (1, size) lane row for TPU
     friendliness and is reshaped back inside the kernel."""
-    closed = jax.make_jaxpr(lambda xx: jnp.asarray(ffm(xx), jnp.float32))(
-        jax.ShapeDtypeStruct((n, v), jnp.uint32))
+    closed = _ffm_jaxpr(ffm, n, v)
     consts = closed.consts
     conv = lambda xx, *cs: jax.core.eval_jaxpr(closed.jaxpr, cs, xx)[0]
     const_shapes = tuple(np.shape(c) for c in consts)
@@ -154,8 +174,7 @@ def ffm_const_bytes(ffm: FfmStage, cfg: GAConfig) -> int:
     only: sizes come from the jaxpr consts' metadata, no flattening or
     device transfers (this runs at capability-check time, possibly against
     MB-scale captured arrays)."""
-    closed = jax.make_jaxpr(lambda xx: jnp.asarray(ffm(xx), jnp.float32))(
-        jax.ShapeDtypeStruct((cfg.n, cfg.v), jnp.uint32))
+    closed = _ffm_jaxpr(ffm, cfg.n, cfg.v)
     return int(sum(int(np.size(c)) * np.dtype(c.dtype).itemsize
                    for c in closed.consts))
 

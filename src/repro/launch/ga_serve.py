@@ -1,0 +1,141 @@
+"""GA serving launcher — run the multi-tenant scheduler from the CLI.
+
+    # four demo jobs (two packable pairs) with live streaming + metrics
+    PYTHONPATH=src python -m repro.launch.ga_serve --demo 4 --port 9100
+
+    # jobs from a JSON file, packed onto an 8-way mesh
+    PYTHONPATH=src python -m repro.launch.ga_serve --jobs jobs.json \
+        --mesh auto --max-pack 8 --chunk 16
+
+The jobs file is a JSON list of objects; each object's keys are GASpec
+fields plus optional "backend" and "priority":
+
+    [{"problem": "F3", "n": 32, "bits_per_var": 10, "generations": 100},
+     {"problem": "F3", "n": 32, "bits_per_var": 10, "generations": 100,
+      "seed": 7},
+     {"problem": "rastrigin:4", "n": 64, "generations": 200, "priority": 5}]
+
+Jobs sharing a spec shape (same `GASpec.compile_key()` and generations) are
+packed down the replica axis into one launch — results stay bit-identical
+to solo runs — and repeat shapes hit the process-global compile cache.
+`--port` serves /metrics, /jobs, /jobs/<id> (long-poll) and
+/jobs/<id>/stream (SSE) while jobs run; `--demo K` submits K F3 jobs with
+distinct seeds (and, for K >= 3, one higher-priority rastrigin job that
+preempts them) without needing a file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _spec_from(obj: dict):
+    from repro import ga
+    obj = dict(obj)
+    backend = obj.pop("backend", None)
+    priority = int(obj.pop("priority", 0))
+    return ga.GASpec(**obj), backend, priority
+
+
+def _demo_jobs(k: int):
+    base = dict(problem="F3", n=32, bits_per_var=10, generations=64)
+    jobs = [dict(base, seed=11 + i) for i in range(k)]
+    if k >= 3:
+        # a later high-priority arrival that preempts the running pack
+        jobs[-1] = dict(problem="rastrigin:4", n=32, bits_per_var=10,
+                        generations=64, seed=5, priority=10)
+    return jobs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", default=None,
+                    help="JSON file: list of GASpec-field objects "
+                         "(+ optional 'backend'/'priority' keys)")
+    ap.add_argument("--demo", type=int, default=0, metavar="K",
+                    help="submit K built-in demo jobs instead of --jobs")
+    ap.add_argument("--backend", default="auto",
+                    help="default backend for jobs that don't name one")
+    ap.add_argument("--mesh", default=None,
+                    help="shard islands over devices: 'auto', '4', '2x4', ...")
+    ap.add_argument("--max-pack", type=int, default=8,
+                    help="max replica slots per packed launch")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="telemetry/preemption granularity in generations")
+    ap.add_argument("--ckpt-root", default=None,
+                    help="pack checkpoint directory (temp dir by default)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="serve /metrics, /jobs and SSE streams at PORT "
+                         "(0 picks an ephemeral port)")
+    ap.add_argument("--stream", default="first",
+                    choices=["first", "none"],
+                    help="print the first job's live telemetry feed")
+    args = ap.parse_args()
+
+    if (args.jobs is None) == (args.demo <= 0):
+        ap.error("exactly one of --jobs FILE or --demo K is required")
+    job_dicts = (_demo_jobs(args.demo) if args.demo > 0
+                 else json.load(open(args.jobs)))
+    if not job_dicts:
+        ap.error("no jobs to run")
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh
+        mesh = parse_mesh(args.mesh)
+        print(f"mesh: {dict(mesh.shape)} ({mesh.devices.size} device(s))")
+
+    from repro.serve.scheduler import GAScheduler
+    sched = GAScheduler(mesh=mesh, backend=args.backend,
+                        max_pack=args.max_pack,
+                        chunk_generations=args.chunk,
+                        ckpt_root=args.ckpt_root)
+
+    server = None
+    if args.port is not None:
+        from repro.serve.metrics_http import start_metrics_server
+        server = start_metrics_server(args.port, registry=sched.registry)
+        port = server.server_address[1]
+        print(f"metrics:  http://0.0.0.0:{port}/metrics")
+        print(f"jobs:     http://0.0.0.0:{port}/jobs")
+        print(f"streams:  http://0.0.0.0:{port}/jobs/<id>/stream  (SSE)")
+
+    ids = []
+    for obj in job_dicts:
+        spec, backend, priority = _spec_from(obj)
+        job_id = sched.submit(spec, backend=backend, priority=priority)
+        ids.append(job_id)
+        print(f"submitted {job_id}: {spec.problem or 'blackbox'} "
+              f"gens={spec.generations} priority={priority}")
+
+    try:
+        if args.stream == "first":
+            for event in sched.stream(ids[0]):
+                if event.get("event") != "chunk":
+                    continue
+                print(f"[{event['job_id']}] chunk {event['chunk']}: "
+                      f"{event['gens_done']}/{event['gens_total']} gens, "
+                      f"best={event['best_fitness']:.4f}, "
+                      f"pack={event.get('pack_size', 1)}")
+        sched.wait_all(timeout=600)
+        for job_id in ids:
+            res = sched.result(job_id)
+            print(f"{job_id}: best={res['best_fitness']:.6f} "
+                  f"backend={res['backend']} pack={res.get('pack_size', 1)} "
+                  f"({res['gens_per_s']:.0f} gens/s)")
+        stats = sched.stats()
+        print(f"packs={stats['packs_launched']} "
+              f"packed_jobs={stats['jobs_packed']} "
+              f"preemptions={stats['preemptions']} "
+              f"cache: {stats['cache_hits']} hit(s) / "
+              f"{stats['cache_misses']} miss(es), "
+              f"{stats['cache_entries']} entries")
+    finally:
+        sched.shutdown()
+        if server is not None:
+            server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

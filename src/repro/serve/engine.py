@@ -141,7 +141,8 @@ class GAJobStats:
     backend: str = "?"
     problem: str = "?"               # registry name or "blackbox"
     n_vars: int = 0                  # decoded variable count V
-    status: str = "pending"          # pending | running | done | failed
+    # pending | queued | running | preempted | done | failed
+    status: str = "pending"
     gens_done: int = 0
     gens_total: int = 0
     chunks: int = 0
@@ -152,6 +153,9 @@ class GAJobStats:
     shards: int = 1                  # mesh shards the island axis spans
     wall_s: float = 0.0
     error: Optional[str] = None
+    priority: int = 0                # scheduler priority (higher preempts)
+    preemptions: int = 0             # times the scheduler parked this job
+    pack_size: int = 1               # jobs sharing the launch it ran in
 
     @property
     def gens_per_s(self) -> float:
@@ -183,6 +187,9 @@ class GAJobStats:
             "migration_count": self.migrations,
             "wall_s": round(self.wall_s, 4),
             "error": self.error,
+            "priority": self.priority,
+            "preemptions": self.preemptions,
+            "pack_size": self.pack_size,
         }
 
 
@@ -191,13 +198,22 @@ class GAMetricsRegistry:
 
     Feed it `run_chunked` telemetry dicts via `record_chunk`; scrape the
     whole registry with `metrics()` (every job keyed by id, plus fleet
-    totals), the shape a /metrics handler returns as JSON.
+    totals), the shape a /metrics handler returns as JSON.  Every mutation
+    and snapshot holds the registry lock — the scheduler records chunks
+    from its worker thread while HTTP handler threads scrape and stream.
+
+    Streaming: `subscribe(job_id)` returns a Queue that receives every
+    subsequent `record_chunk` telemetry dict for that job plus a final
+    `{"event": "end", ...}` marker from `finish_job` — the feed the
+    metrics_http SSE/long-poll endpoints drain.
     """
 
     def __init__(self):
         self._lock = threading.Lock()
         self._jobs: Dict[str, GAJobStats] = {}
         self._next_id = 0
+        self._subs: Dict[str, List["queue.Queue"]] = {}
+        self._scheduler_stats: Optional[Any] = None   # callable -> dict
 
     def allocate_job_id(self, suffix: str = "job") -> str:
         """A unique job id, safe under concurrent `run_ga_job` calls."""
@@ -209,12 +225,37 @@ class GAMetricsRegistry:
     def start_job(self, job_id: str, backend: str = "?",
                   gens_total: int = 0, problem: str = "?",
                   n_vars: int = 0) -> GAJobStats:
+        """Mark a job running.  Upserts: a job the scheduler queued (or
+        preempted and re-dispatched) keeps its accumulated stats."""
         with self._lock:
-            job = GAJobStats(job_id=job_id, backend=backend,
-                             problem=problem, n_vars=n_vars,
-                             gens_total=gens_total, status="running")
+            job = self._jobs.get(job_id)
+            if job is None:
+                job = GAJobStats(job_id=job_id)
+                self._jobs[job_id] = job
+            job.backend = backend if backend != "?" else job.backend
+            job.problem = problem if problem != "?" else job.problem
+            job.n_vars = n_vars or job.n_vars
+            job.gens_total = gens_total or job.gens_total
+            job.status = "running"
+            return job
+
+    def queue_job(self, job_id: str, problem: str = "?", gens_total: int = 0,
+                  n_vars: int = 0, priority: int = 0) -> GAJobStats:
+        """Register a scheduler-owned job in the QUEUED state."""
+        with self._lock:
+            job = GAJobStats(job_id=job_id, problem=problem, n_vars=n_vars,
+                             gens_total=gens_total, status="queued",
+                             priority=priority)
             self._jobs[job_id] = job
             return job
+
+    def set_status(self, job_id: str, status: str) -> None:
+        """Move a job between scheduler states (queued/running/preempted)."""
+        with self._lock:
+            job = self._jobs[job_id]
+            if status == "preempted" and job.status != "preempted":
+                job.preemptions += 1
+            job.status = status
 
     def record_chunk(self, job_id: str, tele: Dict[str, Any]) -> None:
         """Fold one `Engine.run_chunked` telemetry dict into the job."""
@@ -228,6 +269,7 @@ class GAMetricsRegistry:
             job.chunks += 1
             job.wall_s += float(tele.get("wall_s", 0.0))
             job.migrations = int(tele.get("migrations", job.migrations))
+            job.pack_size = int(tele.get("pack_size", job.pack_size))
             extras = tele.get("extras", {})
             job.islands = int(extras.get("n_islands", job.islands))
             job.shards = int(extras.get("n_shards", job.shards))
@@ -235,31 +277,84 @@ class GAMetricsRegistry:
             if bf is not None:
                 job.best_fitness = float(bf)
                 job.best_trajectory.append(float(bf))
+            subs = list(self._subs.get(job_id, ()))
+        event = {"event": "chunk", "job_id": job_id}
+        event.update({k: v for k, v in tele.items()
+                      if k not in ("extras", "best_params", "traj_best")})
+        for q in subs:
+            q.put(event)
 
     def finish_job(self, job_id: str, error: Optional[str] = None) -> None:
         with self._lock:
             job = self._jobs[job_id]
             job.status = "failed" if error else "done"
             job.error = error
+            subs = list(self._subs.get(job_id, ()))
+            end = {"event": "end", "job_id": job_id, "status": job.status,
+                   "best_fitness": job.best_fitness, "error": error}
+        for q in subs:
+            q.put(end)
+
+    # ---- streaming ------------------------------------------------------
+
+    def subscribe(self, job_id: str) -> "queue.Queue":
+        """A Queue fed every future chunk event (and the end marker) for
+        `job_id`.  Pair with `unsubscribe` when the client disconnects."""
+        q: "queue.Queue" = queue.Queue()
+        with self._lock:
+            self._subs.setdefault(job_id, []).append(q)
+        return q
+
+    def unsubscribe(self, job_id: str, q: "queue.Queue") -> None:
+        with self._lock:
+            subs = self._subs.get(job_id)
+            if subs and q in subs:
+                subs.remove(q)
+                if not subs:
+                    del self._subs[job_id]
+
+    # ---- scheduler gauges ----------------------------------------------
+
+    def attach_scheduler_stats(self, stats_fn) -> None:
+        """Register a zero-arg callable returning scheduler gauges
+        (queue depth, jobs running, compile-cache counters); its dict rides
+        into every `metrics()` snapshot under "scheduler"."""
+        with self._lock:
+            self._scheduler_stats = stats_fn
 
     def metrics(self) -> Dict[str, Any]:
         """The /metrics snapshot: every job + fleet aggregates."""
         with self._lock:
             jobs = {jid: j.as_metrics() for jid, j in self._jobs.items()}
-        done = [j for j in jobs.values() if j["status"] == "done"]
-        return {
+            stats_fn = self._scheduler_stats
+        by_status = {}
+        for j in jobs.values():
+            by_status[j["status"]] = by_status.get(j["status"], 0) + 1
+        snap = {
             "jobs": jobs,
             "job_count": len(jobs),
-            "jobs_done": len(done),
+            "jobs_done": by_status.get("done", 0),
+            "jobs_running": by_status.get("running", 0),
+            "jobs_queued": by_status.get("queued", 0),
+            "jobs_preempted": by_status.get("preempted", 0),
+            "jobs_failed": by_status.get("failed", 0),
             "generations_total": sum(j["generations_done"]
                                      for j in jobs.values()),
             "migrations_total": sum(j["migration_count"]
                                     for j in jobs.values()),
         }
+        if stats_fn is not None:
+            try:
+                snap["scheduler"] = dict(stats_fn())
+            except Exception:      # a dying scheduler must not kill scrapes
+                pass
+        return snap
 
     def reset(self) -> None:
         with self._lock:
             self._jobs.clear()
+            self._subs.clear()
+            self._scheduler_stats = None
 
 
 GA_METRICS = GAMetricsRegistry()

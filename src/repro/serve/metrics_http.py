@@ -1,23 +1,40 @@
-"""Minimal stdlib /metrics endpoint for the GA serving telemetry.
+"""Stdlib HTTP surface for the GA serving telemetry.
 
 `GA_METRICS` (repro.serve.engine) aggregates `Engine.run_chunked` telemetry
-per job; this module makes that snapshot scrapeable before a full RPC stack
-lands: a `http.server` daemon thread rendering the registry in Prometheus
-text exposition format.
+per job; this module makes that snapshot scrapeable AND streamable before a
+full RPC stack lands: a `http.server` daemon thread rendering the registry
+in Prometheus text exposition format plus JSON/SSE job endpoints.
 
     from repro.serve.metrics_http import start_metrics_server
     server = start_metrics_server(9100)          # or 0 for an ephemeral port
-    ... run GA jobs (serve.engine.run_ga_job) ...
+    ... run GA jobs (serve.engine.run_ga_job / serve.scheduler) ...
     server.shutdown()
 
-Endpoints: `/metrics` (Prometheus text, version 0.0.4) and `/healthz`.
-Opt-in from the CLI with `repro.launch.ga_run --metrics-port PORT`.
+Endpoints:
+  /metrics               Prometheus text (version 0.0.4) — per-job gauges,
+                         fleet totals, and (when a GAScheduler attached its
+                         stats to the registry) queue-depth / jobs-running /
+                         compile-cache gauges.
+  /healthz               liveness probe.
+  /jobs                  JSON registry snapshot.
+  /jobs/<id>             JSON one job; `?after=N&timeout=S` long-polls until
+                         the job has recorded more than N chunks (or ended).
+  /jobs/<id>/stream      Server-Sent Events: one `data:` JSON line per
+                         telemetry chunk while the job runs, closing with an
+                         `event: end` message — live streaming for curl /
+                         EventSource clients.
+
+Opt-in from the CLI with `repro.launch.ga_run --metrics-port PORT` or
+`repro.launch.ga_serve --port PORT`.
 """
 
 from __future__ import annotations
 
+import json
+import queue as _queue
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
 
 _PREFIX = "repro_ga"
 
@@ -35,13 +52,33 @@ _JOB_GAUGES = (
     ("migration_count", "migrations", "Ring migrations performed"),
     ("n_vars", "n_vars", "Decoded variable count V"),
     ("wall_s", "wall_seconds", "Wall-clock seconds spent"),
+    ("priority", "priority", "Scheduler priority (higher preempts)"),
+    ("preemptions", "preemptions", "Times the scheduler parked this job"),
+    ("pack_size", "pack_size", "Jobs sharing this job's launch"),
 )
 
 _FLEET_GAUGES = (
     ("job_count", "jobs", "GA jobs known to the registry"),
     ("jobs_done", "jobs_done", "GA jobs finished successfully"),
+    ("jobs_running", "jobs_running", "GA jobs currently running"),
+    ("jobs_queued", "jobs_queued", "GA jobs waiting in the scheduler queue"),
+    ("jobs_preempted", "jobs_preempted", "GA jobs parked by preemption"),
+    ("jobs_failed", "jobs_failed", "GA jobs that errored"),
     ("generations_total", "fleet_generations", "Generations done, all jobs"),
     ("migrations_total", "fleet_migrations", "Migrations, all jobs"),
+)
+
+# scheduler gauges (snapshot["scheduler"], present when a GAScheduler is
+# attached): queue depth / packing / compile-cache counters for the CI smoke
+_SCHED_GAUGES = (
+    ("queue_depth", "sched_queue_depth", "Jobs waiting for the mesh"),
+    ("jobs_running", "sched_jobs_running", "Jobs in the running pack"),
+    ("packs_launched", "sched_packs_launched", "Packed launches dispatched"),
+    ("preemptions", "sched_preemptions", "Packs parked for priority work"),
+    ("jobs_packed", "sched_jobs_packed", "Jobs that shared a launch"),
+    ("cache_hits", "compile_cache_hits", "Compiled-runner cache hits"),
+    ("cache_misses", "compile_cache_misses", "Compiled-runner cache misses"),
+    ("cache_entries", "compile_cache_entries", "Compiled runners cached"),
 )
 
 
@@ -81,13 +118,35 @@ def render_prometheus(snapshot: dict) -> str:
         lines.append(f"# HELP {name} {help_}")
         lines.append(f"# TYPE {name} gauge")
         lines.append(f"{name} {float(snapshot.get(key, 0)):g}")
+    sched = snapshot.get("scheduler")
+    if sched:
+        for key, suffix, help_ in _SCHED_GAUGES:
+            if key not in sched:
+                continue
+            name = f"{_PREFIX}_{suffix}"
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name} {float(sched[key]):g}")
     return "\n".join(lines) + "\n"
+
+
+def _json_default(v):
+    try:
+        import numpy as np
+        if isinstance(v, np.ndarray):
+            return v.tolist()
+        if isinstance(v, np.generic):
+            return v.item()
+    except Exception:
+        pass
+    return str(v)
 
 
 def start_metrics_server(port: int = 0, registry=None,
                          host: str = "0.0.0.0") -> ThreadingHTTPServer:
     """Serve `registry` (default: the process-global GA_METRICS) at
-    /metrics on a daemon thread.  Returns the server; its bound port is
+    /metrics (+ /jobs JSON, /jobs/<id> long-poll, /jobs/<id>/stream SSE) on
+    a daemon thread.  Returns the server; its bound port is
     `server.server_address[1]` (useful with port=0), stop with
     `server.shutdown()`."""
     if registry is None:
@@ -95,21 +154,110 @@ def start_metrics_server(port: int = 0, registry=None,
         registry = GA_METRICS
 
     class Handler(BaseHTTPRequestHandler):
-        def do_GET(self):  # noqa: N802  (http.server API)
-            if self.path.split("?")[0] not in ("/metrics", "/healthz", "/"):
-                self.send_error(404)
-                return
-            if self.path.startswith("/healthz"):
-                body = b"ok\n"
-                ctype = "text/plain"
-            else:
-                body = render_prometheus(registry.metrics()).encode()
-                ctype = "text/plain; version=0.0.4; charset=utf-8"
-            self.send_response(200)
+        def _send(self, body: bytes, ctype: str, code: int = 200):
+            self.send_response(code)
             self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
+
+        def _send_json(self, obj, code: int = 200):
+            self._send(json.dumps(obj, default=_json_default).encode(),
+                       "application/json", code)
+
+        def _job_snapshot(self, job_id):
+            return registry.metrics()["jobs"].get(job_id)
+
+        def _long_poll(self, job_id, qs):
+            """Block until the job has recorded more chunks than `after`
+            (or ended / `timeout` seconds passed), then return its dict."""
+            after = int(qs.get("after", ["-1"])[0])
+            timeout = min(float(qs.get("timeout", ["30"])[0]), 300.0)
+            snap = self._job_snapshot(job_id)
+            if snap is None:
+                self.send_error(404, f"no such job {job_id}")
+                return
+            sub = registry.subscribe(job_id)
+            try:
+                import time as _t
+                deadline = _t.monotonic() + timeout
+                while (snap["chunks"] <= after
+                       and snap["status"] in ("pending", "queued", "running",
+                                              "preempted")):
+                    left = deadline - _t.monotonic()
+                    if left <= 0:
+                        break
+                    try:
+                        sub.get(timeout=min(left, 1.0))
+                    except _queue.Empty:
+                        pass
+                    snap = self._job_snapshot(job_id)
+            finally:
+                registry.unsubscribe(job_id, sub)
+            self._send_json(snap)
+
+        def _stream_sse(self, job_id):
+            """Server-Sent Events: chunk telemetry as `data:` JSON lines."""
+            snap = self._job_snapshot(job_id)
+            if snap is None:
+                self.send_error(404, f"no such job {job_id}")
+                return
+            sub = registry.subscribe(job_id)
+            try:
+                self.send_response(200)
+                self.send_header("Content-Type", "text/event-stream")
+                self.send_header("Cache-Control", "no-cache")
+                self.end_headers()
+                # prime with the current snapshot so late subscribers see
+                # where the job stands before live chunks arrive
+                self.wfile.write(b"event: snapshot\ndata: " + json.dumps(
+                    snap, default=_json_default).encode() + b"\n\n")
+                self.wfile.flush()
+                if snap["status"] in ("done", "failed"):
+                    return
+                while True:
+                    try:
+                        event = sub.get(timeout=15.0)
+                    except _queue.Empty:
+                        self.wfile.write(b": keepalive\n\n")   # SSE comment
+                        self.wfile.flush()
+                        continue
+                    name = event.get("event", "chunk")
+                    self.wfile.write(
+                        f"event: {name}\n".encode() + b"data: " + json.dumps(
+                            event, default=_json_default).encode() + b"\n\n")
+                    self.wfile.flush()
+                    if name == "end":
+                        return
+            except (BrokenPipeError, ConnectionResetError):
+                pass                                 # client went away
+            finally:
+                registry.unsubscribe(job_id, sub)
+
+        def do_GET(self):  # noqa: N802  (http.server API)
+            url = urlparse(self.path)
+            path, qs = url.path.rstrip("/") or "/", parse_qs(url.query)
+            if path in ("/", "/metrics"):
+                self._send(render_prometheus(registry.metrics()).encode(),
+                           "text/plain; version=0.0.4; charset=utf-8")
+            elif path == "/healthz":
+                self._send(b"ok\n", "text/plain")
+            elif path == "/jobs":
+                self._send_json(registry.metrics())
+            elif path.startswith("/jobs/") and path.endswith("/stream"):
+                self._stream_sse(path[len("/jobs/"):-len("/stream")])
+            elif path.startswith("/jobs/"):
+                job_id = path[len("/jobs/"):]
+                if "after" in qs or "timeout" in qs:
+                    self._long_poll(job_id, qs)
+                else:
+                    snap = self._job_snapshot(job_id)
+                    if snap is None:
+                        self.send_error(404, f"no such job {job_id}")
+                    else:
+                        self._send_json(snap)
+            else:
+                self.send_error(404)
 
         def log_message(self, *a):   # keep scrapes out of stdout
             pass

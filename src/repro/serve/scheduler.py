@@ -1,0 +1,312 @@
+"""GA-as-a-service: async multi-tenant job scheduler over one device mesh.
+
+`run_ga_job` made the engine a telemetered *single-job* service; this module
+makes it multi-tenant.  A `GAScheduler` owns the mesh and a worker thread;
+clients `submit(spec)` and get a job id back immediately:
+
+    sched = GAScheduler(mesh=mesh)
+    a = sched.submit(spec_a)                  # QUEUED
+    b = sched.submit(spec_b)                  # shape-compatible with a
+    hot = sched.submit(urgent, priority=10)   # preempts the running pack
+    for event in sched.stream(a):             # live per-chunk telemetry
+        print(event["gens_done"], event["best_fitness"])
+    print(sched.result(a)["best_fitness"])    # blocks until DONE
+
+Three mechanisms carry the multiplexing:
+
+* **Packing** — queued jobs whose specs share `GASpec.compile_key()` (and
+  `generations`) are packed down the engine's `n_repeats` replica axis into
+  ONE `PackedEngine` launch, up to `max_pack` slots.  Slot seeding follows
+  the solo convention exactly, so per-job results are bit-identical to
+  running each job alone (asserted in tests).
+* **Compile cache** — runners live in the process-global
+  `repro.ga.compile_cache.RUNNER_CACHE`, keyed by spec shape: the second
+  submission of an identical spec shape skips tracing/compilation entirely
+  (the hit/miss counters are exported through `stats()` → /metrics).
+* **Preemption** — the worker drives `PackedEngine.run_chunked` with a
+  checkpoint directory; between chunks it checks for strictly
+  higher-priority queued work, and if present parks the pack (jobs →
+  PREEMPTED, state already on disk) and requeues it.  Resume restores the
+  packed state bit-identically — `run_chunked`'s checkpoint/resume path IS
+  the preemption primitive, no new state format.
+
+Job states: QUEUED → RUNNING → DONE, with RUNNING → PREEMPTED → QUEUED
+loops and any state → FAILED on error.  Telemetry flows through a
+`GAMetricsRegistry` (per-chunk pub/sub feeds the metrics_http SSE and
+long-poll endpoints; `attach_scheduler_stats` adds queue-depth /
+jobs-running / cache-hit gauges to every /metrics scrape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Iterator, List, Optional
+
+from repro.serve.engine import GA_METRICS, GAMetricsRegistry
+
+QUEUED = "queued"
+RUNNING = "running"
+PREEMPTED = "preempted"
+DONE = "done"
+FAILED = "failed"
+
+
+@dataclasses.dataclass
+class Job:
+    """One submitted GASpec and its scheduler-side lifecycle."""
+
+    job_id: str
+    spec: Any
+    backend: str = "auto"
+    priority: int = 0
+    state: str = QUEUED
+    result: Optional[Dict[str, Any]] = None
+    error: Optional[str] = None
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+
+
+@dataclasses.dataclass
+class _Unit:
+    """One schedulable queue entry: fresh single jobs (packable at dispatch)
+    or a preempted pack (membership frozen — its checkpoint holds the whole
+    packed state, so it must resume with the same jobs in the same order)."""
+
+    seq: int
+    jobs: List[Job]
+    packable: bool = True
+    ckpt_dir: Optional[str] = None
+
+    @property
+    def priority(self) -> int:
+        return max(j.priority for j in self.jobs)
+
+
+class GAScheduler:
+    """Async multi-tenant GA job scheduler (one worker thread owns the mesh).
+
+    Parameters: `mesh` is handed to every engine build; `backend` is the
+    default backend request; `max_pack` caps slots per launch;
+    `chunk_generations` sets the telemetry/preemption granularity;
+    `ckpt_root` is where pack checkpoints live (a temp dir by default).
+    """
+
+    def __init__(self, *, mesh=None, registry: Optional[GAMetricsRegistry]
+                 = None, backend: str = "auto", max_pack: int = 8,
+                 chunk_generations: Optional[int] = None,
+                 ckpt_root: Optional[str] = None):
+        self.mesh = mesh
+        self.registry = registry if registry is not None else GA_METRICS
+        self.backend = backend
+        self.max_pack = max(1, int(max_pack))
+        self.chunk_generations = chunk_generations
+        self.ckpt_root = ckpt_root or tempfile.mkdtemp(prefix="ga-sched-")
+        self._cv = threading.Condition()
+        self._queue: List[_Unit] = []
+        self._jobs: Dict[str, Job] = {}
+        self._seq = itertools.count()
+        self._stop = False
+        self._running: List[Job] = []
+        self.packs_launched = 0
+        self.preemptions = 0
+        self.jobs_packed = 0        # jobs that shared a launch with >=1 other
+        self.registry.attach_scheduler_stats(self.stats)
+        self._worker = threading.Thread(target=self._run, name="ga-scheduler",
+                                        daemon=True)
+        self._worker.start()
+
+    # ---- client API -----------------------------------------------------
+
+    def submit(self, spec, *, backend: Optional[str] = None,
+               priority: int = 0) -> str:
+        """Enqueue a GASpec; returns its job id immediately (state QUEUED)."""
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("scheduler is shut down")
+        job_id = self.registry.allocate_job_id(spec.problem or "blackbox")
+        job = Job(job_id=job_id, spec=spec,
+                  backend=backend if backend is not None else self.backend,
+                  priority=int(priority))
+        self.registry.queue_job(job_id, problem=spec.problem or "blackbox",
+                                gens_total=spec.generations, n_vars=spec.v,
+                                priority=job.priority)
+        with self._cv:
+            self._jobs[job_id] = job
+            self._queue.append(_Unit(seq=next(self._seq), jobs=[job]))
+            self._cv.notify_all()
+        return job_id
+
+    def job(self, job_id: str) -> Job:
+        with self._cv:
+            return self._jobs[job_id]
+
+    def result(self, job_id: str, timeout: Optional[float] = None
+               ) -> Dict[str, Any]:
+        """Block until the job finishes; returns its final telemetry dict.
+        Raises RuntimeError if it FAILED, TimeoutError on timeout."""
+        job = self.job(job_id)
+        if not job.done.wait(timeout):
+            raise TimeoutError(f"job {job_id} still {job.state} "
+                               f"after {timeout}s")
+        if job.state == FAILED:
+            raise RuntimeError(f"job {job_id} failed: {job.error}")
+        return job.result
+
+    def stream(self, job_id: str, timeout: Optional[float] = None
+               ) -> Iterator[Dict[str, Any]]:
+        """Yield per-chunk telemetry events live until the job ends (the
+        same feed the metrics_http SSE endpoint serves)."""
+        job = self.job(job_id)
+        q = self.registry.subscribe(job_id)
+        try:
+            # subscribed after the job ended -> the end event predates the
+            # subscription and will never arrive; don't block on it
+            st = self.registry.metrics()["jobs"].get(job_id, {}).get("status")
+            if job.done.is_set() or st in (DONE, FAILED):
+                return
+            while True:
+                event = q.get(timeout=timeout)
+                yield event
+                if event.get("event") == "end":
+                    return
+        finally:
+            self.registry.unsubscribe(job_id, q)
+
+    def wait_all(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted job is DONE or FAILED."""
+        import time as _t
+        deadline = None if timeout is None else _t.monotonic() + timeout
+        for job in list(self._jobs.values()):
+            left = None if deadline is None else deadline - _t.monotonic()
+            if left is not None and left <= 0:
+                raise TimeoutError("jobs still pending")
+            if not job.done.wait(left):
+                raise TimeoutError(f"job {job.job_id} still {job.state}")
+
+    def stats(self) -> Dict[str, Any]:
+        """Scheduler gauges for /metrics (queue depth, running, packing and
+        compile-cache counters)."""
+        from repro.ga.compile_cache import RUNNER_CACHE
+        with self._cv:
+            depth = sum(len(u.jobs) for u in self._queue)
+            running = len(self._running)
+        cache = RUNNER_CACHE.stats()
+        return {"queue_depth": depth, "jobs_running": running,
+                "packs_launched": self.packs_launched,
+                "preemptions": self.preemptions,
+                "jobs_packed": self.jobs_packed,
+                "max_pack": self.max_pack,
+                "cache_hits": cache["hits"],
+                "cache_misses": cache["misses"],
+                "cache_entries": cache["entries"]}
+
+    def shutdown(self, wait: bool = True, timeout: float = 30.0) -> None:
+        """Stop the worker after the unit in flight; queued jobs stay QUEUED."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if wait:
+            self._worker.join(timeout)
+
+    # ---- worker ---------------------------------------------------------
+
+    def _pack_sig(self, job: Job):
+        return (job.spec.compile_key(), job.spec.generations, job.backend)
+
+    def _take_unit(self) -> Optional[_Unit]:
+        """Pop the best-priority unit; pack compatible fresh jobs onto it.
+        FIFO within a priority level (seq breaks ties)."""
+        best = max(self._queue, key=lambda u: (u.priority, -u.seq))
+        self._queue.remove(best)
+        if best.packable:
+            sig = self._pack_sig(best.jobs[0])
+            room = self.max_pack - best.jobs[0].spec.n_repeats
+            for u in sorted([u for u in self._queue if u.packable],
+                            key=lambda u: u.seq):
+                if room <= 0:
+                    break
+                cand = u.jobs[0]
+                if (self._pack_sig(cand) == sig
+                        and cand.spec.n_repeats <= room):
+                    self._queue.remove(u)
+                    best.jobs.append(cand)
+                    room -= cand.spec.n_repeats
+        return best
+
+    def _higher_priority_waiting(self, priority: int) -> bool:
+        with self._cv:
+            return any(u.priority > priority for u in self._queue)
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait()
+                if self._stop:
+                    return
+                unit = self._take_unit()
+                for j in unit.jobs:
+                    j.state = RUNNING
+                self._running = list(unit.jobs)
+            try:
+                self._run_unit(unit)
+            except Exception as e:     # noqa: BLE001 — job-level failure wall
+                err = repr(e)
+                for j in unit.jobs:
+                    j.state = FAILED
+                    j.error = err
+                    self.registry.finish_job(j.job_id, error=err)
+                    j.done.set()
+            finally:
+                with self._cv:
+                    self._running = []
+
+    def _run_unit(self, unit: _Unit) -> None:
+        from repro.ga.engine import PackedEngine   # lazy: jax import cost
+
+        jobs = unit.jobs
+        if unit.ckpt_dir is None:
+            unit.ckpt_dir = os.path.join(self.ckpt_root, f"pack-{unit.seq}")
+        pe = PackedEngine([j.spec for j in jobs], jobs[0].backend,
+                          mesh=self.mesh)
+        self.packs_launched += 1
+        if len(jobs) > 1:
+            self.jobs_packed += len(jobs)
+        for j in jobs:
+            self.registry.start_job(j.job_id, backend=pe.backend_name,
+                                    gens_total=j.spec.generations,
+                                    problem=j.spec.problem or "blackbox",
+                                    n_vars=j.spec.v)
+        priority = unit.priority
+        last: Optional[Dict[str, Any]] = None
+        for tele in pe.run_chunked(chunk_generations=self.chunk_generations,
+                                   ckpt_dir=unit.ckpt_dir, resume=True):
+            last = tele
+            for j, jt in zip(jobs, tele["jobs"]):
+                self.registry.record_chunk(j.job_id, jt)
+            if (tele["gens_done"] < tele["gens_total"]
+                    and self._higher_priority_waiting(priority)):
+                # park the pack: state is already checkpointed; membership
+                # freezes so the packed checkpoint resumes with these jobs
+                for j in jobs:
+                    j.state = PREEMPTED
+                    self.registry.set_status(j.job_id, PREEMPTED)
+                self.preemptions += 1
+                with self._cv:
+                    # jobs stay PREEMPTED while waiting (the informative
+                    # state); the unit re-enters the queue and flips them
+                    # back to RUNNING when re-dispatched
+                    self._queue.append(_Unit(seq=unit.seq, jobs=jobs,
+                                             packable=False,
+                                             ckpt_dir=unit.ckpt_dir))
+                    self._cv.notify_all()
+                return
+        for j, jt in zip(jobs, last["jobs"]):
+            j.result = dict(jt)
+            j.result["best_params"] = [float(v) for v in jt["best_params"]]
+            j.state = DONE
+            self.registry.finish_job(j.job_id)
+            j.done.set()
