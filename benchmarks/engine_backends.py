@@ -79,8 +79,11 @@ def _mesh_device_counts(smoke: bool):
 
 
 def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
-             mesh=None, devices: int = 1):
-    eng = ga.Engine(spec, backend, mesh=mesh)
+             mesh=None, devices: int = 1, cost_table=False):
+    # cost_table=False by default: benchmark rows must not silently flip
+    # epoch plans because the host happens to have an ambient autotune
+    # table — only the explicit `+measured` rows consume one
+    eng = ga.Engine(spec, backend, mesh=mesh, cost_table=cost_table)
     out = eng.run()           # compile + warm caches
     # interpret-mode Pallas and the eager loop are slow; fewer iters.  The
     # cheap XLA backends keep 3 timed iters even in smoke mode — the
@@ -101,6 +104,7 @@ def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
                           "islands": spec.n_islands,
                           "devices": devices,
                           "epoch_mode": out.extras.get("epoch_mode", "-"),
+                          "plan_source": out.extras.get("plan_source", "-"),
                           "migrations": out.extras.get("migrations", 0)},
                          separators=(",", ":"))
     # island epochs round K up to whole migration epochs — divide by
@@ -108,7 +112,7 @@ def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
     return (name, dt / out.generations * 1e6, payload)
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, cost_table=None):
     sizes = SMOKE if smoke else dict(n=64, m=20, generations=K,
                                      n_islands=N_ISLANDS, migrate_every=16)
     rows = []
@@ -117,6 +121,14 @@ def run(smoke: bool = False):
             spec = _spec_for(backend, problem, **sizes)
             rows.append(_one_row(f"engine_{backend}[{problem}]", backend,
                                  spec, smoke=smoke))
+        if cost_table is not None:
+            # the measured-planner row: same spec as the static
+            # fused-islands row, epoch plan chosen from the cost table —
+            # check_bench gates its gens/s against the static row's
+            spec = _spec_for("fused-islands", problem, **sizes)
+            rows.append(_one_row(
+                f"engine_fused-islands[{problem}]+measured", "fused-islands",
+                spec, smoke=smoke, cost_table=cost_table))
         # mesh combos: island axis sharded over devices (device-count sweep)
         from repro.launch.mesh import make_island_mesh
         for backend in MESH_BACKENDS:
@@ -138,8 +150,11 @@ def main():
                          "regression gate; seconds, not minutes)")
     ap.add_argument("--out", default=None,
                     help="write the rows as a JSON artifact here")
+    ap.add_argument("--cost-table", default=None,
+                    help="autotune cost table path: adds '+measured' "
+                         "fused-islands rows planned from measurements")
     args = ap.parse_args()
-    rows = run(smoke=args.smoke)
+    rows = run(smoke=args.smoke, cost_table=args.cost_table)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")

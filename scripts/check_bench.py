@@ -145,6 +145,31 @@ def compare(current: dict, baseline: dict, tolerance: float):
     return failures, notes
 
 
+def measured_gate(current: dict, tolerance: float):
+    """Gate the autotuned planner against the static one: every
+    '<combo>+measured' row (epoch plan chosen from a cost table) must reach
+    at least (1 - tolerance) × its static twin's gens/s IN THE SAME
+    artifact — same machine, same run, so the comparison is absolute-safe.
+    A measured plan slower than the heuristic means the table is stale or
+    the argmax is wrong; either way the autotuner regressed."""
+    failures, notes = [], []
+    for name in sorted(n for n in current if n.endswith("+measured")):
+        static = current.get(name[:-len("+measured")])
+        cur = current[name]
+        if static is None or not static.get("gens_per_s"):
+            notes.append(f"{name}: no static twin row; skipping")
+            continue
+        floor = static["gens_per_s"] * (1.0 - tolerance)
+        if cur.get("gens_per_s", 0.0) < floor:
+            failures.append(
+                f"{name}: measured plan at {cur.get('gens_per_s', 0.0):.1f} "
+                f"gens/s < floor {floor:.1f} ({(1.0 - tolerance):.0%} of the "
+                f"static plan's {static['gens_per_s']:.1f}; "
+                f"plan_source={cur.get('plan_source', '?')}, "
+                f"epoch_mode={cur.get('epoch_mode', '?')})")
+    return failures, notes
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("artifacts", nargs="+",
@@ -179,6 +204,8 @@ def main():
     if args.write_baseline:
         rows_out = []
         for name, r in sorted(current.items()):
+            if name.endswith("+measured"):
+                continue   # gated against their static twin, not a baseline
             rows_out.append({
                 "name": name,
                 "problem": r.get("problem", "F3"),
@@ -199,6 +226,9 @@ def main():
 
     baseline = load_rows(args.baseline)
     failures, notes = compare(current, baseline, args.tolerance)
+    m_failures, m_notes = measured_gate(current, args.tolerance)
+    failures += m_failures
+    notes += m_notes
     for n in notes:
         print(f"note: {n}")
     if failures:

@@ -28,10 +28,16 @@ echo "== scheduler smoke (multi-tenant packing + preemption on an"
 echo "   8-fake-device mesh; per-job bests bit-identical to solo runs) =="
 timeout 420 python scripts/scheduler_smoke.py
 
-echo "== backend-matrix smoke (1 tiny config per topology x executor x problem) =="
+echo "== autotune smoke (tiny sweep on the 8-fake-device host; table"
+echo "   written, planner consumes it, snapshot still steers plans) =="
 mkdir -p artifacts
+timeout 420 python scripts/autotune_smoke.py \
+    --out artifacts/autotune_table.json
+
+echo "== backend-matrix smoke (1 tiny config per topology x executor x problem) =="
 timeout 420 python -m benchmarks.engine_backends --smoke \
-    --out artifacts/engine_backends.json
+    --out artifacts/engine_backends.json \
+    --cost-table artifacts/autotune_table.json
 cat artifacts/engine_backends.json
 
 echo "== serve-throughput smoke (K packed jobs vs K sequential) =="

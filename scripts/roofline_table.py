@@ -2,13 +2,41 @@
 """Render a dryrun results directory as the EXPERIMENTS.md roofline table.
 
     python scripts/roofline_table.py dryrun_results_v2 [pod1|pod2]
+
+Or render a GA autotune cost table as a measured-plan table (each epoch
+mode's gens/s as a fraction of the best plan measured for its spec):
+
+    python scripts/roofline_table.py --ga-cost-table path/to/cost_table.json
 """
 import glob
 import json
+import os
 import sys
 
 
+def render_ga(path):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.autotune import CostTable
+    from repro.roofline import ga_measured_points
+    table = CostTable.load(path)
+    if table is None:
+        print(f"no usable cost table at {path}")
+        return 1
+    print("| stage | migration | mode | N | I/shard | shards | E |"
+          " gens/launch | gens/s | % of best | reps | cov |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in ga_measured_points(table):
+        print(f"| {r['stage']} | {r['migration']} | {r['mode']} | {r['n']} |"
+              f" {r['i_local']} | {r['shards']} | {r['E']} |"
+              f" {r['gens_per_launch']} |"
+              f" {r['gens_per_s']:.1f} | {r['frac_of_best']*100:.1f} |"
+              f" {r['reps']} | {r['cov']:.3f} |")
+    return 0
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--ga-cost-table":
+        sys.exit(render_ga(sys.argv[2]))
     dirname = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results"
     mesh = sys.argv[2] if len(sys.argv) > 2 else "pod1"
     print("| arch | shape | compute (ms) | memory (ms) | collective (ms) |"

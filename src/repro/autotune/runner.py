@@ -1,0 +1,126 @@
+"""The autotune sweep: measure each feasible epoch-plan candidate.
+
+For every spec in a sweep, the runner builds a probe engine (cost table
+DISABLED, so measurement never depends on prior measurements), asks the
+island topology for its feasible plan candidates — the exact list the
+planner itself enumerates, so table points and planner queries can never
+drift apart — then times each candidate by forcing it with
+`plan_override` and replaying one `segment` worth of generations until
+the timing is stable (`stability.replay_until_stable`).  Results land in
+a `table.CostTable` keyed by `compile_cache.plan_point`.
+
+This module imports `repro.ga` (and through it jax) lazily inside
+functions: `repro.autotune.table` must stay importable from
+`ga/backends.py` without a cycle.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+from repro.autotune.stability import Replay, replay_until_stable
+from repro.autotune.table import CostTable, host_fingerprint
+
+
+def plan_candidates(spec, *, backend: str = "auto", mesh=None,
+                    interpret: Optional[bool] = None) -> List[Dict[str, Any]]:
+    """The feasible epoch-plan candidates an engine for `spec` would weigh
+    (heuristic choice first), or [] for backends with no island planner."""
+    from repro import ga
+    eng = ga.Engine(spec, backend, mesh=mesh, interpret=interpret,
+                    cost_table=False)
+    topo = getattr(eng.backend, "topology", None)
+    if topo is None or not hasattr(topo, "epoch_candidates"):
+        return []
+    return topo.epoch_candidates()
+
+
+def measure_candidate(spec, mode: str, *, backend: str = "auto", mesh=None,
+                      interpret: Optional[bool] = None,
+                      warmup: int = 1, min_reps: int = 3, max_reps: int = 8,
+                      cov_threshold: float = 0.25,
+                      timer: Callable[[], float] = time.perf_counter,
+                      ) -> Dict[str, Any]:
+    """Force one epoch mode via plan_override and time a segment of
+    `gens_per_epoch` generations until replay-stable.  Returns the table
+    row: {"point", "gens_per_launch", "gens_per_s", "replay"}."""
+    import jax
+    from repro import ga
+    from repro.ga import compile_cache as CC
+
+    eng = ga.Engine(spec, backend, mesh=mesh, interpret=interpret,
+                    cost_table=False, plan_override=mode)
+    topo = eng.backend.topology
+    state = eng.init_state()
+    seg_gens = max(spec.gens_per_epoch, spec.migrate_every)
+
+    def once():
+        seg = eng.backend.segment(state, seg_gens)
+        jax.block_until_ready(jax.tree_util.tree_leaves(seg.state))
+        return seg
+
+    first = once()          # also the compile warmup for replay's counter
+    replay = replay_until_stable(
+        once, warmup=max(0, warmup - 1), min_reps=min_reps,
+        max_reps=max_reps, cov_threshold=cov_threshold, timer=timer)
+    point = CC.plan_point(spec, executor=topo.executor.name,
+                          mode=topo.plan["mode"], n_shards=topo.n_shards)
+    return {"point": point,
+            "gens_per_launch": topo.plan["gens_per_launch"],
+            "gens_per_s": first.gens / replay.mean_s,
+            "replay": replay}
+
+
+def sweep(specs: Iterable, *, backend: str = "auto", mesh=None,
+          interpret: Optional[bool] = None, table: Optional[CostTable] = None,
+          warmup: int = 1, min_reps: int = 3, max_reps: int = 8,
+          cov_threshold: float = 0.25,
+          timer: Callable[[], float] = time.perf_counter,
+          log: Optional[Callable[[str], None]] = None) -> CostTable:
+    """Measure every feasible candidate of every spec into one CostTable
+    (reuses `table` when given, so sweeps accumulate across invocations)."""
+    table = CostTable(host=host_fingerprint()) if table is None else table
+    for spec in specs:
+        cands = plan_candidates(spec, backend=backend, mesh=mesh,
+                                interpret=interpret)
+        if not cands:
+            if log:
+                log(f"skip {spec.problem or 'blackbox'}: no island planner "
+                    f"for backend {backend!r}")
+            continue
+        for cand in cands:
+            row = measure_candidate(
+                spec, cand["mode"], backend=backend, mesh=mesh,
+                interpret=interpret, warmup=warmup, min_reps=min_reps,
+                max_reps=max_reps, cov_threshold=cov_threshold, timer=timer)
+            rep: Replay = row["replay"]
+            table.add(row["point"], row["gens_per_launch"],
+                      row["gens_per_s"], reps=rep.reps, cov=rep.cov)
+            if log:
+                stable = "stable" if rep.stable else "UNSTABLE"
+                log(f"  {spec.problem or 'blackbox'} n={spec.n} "
+                    f"I={spec.n_islands} gpe={spec.gens_per_epoch} "
+                    f"{cand['mode']:>16}: {row['gens_per_s']:9.1f} gens/s "
+                    f"({rep.reps} reps, cov={rep.cov:.3f}, {stable})")
+    return table
+
+
+def estimate_gens_per_s(spec, table: Optional[CostTable], *,
+                        backend: str = "auto", mesh=None,
+                        interpret: Optional[bool] = None) -> Optional[float]:
+    """What the measured planner expects for `spec` under `table` — the
+    chosen plan's measured gens/s, or None when the table does not cover
+    the spec (scheduler ordering treats those jobs as unknown-length)."""
+    if table is None:
+        return None
+    from repro import ga
+    try:
+        eng = ga.Engine(spec, backend, mesh=mesh, interpret=interpret,
+                        cost_table=table)
+    except Exception:
+        return None
+    plan = getattr(getattr(eng.backend, "topology", None), "plan", None)
+    if not plan:
+        return None
+    return plan.get("plan_gens_per_s")

@@ -64,12 +64,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.autotune import table as _cost
 from repro.core import ga as G
 from repro.core import islands as ISL
 from repro.ga import compile_cache as CC
@@ -135,15 +137,29 @@ def _stack_island_replicas(icfg: ISL.IslandConfig, n_replicas: int):
 
 
 class Backend:
-    """One execution strategy for a GASpec."""
+    """One execution strategy for a GASpec.
+
+    cost_table feeds the measured tier of the epoch planner (see
+    `repro.autotune.table.resolve_table` for the accepted values — the
+    default None discovers the ambient per-host table, False disables
+    measurement and pins the pure heuristic).  plan_override forces one
+    epoch mode by name ("resident" / "resident-free" / "gridded" / ...;
+    the autotune runner uses it to measure non-default candidates) and
+    raises if the spec cannot feasibly run that mode.  Both only influence
+    launch shapes, never results — every plan is bit-identical in state
+    and best tracking.
+    """
 
     name = "?"
 
-    def __init__(self, spec: GASpec, *, mesh=None, interpret=None):
+    def __init__(self, spec: GASpec, *, mesh=None, interpret=None,
+                 cost_table=None, plan_override=None):
         self.spec = spec
         self.cfg = spec.ga_config()
         self.mesh = mesh
         self.interpret = interpret
+        self.cost_table = _cost.resolve_table(cost_table)
+        self.plan_override = plan_override
         self._cache: Dict[Any, Any] = {}   # gens -> jitted segment runner
 
     @staticmethod
@@ -368,11 +384,16 @@ def _mesh_axes(spec: GASpec, mesh) -> tuple:
 class Topology:
     name = "?"
 
-    def __init__(self, spec: GASpec, executor: Executor, *, mesh=None):
+    def __init__(self, spec: GASpec, executor: Executor, *, mesh=None,
+                 cost_table=None, plan_override=None):
         self.spec = spec
         self.cfg = spec.ga_config()
         self.executor = executor
         self.mesh = mesh
+        # already-resolved CostTable (or None) + forced mode; only the
+        # island_ring planner consults them — single has one launch shape
+        self.cost_table = cost_table
+        self.plan_override = plan_override
         self._cache: Dict[Any, Any] = {}   # instance memo over RUNNER_CACHE
 
     def _cached_runner(self, key, builder):
@@ -473,29 +494,46 @@ class IslandRingTopology(Topology):
     to the single-device `jnp.roll` ring.  Replicas vmap inside each shard,
     so `n_repeats > 1` and `migration='none'` compose with the mesh too.
 
-    Epoch planning (fused executor, ring migration): when
-    `gens_per_epoch >= migrate_every` AND the shard's island stack fits the
-    VMEM budget (`kernels.ga_step.resident_fit_reason`), the RESIDENT epoch
-    kernel replaces the gridded one — all local islands live in one program
-    instance's VMEM and the ring migration runs inside the launch:
+    Epoch planning is TWO-TIER (see `kernels.ga_step`'s module docstring).
+    Tier 1, feasibility: `epoch_candidates` asks
+    `ga_step.epoch_mode_candidates` which launch shapes this spec can run,
+    gated by the VMEM byte estimator:
 
-      resident          (no mesh)  one launch folds
+      resident          (fused, ring, no mesh)  one launch folds
                         gens_per_epoch // migrate_every whole migration
                         intervals, full in-VMEM ring (`ring_migrate_stack`).
-      resident-sharded  (mesh)     one launch per interval; the intra-shard
-                        migrations run in VMEM and only the boundary elite
-                        crosses shards via `ppermute` between launches.
-      gridded           otherwise — the per-grid-step kernel with migration
-                        between launches (automatic fallback when the VMEM
-                        budget says the resident block will not fit).
+      resident-sharded  (fused, ring, mesh)  one launch per interval; the
+                        intra-shard migrations run in VMEM and only the
+                        boundary elite crosses shards via `ppermute`
+                        between launches.
+      resident-free     (fused, migration="none", no mesh)  no ring to run,
+                        so ONE launch folds the whole gens_per_epoch (any
+                        value — the whole-multiple rule is ring-only).
+      gridded           always feasible — the per-grid-step kernel with
+                        migration between launches (and the automatic
+                        fallback when the VMEM budget says a resident block
+                        will not fit; the reason rides in plan["fallback"]).
 
-    All three are bit-identical in state and best tracking; resident mode
-    coarsens the trajectory to one sample per launch."""
+    Tier 2, selection: candidates[0] is the historical heuristic (resident
+    when it fits, else gridded).  When a measured cost table covers the
+    spec — including the heuristic's own mode, so "measured beats
+    heuristic" is provable rather than assumed — the planner instead picks
+    the candidate with the best measured gens/s (`plan_source: "measured"`,
+    expected rate in plan["plan_gens_per_s"]).  No table, a stale table or
+    uncovered points leave the heuristic choice untouched
+    (`plan_source: "heuristic"`), bit-identical to the pre-measurement
+    planner.  A `plan_override` mode skips tier 2 entirely
+    (`plan_source: "forced"`).
+
+    Every plan is bit-identical in state and best tracking; resident modes
+    coarsen the trajectory to one sample per launch."""
 
     name = "island_ring"
 
-    def __init__(self, spec: GASpec, executor: Executor, *, mesh=None):
-        super().__init__(spec, executor, mesh=mesh)
+    def __init__(self, spec: GASpec, executor: Executor, *, mesh=None,
+                 cost_table=None, plan_override=None):
+        super().__init__(spec, executor, mesh=mesh, cost_table=cost_table,
+                         plan_override=plan_override)
         axis_names = _mesh_axes(spec, mesh)
         self.n_shards = (int(np.prod([mesh.shape[a] for a in axis_names]))
                          if mesh is not None else 1)
@@ -506,22 +544,66 @@ class IslandRingTopology(Topology):
         self.i_local = max(1, spec.n_islands // max(1, self.n_shards))
         self.plan = self._epoch_plan()
 
+    def epoch_candidates(self) -> list:
+        """Tier-1 feasible plan candidates, heuristic first (the autotune
+        runner measures exactly this list, so table points and planner
+        queries can never drift apart)."""
+        spec = self.spec
+        const_bytes = (_ga_step.ffm_const_bytes(self.executor.fit, self.cfg)
+                       if self.executor.name == "fused" else 0)
+        return _ga_step.epoch_mode_candidates(
+            self.cfg, self.i_local, const_bytes,
+            executor=self.executor.name, migration=spec.migration,
+            gens_per_epoch=spec.gens_per_epoch,
+            migrate_every=spec.migrate_every,
+            sharded=self.mesh is not None)
+
+    def _plan_point(self, cand: Dict[str, Any]) -> Dict[str, Any]:
+        return CC.plan_point(self.spec, executor=self.executor.name,
+                             mode=cand["mode"], n_shards=self.n_shards)
+
     def _epoch_plan(self) -> Dict[str, Any]:
-        """Resident vs. gridded decision (see class docstring)."""
-        spec, E = self.spec, self.spec.migrate_every
-        if (self.executor.name != "fused" or spec.migration != "ring"
-                or spec.gens_per_epoch < E):
-            return {"mode": "gridded", "epochs_per_launch": 1}
-        const_bytes = _ga_step.ffm_const_bytes(self.executor.fit, self.cfg)
-        reason = _ga_step.resident_fit_reason(self.cfg, self.i_local,
-                                              const_bytes)
-        if reason is not None:
-            return {"mode": "gridded", "epochs_per_launch": 1,
-                    "fallback": reason}
-        if self.mesh is not None:
-            return {"mode": "resident-sharded", "epochs_per_launch": 1}
-        return {"mode": "resident",
-                "epochs_per_launch": max(1, spec.gens_per_epoch // E)}
+        """Two-tier plan decision (see class docstring)."""
+        cands = self.epoch_candidates()
+        if self.plan_override is not None:
+            want = (self.plan_override.get("mode")
+                    if isinstance(self.plan_override, dict)
+                    else self.plan_override)
+            for c in cands:
+                if c["mode"] == want:
+                    plan = dict(c, plan_source="forced")
+                    break
+            else:
+                raise ValueError(
+                    f"plan_override mode {want!r} is not feasible for this "
+                    f"spec (candidates: {[c['mode'] for c in cands]})")
+        else:
+            plan = dict(cands[0], plan_source="heuristic")
+            table = self.cost_table
+            if table is not None and len(cands) > 1:
+                rated = [(c, table.lookup(self._plan_point(c),
+                                          c["gens_per_launch"]))
+                         for c in cands]
+                # refine only when the heuristic's own mode is measured:
+                # the argmax is then provably >= the heuristic's measured
+                # rate, and an uncovered spec stays bit-identical heuristic
+                if rated[0][1] is not None:
+                    best_c, best_v = rated[0]
+                    for c, v in rated[1:]:
+                        if v is not None and v > best_v:
+                            best_c, best_v = c, v
+                    plan = dict(best_c, plan_source="measured",
+                                plan_gens_per_s=round(best_v, 3))
+        if plan["mode"].startswith("resident"):
+            const_bytes = _ga_step.ffm_const_bytes(self.executor.fit,
+                                                   self.cfg)
+            plan["vmem_estimate_bytes"] = _ga_step.resident_vmem_bytes(
+                self.cfg, self.i_local, const_bytes)
+            if os.environ.get("REPRO_VMEM_COMPILER_CHECK") == "1":
+                plan["vmem_compiler_check"] = _ga_step.resident_compiler_check(
+                    self.cfg, self.executor.fit, self.i_local,
+                    interpret=getattr(self.executor, "interpret", None))
+        return plan
 
     @staticmethod
     def supports(spec: GASpec, mesh, executor_cls) -> Optional[str]:
@@ -598,6 +680,32 @@ class IslandRingTopology(Topology):
                 intervals=k, interpret=interp)
             state = G.GAState(sq(x), sq(sel), sq(cross), sq(mut),
                               states.k + k * E)
+            tb = jnp.min(y, axis=-1) if mini else jnp.max(y, axis=-1)
+            return (state, sq(by), sq(bx), sq(tb)[..., None],
+                    sq(jnp.mean(y, axis=-1))[..., None])
+
+        return self._cached_runner(key, lambda: jax.jit(launch))
+
+    def _resident_free_runner(self, g: int):
+        """Jitted migration-free resident launch (`migration="none"`, no
+        mesh): ONE `ga_epoch_kernel(migrate=False)` call folding g
+        generations — no ring, so g is unconstrained by `migrate_every`.
+        Same (state', by, bx, tb, tm) contract as `_resident_runner`."""
+        key = self._runner_key("resident-free", g)
+        R = self.spec.n_repeats
+        mini = self.spec.minimize
+        cfg, ffm = self.cfg, self.executor.fit
+        interp = self.executor.interpret
+        g4 = (lambda a: a) if R > 1 else (lambda a: a[None])
+        sq = (lambda a: a) if R > 1 else (lambda a: a[0])
+
+        def launch(states):                    # states: [R?, I, ...]
+            x, sel, cross, mut, y, by, bx = _ga_step.ga_epoch_kernel(
+                g4(states.x), g4(states.sel_lfsr), g4(states.cross_lfsr),
+                g4(states.mut_lfsr), cfg=cfg, ffm=ffm, migrate_every=g,
+                intervals=1, migrate=False, interpret=interp)
+            state = G.GAState(sq(x), sq(sel), sq(cross), sq(mut),
+                              states.k + g)
             tb = jnp.min(y, axis=-1) if mini else jnp.max(y, axis=-1)
             return (state, sq(by), sq(bx), sq(tb)[..., None],
                     sq(jnp.mean(y, axis=-1))[..., None])
@@ -714,22 +822,40 @@ class IslandRingTopology(Topology):
     def segment(self, state, gens: int) -> Segment:
         E = self.icfg.migrate_every
         epochs = max(1, math.ceil(gens / E))
+        mode = self.plan["mode"]
         per_launch = self.plan["epochs_per_launch"]
-        resident_local = self.plan["mode"] == "resident"
         R = self.spec.n_repeats
         mini = self.spec.minimize
         reduce = np.min if mini else np.max
-        # running per-replica best across launches (a launch covers
-        # `per_launch` whole migration intervals on the resident plan, one
-        # otherwise — telemetry arrays get one sample per launch)
+        # launch schedule: every plan covers the SAME epochs * E total
+        # generations (the rounding contract all modes share), but
+        # resident-free paces in raw generations — no ring means no
+        # interval boundary to respect — while resident covers
+        # `per_launch` whole migration intervals per launch and the rest
+        # one epoch at a time
+        if mode == "resident-free":
+            g_max = self.plan["gens_per_launch"]
+            sched, left = [], epochs * E
+            while left:
+                g = min(g_max, left)
+                sched.append(self._resident_free_runner(g))
+                left -= g
+            unit = g_max
+        else:
+            sched, left = [], epochs
+            while left:
+                k = min(per_launch, left)
+                sched.append(self._resident_runner(k) if mode == "resident"
+                             else self._epoch())
+                left -= k
+            unit = E * per_launch
+        # running per-replica best across launches (telemetry arrays get
+        # one sample per launch)
         rep_y = np.full((R,), np.inf if mini else -np.inf, np.float32)
         rep_x = np.zeros((R, self.cfg.v), np.uint32)
         tb_ep, tm_ep = [], []          # per-launch, per-replica ([R] each)
-        left, launches = epochs, 0
-        while left:
-            k = min(per_launch, left)
-            runner = self._resident_runner(k) if resident_local \
-                else self._epoch()
+        launches = 0
+        for runner in sched:
             state, by, bx, tb, tm = runner(state)
             by = np.asarray(by).reshape(R, -1)              # [R, I]
             bx = np.asarray(bx).reshape(R, -1, self.cfg.v)  # [R, I, V]
@@ -741,15 +867,15 @@ class IslandRingTopology(Topology):
             rep_x = np.where(better[:, None], ep_x, rep_x)
             tb_ep.append(reduce(by, axis=1))                           # [R]
             tm_ep.append(np.asarray(tm).reshape(R, -1).mean(axis=1))   # [R]
-            left -= k
             launches += 1
         r = _arg_best(rep_y, mini)
         tb_rep = np.stack(tb_ep, axis=1)                    # [R, launches]
         tm_rep = np.stack(tm_ep, axis=1)
-        extras = {"telemetry_unit_gens": E * per_launch,
+        extras = {"telemetry_unit_gens": unit,
                   "n_islands": self.icfg.n_islands,
                   "n_shards": self.n_shards,
-                  "epoch_mode": self.plan["mode"],
+                  "epoch_mode": mode,
+                  "plan_source": self.plan.get("plan_source", "heuristic"),
                   "launches": launches,
                   "migrations": epochs if self.spec.migration == "ring" else 0,
                   # per-replica views: job packing (PackedEngine) unpacks
@@ -760,6 +886,7 @@ class IslandRingTopology(Topology):
                   "per_repeat_traj_mean": tm_rep}
         if "fallback" in self.plan:
             extras["resident_fallback"] = self.plan["fallback"]
+            extras["plan_fallback"] = self.plan["fallback"]
         if self.mesh is not None:
             extras["sharded"] = True
         return Segment(state=state, best_y=float(rep_y[r]),
@@ -786,11 +913,14 @@ class ComposedBackend(Backend):
     executor_cls: type = None
     topology_cls: type = None
 
-    def __init__(self, spec: GASpec, *, mesh=None, interpret=None):
-        super().__init__(spec, mesh=mesh, interpret=interpret)
+    def __init__(self, spec: GASpec, *, mesh=None, interpret=None,
+                 cost_table=None, plan_override=None):
+        super().__init__(spec, mesh=mesh, interpret=interpret,
+                         cost_table=cost_table, plan_override=plan_override)
         self.executor: Executor = self.executor_cls(spec, interpret=interpret)
-        self.topology: Topology = self.topology_cls(spec, self.executor,
-                                                    mesh=mesh)
+        self.topology: Topology = self.topology_cls(
+            spec, self.executor, mesh=mesh, cost_table=self.cost_table,
+            plan_override=plan_override)
 
     @classmethod
     def supports(cls, spec: GASpec, mesh=None) -> Optional[str]:

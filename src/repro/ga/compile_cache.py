@@ -94,3 +94,26 @@ def runner_key(spec, topology_name: str, executor_name: str,
     knobs (gens, solo flag, resident interval count, ...)."""
     return (spec.compile_key(), spec.n_repeats, topology_name,
             executor_name, interpret, mesh_fingerprint(mesh)) + parts
+
+
+def stage_fingerprint(spec) -> str:
+    """Problem-stage kind for autotune cost-table keying: registry problems
+    are identified by name (their decode + arith stage shape is a pure
+    function of it), blackboxes collapse to their variable count — two
+    different user callables with the same V share timings, which is the
+    right granularity for a *launch-shape* cost model."""
+    if spec.problem is not None:
+        return f"{spec.problem}:v{spec.v}"
+    return f"blackbox:v{spec.v}"
+
+
+def plan_point(spec, *, executor: str, mode: str, n_shards: int) -> dict:
+    """The autotune cost-table identity of one epoch-plan candidate (the
+    fields of `repro.autotune.table.POINT_FIELDS`).  Shares this module's
+    shape-identity discipline: everything that changes the compiled launch
+    is in the key, seed/generations/n_repeats are not."""
+    i_local = max(1, spec.n_islands // max(1, n_shards))
+    return {"executor": executor, "mode": mode, "migration": spec.migration,
+            "n": spec.n, "i_local": i_local, "c": spec.bits_per_var,
+            "stage": stage_fingerprint(spec), "shards": n_shards,
+            "E": spec.migrate_every}

@@ -108,14 +108,22 @@ class EngineResult:
 
 
 class Engine:
-    """A spec bound to a backend, with cached compiled runners."""
+    """A spec bound to a backend, with cached compiled runners.
+
+    cost_table / plan_override steer the measured epoch planner (see
+    `Backend` and `repro.autotune`): the default cost_table=None discovers
+    the ambient per-host table, False pins the pure heuristic, and
+    plan_override forces one epoch mode by name.  Neither changes results —
+    plans differ only in launch shape."""
 
     def __init__(self, spec: GASpec, backend: str = "auto", *,
-                 mesh=None, interpret: Optional[bool] = None):
+                 mesh=None, interpret: Optional[bool] = None,
+                 cost_table=None, plan_override=None):
         self.spec = spec
         self.backend_name = resolve_backend(spec, backend, mesh)
         self.backend: Backend = BACKENDS[self.backend_name](
-            spec, mesh=mesh, interpret=interpret)
+            spec, mesh=mesh, interpret=interpret, cost_table=cost_table,
+            plan_override=plan_override)
 
     def init_state(self):
         return self.backend.init()
@@ -250,10 +258,12 @@ class Engine:
 
 def solve(spec: GASpec, backend: str = "auto", *,
           generations: Optional[int] = None, mesh=None,
-          interpret: Optional[bool] = None) -> EngineResult:
+          interpret: Optional[bool] = None, cost_table=None,
+          plan_override=None) -> EngineResult:
     """Run a GASpec end to end and return the uniform result."""
-    return Engine(spec, backend, mesh=mesh,
-                  interpret=interpret).run(generations)
+    return Engine(spec, backend, mesh=mesh, interpret=interpret,
+                  cost_table=cost_table,
+                  plan_override=plan_override).run(generations)
 
 
 class PackedEngine:
@@ -278,7 +288,8 @@ class PackedEngine:
     dict per job, unpacked from the per-replica segment extras."""
 
     def __init__(self, specs, backend: str = "auto", *,
-                 mesh=None, interpret: Optional[bool] = None):
+                 mesh=None, interpret: Optional[bool] = None,
+                 cost_table=None, plan_override=None):
         specs = list(specs)
         if not specs:
             raise ValueError("PackedEngine needs at least one spec")
@@ -311,11 +322,13 @@ class PackedEngine:
         self._solo: Optional[Engine] = None
         if self.n_slots == 1:
             self._solo = Engine(specs[0], self.backend_name, mesh=mesh,
-                                interpret=interpret)
+                                interpret=interpret, cost_table=cost_table,
+                                plan_override=plan_override)
             self.backend = self._solo.backend
         else:
             self.backend = BACKENDS[self.backend_name](
-                self.batch_spec, mesh=mesh, interpret=interpret)
+                self.batch_spec, mesh=mesh, interpret=interpret,
+                cost_table=cost_table, plan_override=plan_override)
 
     def init_state(self):
         if self._solo is not None:
@@ -350,7 +363,8 @@ class PackedEngine:
             "job_index": j, "pack_size": len(self.specs),
             "slots": (off, cnt),
             "extras": {k: extras[k] for k in ("n_islands", "n_shards",
-                                              "epoch_mode")
+                                              "epoch_mode", "plan_source",
+                                              "plan_fallback")
                        if k in extras},
         }
 

@@ -74,13 +74,16 @@ class GASpec:
     # the launch, folding gens_per_epoch//migrate_every migration intervals
     # per launch — so values beyond migrate_every must be a whole multiple
     # of it (validated here; migration="none" has no interval boundary and
-    # is exempt, but also gets no resident folding — its launches stay
-    # clamped at migrate_every generations).  Whether resident mode
-    # actually runs is a VMEM-budget decision (kernels/ga_step.
-    # resident_fit_reason); when the island stack + one-hot working set
-    # exceed the budget the engine falls back to the gridded
-    # one-interval-per-launch kernel — a perf fallback, never an error
-    # (extras["epoch_mode"] / extras["resident_fallback"] report it).
+    # is exempt — for it the planner offers the RESIDENT-FREE mode, which
+    # folds the full gens_per_epoch in one VMEM-resident launch with no
+    # migration pauses and no whole-multiple rule).  Which feasible mode
+    # actually runs is the two-tier epoch-plan decision (kernels/ga_step
+    # module docstring): the VMEM byte estimator gates feasibility, and an
+    # autotune cost table — when one covers the spec — picks the best
+    # MEASURED gens/s among the survivors (extras["epoch_mode"] /
+    # extras["plan_source"] / extras["plan_fallback"] report the outcome;
+    # with no table the choice is the original static heuristic,
+    # bit-identically).
     gens_per_epoch: int = 1
 
     # ---- topology (how populations are arranged + exchanged) ------------

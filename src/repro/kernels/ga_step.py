@@ -30,15 +30,20 @@ the reference executor evaluates the SAME function, fused stays bit-identical
 to reference for every program.  LUT-mode (HBM gather tables) stays in the
 pure-JAX path — gathers inside a TPU kernel would defeat the fusion.
 
-Epoch planning & VMEM budget — resident vs. gridded kernel modes:
+Epoch planning & VMEM budget — the TWO-TIER decision:
 
-  The file exposes two launch shapes for the island_ring topology, picked by
-  the engine's epoch planner (`ga/backends.IslandRingTopology`):
+  The file exposes the candidate launch shapes for the island_ring topology;
+  the engine's epoch planner (`ga/backends.IslandRingTopology._epoch_plan`)
+  picks among them in two tiers:
+
+  tier 1 — FEASIBILITY (modeled, this module): `epoch_mode_candidates`
+  enumerates which modes a spec can legally run, gated by the
+  `resident_fit_reason` VMEM byte estimator.  The candidate modes are:
 
   * gridded (`ga_generation_kernel`) — one island per grid step; a launch
     folds up to `migrate_every` generations and the ring migration runs
     BETWEEN launches in XLA (`islands.migrate_ring`).  VMEM per program
-    instance holds ONE island.
+    instance holds ONE island.  Always feasible; always the fallback.
   * resident (`ga_epoch_kernel`) — the island axis moves out of the grid
     into the kernel block: all (local-shard) islands live in one program
     instance's VMEM, and the launch folds `intervals × migrate_every`
@@ -47,17 +52,32 @@ Epoch planning & VMEM budget — resident vs. gridded kernel modes:
     spans many migration intervals, so `gens_per_epoch` is no longer capped
     at `migrate_every`.  On a mesh, `boundary=True` keeps one interval per
     launch and performs the intra-shard part of the migration in VMEM; the
-    boundary elite is handed back for the between-launch `lax.ppermute`.
+    boundary elite is handed back for the between-launch `lax.ppermute`
+    (mode "resident-sharded").
+  * resident-free (`ga_epoch_kernel` with `migrate=False`) — the
+    `migration="none"` ablation has no ring to run, so one launch folds the
+    WHOLE `gens_per_epoch` (any value, no whole-multiple rule) with zero
+    in-kernel migration work.
 
-  The planner chooses resident mode only when `resident_fit_reason` says the
-  working set fits the VMEM budget: the island state stack (population +
-  LFSR banks + fitness) PLUS the per-island one-hot tournament set — which
-  materializes as [I, N, N] under the in-kernel island vmap — PLUS any
-  hoisted FFM constants must stay under `resident_vmem_budget()` (default
-  16 MiB ≈ one TPU core's VMEM; override with REPRO_RESIDENT_VMEM_BUDGET).
-  When it does not fit, the engine silently falls back to the gridded
-  kernel (capping generations per launch at `migrate_every` again) — a
-  perf fallback, never an error.
+  tier 2 — SELECTION (measured, `repro.autotune`): among feasible
+  candidates the planner picks the best *measured* gens/s from a per-host
+  cost table when one covers the spec, and otherwise keeps the first
+  candidate — `epoch_mode_candidates` orders candidates so that index 0 IS
+  the historical heuristic (resident when it fits, else gridded), making
+  the no-table path bit-identical to the pre-measurement planner.
+
+  The VMEM estimator: the island state stack (population + LFSR banks +
+  fitness) PLUS the per-island one-hot tournament set — which materializes
+  as [I, N, N] under the in-kernel island vmap — PLUS any hoisted FFM
+  constants must stay under `resident_vmem_budget()` (default 16 MiB ≈ one
+  TPU core's VMEM; override with REPRO_RESIDENT_VMEM_BUDGET).  When it does
+  not fit, the engine silently falls back to the gridded kernel (capping
+  generations per launch at `migrate_every` again) — a perf fallback, never
+  an error.  On real TPUs the estimate can additionally be cross-checked
+  against the compiler's own VMEM accounting (`resident_compiler_check`
+  compiles with `pltpu.CompilerParams(vmem_limit_bytes=budget)` and records
+  the estimator-vs-compiler margin); in interpret mode the check reports
+  "unavailable" and the byte estimator stands alone.
 
   Hoisted FFM closure constants are size-gated separately: both kernels
   refuse constants above `ffm_const_limit()` (default 2 MiB, override with
@@ -229,6 +249,91 @@ def resident_fit_reason(cfg: GAConfig, n_islands: int, const_bytes: int = 0,
                 "back to the gridded per-interval kernel "
                 "(REPRO_RESIDENT_VMEM_BUDGET overrides)")
     return None
+
+
+def epoch_mode_candidates(cfg: GAConfig, i_local: int, const_bytes: int = 0,
+                          *, executor: str, migration: str,
+                          gens_per_epoch: int, migrate_every: int,
+                          sharded: bool, budget: int = None) -> list:
+    """Tier 1 of the epoch plan: the FEASIBLE launch shapes for a spec,
+    ordered so candidates[0] is the historical heuristic choice (what a
+    planner with no cost table must pick, bit-identically).
+
+    Each candidate is a plan dict: {"mode", "epochs_per_launch",
+    "gens_per_launch"} (+ "fallback" carrying the VMEM-estimator reason when
+    a resident shape was rejected).  `gens_per_launch` is the generations
+    one kernel launch folds — the cost table's interpolation axis.
+    """
+    # the gridded path launches one migrate_every-generation epoch at a
+    # time; the fused executor's block folds min(gens_per_epoch, E) of those
+    # generations per kernel launch, the reference executor scans all E
+    g_gridded = (min(gens_per_epoch, migrate_every) if executor == "fused"
+                 else migrate_every)
+    gridded = {"mode": "gridded", "epochs_per_launch": 1,
+               "gens_per_launch": g_gridded}
+    if executor != "fused":
+        return [gridded]
+    if migration == "ring" and gens_per_epoch >= migrate_every:
+        reason = resident_fit_reason(cfg, i_local, const_bytes, budget)
+        if reason is not None:
+            return [dict(gridded, fallback=reason)]
+        if sharded:
+            return [{"mode": "resident-sharded", "epochs_per_launch": 1,
+                     "gens_per_launch": migrate_every}, gridded]
+        k = max(1, gens_per_epoch // migrate_every)
+        return [{"mode": "resident", "epochs_per_launch": k,
+                 "gens_per_launch": k * migrate_every}, gridded]
+    if migration == "none" and gens_per_epoch > migrate_every and not sharded:
+        # no ring to run: the resident kernel can fold the WHOLE epoch in
+        # one launch (satellite of the autotune PR).  Gridded stays the
+        # heuristic default — resident-free is selected by measurement (or
+        # forced via plan_override), never silently.
+        reason = resident_fit_reason(cfg, i_local, const_bytes, budget)
+        if reason is not None:
+            return [dict(gridded, fallback=reason)]
+        return [gridded,
+                {"mode": "resident-free",
+                 "epochs_per_launch": max(1, gens_per_epoch // migrate_every),
+                 "gens_per_launch": gens_per_epoch}]
+    return [gridded]
+
+
+def resident_compiler_check(cfg: GAConfig, ffm: FfmStage, i_local: int, *,
+                            budget: int = None, interpret: bool = None
+                            ) -> dict:
+    """Tier-1 cross-check: does the COMPILER agree the resident working set
+    fits?  Lowers a one-generation resident launch with
+    `pltpu.CompilerParams(vmem_limit_bytes=budget)` and reports
+    {"status": "ok" | "exceeds" | "unavailable", "estimator_bytes",
+    "budget_bytes", "estimator_margin"} — the margin is the headroom the
+    byte estimator claims, so an "exceeds" with positive margin means the
+    hand-written model underestimates on this config.  In interpret mode
+    (CPU CI) there is no Mosaic lowering to ask, hence "unavailable"."""
+    budget = resident_vmem_budget() if budget is None else budget
+    est = resident_vmem_bytes(cfg, i_local, ffm_const_bytes(ffm, cfg))
+    out = {"estimator_bytes": est, "budget_bytes": budget,
+           "estimator_margin": round(1.0 - est / budget, 4)}
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if interpret:
+        out.update(status="unavailable",
+                   reason="compiler VMEM accounting needs a real TPU "
+                          "(Mosaic) lowering; interpret mode has none")
+        return out
+    n, v = cfg.n, cfg.v
+    shapes = (jax.ShapeDtypeStruct((1, i_local, n, v), jnp.uint32),
+              jax.ShapeDtypeStruct((1, i_local, 2, n), jnp.uint32),
+              jax.ShapeDtypeStruct((1, i_local, v, n // 2), jnp.uint32),
+              jax.ShapeDtypeStruct((1, i_local, v, n), jnp.uint32))
+    fn = functools.partial(ga_epoch_kernel, cfg=cfg, ffm=ffm,
+                           migrate_every=1, intervals=1, interpret=False,
+                           vmem_limit_bytes=budget)
+    try:
+        jax.jit(lambda *a: fn(*a)).lower(*shapes).compile()
+        out["status"] = "ok"
+    except Exception as e:                  # compiler rejected the budget
+        out.update(status="exceeds", reason=repr(e))
+    return out
 
 
 def _gen_best(x, y, cfg: GAConfig):
@@ -405,7 +510,8 @@ def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
 def _epoch_body(x_ref, sel_ref, cross_ref, mut_ref,          # inputs
                 *rest,                                       # consts + outputs
                 cfg: GAConfig, ffm, const_shapes=(),
-                migrate_every: int, intervals: int, boundary: bool):
+                migrate_every: int, intervals: int, boundary: bool,
+                migrate: bool = True):
     """`intervals × migrate_every` generations + in-VMEM ring migration.
 
     The block holds a whole island stack [I, N, V] (the grid axis is the
@@ -420,6 +526,12 @@ def _epoch_body(x_ref, sel_ref, cross_ref, mut_ref,          # inputs
     1..I-1 receive elites 0..I-2) and instead of splicing island 0 it
     outputs (boundary elite of island I-1, worst slot of island 0) for the
     between-launch `lax.ppermute` + splice.
+
+    migrate=False is the migration-free resident mode (`migration="none"`):
+    the interval loop runs the generations and evaluates the interval
+    fitness but skips `ring_migrate_stack` entirely — no ring means no
+    whole-multiple constraint, so one launch can fold ANY number of
+    generations (callers pass intervals=1, migrate_every=the full fold).
 
     The per-island running best folds every generation with the reference
     strict-improvement/first-occurrence rule; the y output is the migration
@@ -479,8 +591,9 @@ def _epoch_body(x_ref, sel_ref, cross_ref, mut_ref,          # inputs
         def interval(_, carry):
             carry, ymig = block(carry)
             x, sel, cross, mut, _y, by, bx = carry
-            x2, _ex, _ey = ISL.ring_migrate_stack(x, ymig, minimize=mini)
-            return (x2, sel, cross, mut, ymig, by, bx)
+            if migrate:
+                x, _ex, _ey = ISL.ring_migrate_stack(x, ymig, minimize=mini)
+            return (x, sel, cross, mut, ymig, by, bx)
 
         x, sel, cross, mut, ymig, by, bx = jax.lax.fori_loop(
             0, intervals, interval, init)
@@ -491,7 +604,8 @@ def _epoch_body(x_ref, sel_ref, cross_ref, mut_ref,          # inputs
 
 def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
                     migrate_every: int, intervals: int = 1,
-                    boundary: bool = False, interpret: bool = False
+                    boundary: bool = False, migrate: bool = True,
+                    interpret: bool = False, vmem_limit_bytes: int = None
                     ) -> Tuple[jax.Array, ...]:
     """Launch the resident-epoch kernel over replica-stacked island shards.
 
@@ -506,6 +620,13 @@ def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
     best_x[G, I, V]) — y is the final migration fitness (pre-splice) —
     plus (send_elite[G, V], worst0[G]) when boundary=True.
 
+    migrate=False (migration-free resident mode) skips the in-loop ring
+    splice; pass the full generation fold as `migrate_every` with
+    intervals=1.  vmem_limit_bytes threads a
+    `pltpu.CompilerParams(vmem_limit_bytes=...)` into the launch on real
+    TPU lowerings (ignored in interpret mode) — `resident_compiler_check`
+    uses it to make the compiler referee the byte estimator.
+
     Callers should consult `resident_fit_reason` first; this function
     asserts the budget (and the hoisted-const gate) rather than silently
     overflowing VMEM.
@@ -516,6 +637,8 @@ def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
     assert not (boundary and intervals != 1), \
         "boundary (sharded) epochs exchange elites between launches: one " \
         "migration interval per launch"
+    assert migrate or not boundary, \
+        "boundary epochs exist to exchange elites: migrate=False has none"
     g_grid, i_islands, n, v = x.shape
     assert (n, v) == (cfg.n, cfg.v)
 
@@ -531,7 +654,8 @@ def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
     kernel = functools.partial(_epoch_body, cfg=cfg, ffm=ffm_conv,
                                const_shapes=const_shapes,
                                migrate_every=migrate_every,
-                               intervals=intervals, boundary=boundary)
+                               intervals=intervals, boundary=boundary,
+                               migrate=migrate)
     state_blks = [blk(i_islands, n, v), blk(i_islands, 2, n),
                   blk(i_islands, v, n // 2), blk(i_islands, v, n)]
     state_shapes = [
@@ -551,6 +675,13 @@ def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
         out_specs += [blk(v), blk()]
         out_shape += [jax.ShapeDtypeStruct((g_grid, v), jnp.uint32),
                       jax.ShapeDtypeStruct((g_grid,), jnp.int32)]
+    call_kwargs = {}
+    if vmem_limit_bytes is not None and not interpret:
+        from jax.experimental.pallas import tpu as pltpu
+        params_cls = (getattr(pltpu, "CompilerParams", None)
+                      or getattr(pltpu, "TPUCompilerParams"))
+        call_kwargs["compiler_params"] = params_cls(
+            vmem_limit_bytes=int(vmem_limit_bytes))
     return pl.pallas_call(
         kernel,
         grid=(g_grid,),
@@ -558,4 +689,5 @@ def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
+        **call_kwargs,
     )(x, sel, cross, mut, *flat_consts)

@@ -68,6 +68,13 @@ def main():
     ap.add_argument("--port", type=int, default=None,
                     help="serve /metrics, /jobs and SSE streams at PORT "
                          "(0 picks an ephemeral port)")
+    ap.add_argument("--job-ttl", type=float, default=None, metavar="S",
+                    help="evict DONE/FAILED jobs S seconds after they "
+                         "finish (default: keep forever)")
+    ap.add_argument("--cost-table", default=None, metavar="PATH",
+                    help="autotune cost table for measured epoch plans "
+                         "('off' disables; default: ambient discovery "
+                         "via REPRO_GA_COST_TABLE / the user cache)")
     ap.add_argument("--stream", default="first",
                     choices=["first", "none"],
                     help="print the first job's live telemetry feed")
@@ -86,11 +93,19 @@ def main():
         mesh = parse_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)} ({mesh.devices.size} device(s))")
 
+    cost_table = args.cost_table
+    if cost_table is not None and cost_table.lower() in ("off", "none", "0"):
+        cost_table = False
+
     from repro.serve.scheduler import GAScheduler
     sched = GAScheduler(mesh=mesh, backend=args.backend,
                         max_pack=args.max_pack,
                         chunk_generations=args.chunk,
-                        ckpt_root=args.ckpt_root)
+                        ckpt_root=args.ckpt_root,
+                        job_ttl_s=args.job_ttl,
+                        cost_table=cost_table)
+    if sched.cost_table is not None:
+        print(f"cost table: {len(sched.cost_table)} measured point(s)")
 
     server = None
     if args.port is not None:
@@ -131,6 +146,10 @@ def main():
               f"cache: {stats['cache_hits']} hit(s) / "
               f"{stats['cache_misses']} miss(es), "
               f"{stats['cache_entries']} entries")
+        print(f"plans: {stats['plans_measured']} measured / "
+              f"{stats['plans_heuristic']} heuristic "
+              f"(table points={stats['plan_table_entries']}, "
+              f"evicted jobs={stats['jobs_evicted']})")
     finally:
         sched.shutdown()
         if server is not None:

@@ -356,6 +356,30 @@ class CellReport:
         return d
 
 
+def ga_measured_points(table) -> List[Dict]:
+    """Flatten a `repro.autotune.CostTable` into report rows.
+
+    The HLO roofline above is *modeled* (bytes and FLOPs against peak
+    bandwidths); this is its measured GA counterpart: one row per
+    (plan point, gens_per_launch) with `frac_of_best` — the fraction of
+    the best throughput any epoch mode demonstrated for the same spec
+    family — so a report can show how far each mode sits from the best
+    plan the hardware actually achieved (1.0 marks the winner the
+    two-tier planner picks)."""
+    rows = list(table.entries())
+    # family = everything identifying the spec except the competing
+    # mode/executor and the launch fold
+    def fam(r):
+        return (r["stage"], r["migration"], r["n"], r["i_local"], r["c"],
+                r["shards"], r["E"])
+    best: Dict[Tuple, float] = {}
+    for r in rows:
+        best[fam(r)] = max(best.get(fam(r), 0.0), r["gens_per_s"])
+    return [{**r, "frac_of_best":
+             r["gens_per_s"] / best[fam(r)] if best[fam(r)] else 0.0}
+            for r in rows]
+
+
 def analyze_cell(arch: str, shape: str, mesh_name: str, n_devices: int,
                  hlo: str, cost: Dict[str, float],
                  mem: Dict[str, float], model_flops_total: float) -> CellReport:

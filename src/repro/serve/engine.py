@@ -156,6 +156,9 @@ class GAJobStats:
     priority: int = 0                # scheduler priority (higher preempts)
     preemptions: int = 0             # times the scheduler parked this job
     pack_size: int = 1               # jobs sharing the launch it ran in
+    epoch_mode: str = "-"            # resident | resident-free | gridded | ...
+    plan_source: str = "-"           # heuristic | measured | forced
+    plan_fallback: Optional[str] = None   # why resident modes were infeasible
 
     @property
     def gens_per_s(self) -> float:
@@ -190,6 +193,9 @@ class GAJobStats:
             "priority": self.priority,
             "preemptions": self.preemptions,
             "pack_size": self.pack_size,
+            "epoch_mode": self.epoch_mode,
+            "plan_source": self.plan_source,
+            "plan_fallback": self.plan_fallback,
         }
 
 
@@ -273,6 +279,9 @@ class GAMetricsRegistry:
             extras = tele.get("extras", {})
             job.islands = int(extras.get("n_islands", job.islands))
             job.shards = int(extras.get("n_shards", job.shards))
+            job.epoch_mode = str(extras.get("epoch_mode", job.epoch_mode))
+            job.plan_source = str(extras.get("plan_source", job.plan_source))
+            job.plan_fallback = extras.get("plan_fallback", job.plan_fallback)
             bf = tele.get("best_fitness")
             if bf is not None:
                 job.best_fitness = float(bf)
@@ -294,6 +303,14 @@ class GAMetricsRegistry:
                    "best_fitness": job.best_fitness, "error": error}
         for q in subs:
             q.put(end)
+
+    def evict_job(self, job_id: str) -> bool:
+        """Drop a finished job's stats and any stale subscriber queues (the
+        scheduler's TTL GC calls this).  Returns False if already gone."""
+        with self._lock:
+            gone = self._jobs.pop(job_id, None)
+            self._subs.pop(job_id, None)
+            return gone is not None
 
     # ---- streaming ------------------------------------------------------
 

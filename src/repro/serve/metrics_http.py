@@ -79,6 +79,14 @@ _SCHED_GAUGES = (
     ("cache_hits", "compile_cache_hits", "Compiled-runner cache hits"),
     ("cache_misses", "compile_cache_misses", "Compiled-runner cache misses"),
     ("cache_entries", "compile_cache_entries", "Compiled runners cached"),
+    ("jobs_evicted", "sched_evicted_total",
+     "Finished jobs TTL-evicted from the registry"),
+    ("plans_measured", "plan_measured_total",
+     "Launches planned from measured cost tables"),
+    ("plans_heuristic", "plan_heuristic_total",
+     "Launches planned by the static heuristic"),
+    ("plan_table_entries", "plan_table_entries",
+     "Cost-table points available to the planner"),
 )
 
 

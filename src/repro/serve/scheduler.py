@@ -35,6 +35,18 @@ loops and any state → FAILED on error.  Telemetry flows through a
 `GAMetricsRegistry` (per-chunk pub/sub feeds the metrics_http SSE and
 long-poll endpoints; `attach_scheduler_stats` adds queue-depth /
 jobs-running / cache-hit gauges to every /metrics scrape).
+
+Two trace-driven extensions ride on top:
+
+* **Cost-table ordering** — when a `cost_table` (see `repro.autotune`) is
+  attached, every submission gets a measured gens/s estimate for its
+  planned launch shape; within a priority level the dispatcher runs
+  shortest-estimated-wall first.  The table also flows into every
+  `PackedEngine` so each launch uses the measured epoch plan.  With no
+  table the ordering is bit-identical to plain priority/FIFO.
+* **TTL GC** — `job_ttl_s` bounds how long DONE/FAILED jobs linger in the
+  scheduler and registry; the worker sweeps them out between dispatches
+  (`repro_ga_sched_evicted_total` counts evictions).
 """
 
 from __future__ import annotations
@@ -67,6 +79,8 @@ class Job:
     result: Optional[Dict[str, Any]] = None
     error: Optional[str] = None
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    est_gens_per_s: Optional[float] = None   # cost-table throughput estimate
+    finished_at: Optional[float] = None      # monotonic DONE/FAILED stamp
 
 
 @dataclasses.dataclass
@@ -91,19 +105,30 @@ class GAScheduler:
     Parameters: `mesh` is handed to every engine build; `backend` is the
     default backend request; `max_pack` caps slots per launch;
     `chunk_generations` sets the telemetry/preemption granularity;
-    `ckpt_root` is where pack checkpoints live (a temp dir by default).
+    `ckpt_root` is where pack checkpoints live (a temp dir by default);
+    `job_ttl_s` evicts DONE/FAILED jobs that many seconds after they
+    finish (None keeps them forever); `cost_table` follows
+    `repro.autotune.table.resolve_table` semantics — None discovers the
+    ambient table, False disables, a path or CostTable pins one.
     """
 
     def __init__(self, *, mesh=None, registry: Optional[GAMetricsRegistry]
                  = None, backend: str = "auto", max_pack: int = 8,
                  chunk_generations: Optional[int] = None,
-                 ckpt_root: Optional[str] = None):
+                 ckpt_root: Optional[str] = None,
+                 job_ttl_s: Optional[float] = None,
+                 cost_table=None):
+        from repro.autotune import resolve_table   # import-light (no jax)
+
         self.mesh = mesh
         self.registry = registry if registry is not None else GA_METRICS
         self.backend = backend
         self.max_pack = max(1, int(max_pack))
         self.chunk_generations = chunk_generations
         self.ckpt_root = ckpt_root or tempfile.mkdtemp(prefix="ga-sched-")
+        self.job_ttl_s = None if job_ttl_s is None else float(job_ttl_s)
+        # resolve once: every engine build + submit estimate reuses it
+        self.cost_table = resolve_table(cost_table)
         self._cv = threading.Condition()
         self._queue: List[_Unit] = []
         self._jobs: Dict[str, Job] = {}
@@ -113,6 +138,9 @@ class GAScheduler:
         self.packs_launched = 0
         self.preemptions = 0
         self.jobs_packed = 0        # jobs that shared a launch with >=1 other
+        self.jobs_evicted = 0       # finished jobs TTL-swept from registry
+        self.plans_measured = 0     # launches planned from the cost table
+        self.plans_heuristic = 0    # launches planned by the static heuristic
         self.registry.attach_scheduler_stats(self.stats)
         self._worker = threading.Thread(target=self._run, name="ga-scheduler",
                                         daemon=True)
@@ -130,6 +158,14 @@ class GAScheduler:
         job = Job(job_id=job_id, spec=spec,
                   backend=backend if backend is not None else self.backend,
                   priority=int(priority))
+        if self.cost_table is not None:
+            from repro.autotune import estimate_gens_per_s
+            try:   # an estimate is a scheduling hint, never a submit error
+                job.est_gens_per_s = estimate_gens_per_s(
+                    spec, self.cost_table, backend=job.backend,
+                    mesh=self.mesh)
+            except Exception:
+                job.est_gens_per_s = None
         self.registry.queue_job(job_id, problem=spec.problem or "blackbox",
                                 gens_total=spec.generations, n_vars=spec.v,
                                 priority=job.priority)
@@ -201,7 +237,32 @@ class GAScheduler:
                 "max_pack": self.max_pack,
                 "cache_hits": cache["hits"],
                 "cache_misses": cache["misses"],
-                "cache_entries": cache["entries"]}
+                "cache_entries": cache["entries"],
+                "jobs_evicted": self.jobs_evicted,
+                "plans_measured": self.plans_measured,
+                "plans_heuristic": self.plans_heuristic,
+                "plan_table_entries": (len(self.cost_table)
+                                       if self.cost_table is not None else 0)}
+
+    def gc_now(self, now: Optional[float] = None) -> int:
+        """Evict DONE/FAILED jobs older than `job_ttl_s`; returns the count.
+        The worker calls this between dispatches; tests call it directly.
+        Registry eviction happens outside `_cv` (its Condition lock is not
+        reentrant and the registry takes its own lock)."""
+        if self.job_ttl_s is None:
+            return 0
+        import time as _t
+        now = _t.monotonic() if now is None else now
+        with self._cv:
+            stale = [j for j in self._jobs.values()
+                     if j.state in (DONE, FAILED) and j.finished_at is not None
+                     and now - j.finished_at >= self.job_ttl_s]
+            for j in stale:
+                del self._jobs[j.job_id]
+        for j in stale:
+            self.registry.evict_job(j.job_id)
+        self.jobs_evicted += len(stale)
+        return len(stale)
 
     def shutdown(self, wait: bool = True, timeout: float = 30.0) -> None:
         """Stop the worker after the unit in flight; queued jobs stay QUEUED."""
@@ -216,10 +277,21 @@ class GAScheduler:
     def _pack_sig(self, job: Job):
         return (job.spec.compile_key(), job.spec.generations, job.backend)
 
+    def _unit_order_key(self, u: _Unit):
+        """Dispatch order: priority first, then (with a cost table) shortest
+        estimated wall, then FIFO.  Estimated units outrank unestimated ones
+        within a level; with no table every unit gets the same middle terms,
+        so the order is bit-identical to plain priority/FIFO."""
+        ests = [j.spec.generations / j.est_gens_per_s for j in u.jobs
+                if j.est_gens_per_s]
+        if not ests:
+            return (u.priority, 0, 0.0, -u.seq)
+        return (u.priority, 1, -min(ests), -u.seq)
+
     def _take_unit(self) -> Optional[_Unit]:
         """Pop the best-priority unit; pack compatible fresh jobs onto it.
         FIFO within a priority level (seq breaks ties)."""
-        best = max(self._queue, key=lambda u: (u.priority, -u.seq))
+        best = max(self._queue, key=self._unit_order_key)
         self._queue.remove(best)
         if best.packable:
             sig = self._pack_sig(best.jobs[0])
@@ -241,28 +313,40 @@ class GAScheduler:
             return any(u.priority > priority for u in self._queue)
 
     def _run(self) -> None:
+        import time as _t
+        # with a TTL, wake periodically so finished jobs age out even while
+        # the queue is idle; gc runs OUTSIDE _cv (it takes _cv itself plus
+        # the registry lock)
+        wait_s = None if self.job_ttl_s is None else min(1.0, self.job_ttl_s)
         while True:
             with self._cv:
-                while not self._queue and not self._stop:
-                    self._cv.wait()
+                if not self._queue and not self._stop:
+                    self._cv.wait(timeout=wait_s)
                 if self._stop:
                     return
-                unit = self._take_unit()
-                for j in unit.jobs:
-                    j.state = RUNNING
-                self._running = list(unit.jobs)
+                unit = self._take_unit() if self._queue else None
+                if unit is not None:
+                    for j in unit.jobs:
+                        j.state = RUNNING
+                    self._running = list(unit.jobs)
+            if unit is None:
+                self.gc_now()
+                continue
             try:
                 self._run_unit(unit)
             except Exception as e:     # noqa: BLE001 — job-level failure wall
                 err = repr(e)
+                now = _t.monotonic()
                 for j in unit.jobs:
                     j.state = FAILED
                     j.error = err
+                    j.finished_at = now
                     self.registry.finish_job(j.job_id, error=err)
                     j.done.set()
             finally:
                 with self._cv:
                     self._running = []
+                self.gc_now()
 
     def _run_unit(self, unit: _Unit) -> None:
         from repro.ga.engine import PackedEngine   # lazy: jax import cost
@@ -271,7 +355,7 @@ class GAScheduler:
         if unit.ckpt_dir is None:
             unit.ckpt_dir = os.path.join(self.ckpt_root, f"pack-{unit.seq}")
         pe = PackedEngine([j.spec for j in jobs], jobs[0].backend,
-                          mesh=self.mesh)
+                          mesh=self.mesh, cost_table=self.cost_table)
         self.packs_launched += 1
         if len(jobs) > 1:
             self.jobs_packed += len(jobs)
@@ -284,6 +368,12 @@ class GAScheduler:
         last: Optional[Dict[str, Any]] = None
         for tele in pe.run_chunked(chunk_generations=self.chunk_generations,
                                    ckpt_dir=unit.ckpt_dir, resume=True):
+            if last is None:   # count the plan once per dispatch
+                ps = (tele["jobs"][0].get("extras") or {}).get("plan_source")
+                if ps == "measured":
+                    self.plans_measured += 1
+                elif ps is not None:
+                    self.plans_heuristic += 1
             last = tele
             for j, jt in zip(jobs, tele["jobs"]):
                 self.registry.record_chunk(j.job_id, jt)
@@ -304,9 +394,12 @@ class GAScheduler:
                                              ckpt_dir=unit.ckpt_dir))
                     self._cv.notify_all()
                 return
+        import time as _t
+        now = _t.monotonic()
         for j, jt in zip(jobs, last["jobs"]):
             j.result = dict(jt)
             j.result["best_params"] = [float(v) for v in jt["best_params"]]
             j.state = DONE
+            j.finished_at = now
             self.registry.finish_job(j.job_id)
             j.done.set()

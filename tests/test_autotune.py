@@ -1,0 +1,441 @@
+"""Trace-driven autotuner: replay stability, cost-table persistence, the
+two-tier planner decision matrix (measured argmax / interpolation /
+heuristic fallback / forced override), the migration-free resident mode,
+plan provenance through telemetry, and the scheduler's TTL GC +
+cost-table-aware ordering."""
+
+import itertools
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import ga
+from repro.autotune import (CostTable, Replay, replay_until_stable,
+                            resolve_table)
+from repro.autotune import table as table_mod
+from repro.ga import compile_cache as CC
+
+
+def _spec(**kw):
+    base = dict(problem="F3", n=16, bits_per_var=8, mode="arith",
+                mutation_rate=0.02, seed=1, generations=8,
+                n_islands=2, migrate_every=4, gens_per_epoch=8)
+    base.update(kw)
+    return ga.GASpec(**base)
+
+
+def _point(spec, mode):
+    return CC.plan_point(spec, executor="fused", mode=mode, n_shards=1)
+
+
+def _topo(spec, **kw):
+    return ga.Engine(spec, "fused-islands", **kw).backend.topology
+
+
+# ---------------------------------------------------------------------------
+# Replay-until-stable (deterministic fake timer)
+# ---------------------------------------------------------------------------
+
+
+class FakeTimer:
+    """perf_counter stand-in fed a script of per-call durations."""
+
+    def __init__(self, durations):
+        self.durations = list(durations)
+        self.now = 0.0
+        self.i = 0
+
+    def __call__(self):
+        # replay calls the timer before and after each rep; advance on the
+        # "after" call by consuming the next scripted duration
+        if self.i % 2 == 1:
+            self.now += self.durations.pop(0)
+        self.i += 1
+        return self.now
+
+
+def test_replay_stops_at_min_reps_when_stable():
+    calls = []
+    timer = FakeTimer([1.0, 1.0, 1.0, 1.0])
+    rep = replay_until_stable(lambda: calls.append(1), warmup=1,
+                              min_reps=3, max_reps=16, cov_threshold=0.10,
+                              timer=timer)
+    assert isinstance(rep, Replay)
+    assert rep.stable and rep.reps == 3
+    assert rep.mean_s == pytest.approx(1.0)
+    assert rep.cov == pytest.approx(0.0)
+    assert len(calls) == 4            # 1 warmup (untimed) + 3 timed
+
+
+def test_replay_keeps_going_until_cov_settles():
+    # noisy head, stable tail: needs more than min_reps
+    timer = FakeTimer([1.0, 3.0, 1.0, 1.0, 1.0, 1.0])
+    rep = replay_until_stable(lambda: None, warmup=0, min_reps=3,
+                              max_reps=16, cov_threshold=0.05, window=3,
+                              timer=timer)
+    assert rep.stable
+    assert rep.reps > 3
+    assert rep.mean_s == pytest.approx(1.0)
+
+
+def test_replay_gives_up_at_max_reps():
+    timer = FakeTimer([1.0, 5.0] * 4)
+    rep = replay_until_stable(lambda: None, warmup=0, min_reps=2,
+                              max_reps=8, cov_threshold=0.01, timer=timer)
+    assert not rep.stable
+    assert rep.reps == 8
+    assert rep.cov > 0.01
+
+
+def test_replay_validates_arguments():
+    with pytest.raises(ValueError):
+        replay_until_stable(lambda: None, min_reps=1)
+    with pytest.raises(ValueError):
+        replay_until_stable(lambda: None, min_reps=4, max_reps=2)
+
+
+# ---------------------------------------------------------------------------
+# CostTable: lookup semantics + persistence gates
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_exact_interpolated_and_out_of_range():
+    spec = _spec()
+    pt = _point(spec, "resident")
+    t = CostTable(host={"platform": "cpu", "device_count": 1})
+    t.add(pt, 4, 100.0)
+    t.add(pt, 12, 200.0)
+    assert t.lookup(pt, 4) == 100.0                      # exact
+    assert t.lookup(pt, 8) == pytest.approx(150.0)       # linear midpoint
+    assert t.lookup(pt, 6) == pytest.approx(125.0)
+    assert t.lookup(pt, 2) is None                       # no extrapolation
+    assert t.lookup(pt, 16) is None
+    assert t.lookup(_point(spec, "gridded"), 4) is None  # unknown point
+    assert len(t) == 2
+
+
+def test_table_roundtrip_and_merge(tmp_path):
+    spec = _spec()
+    t = CostTable(host={"platform": "cpu", "device_count": 8})
+    t.add(_point(spec, "resident"), 8, 123.4, reps=5, cov=0.02)
+    path = t.save(str(tmp_path / "table.json"))
+    back = CostTable.load(path)
+    assert back is not None
+    assert back.lookup(_point(spec, "resident"), 8) == 123.4
+    assert back.host == t.host
+    other = CostTable()
+    other.add(_point(spec, "resident"), 8, 999.0)
+    other.add(_point(spec, "gridded"), 4, 50.0)
+    back.merge(other)
+    assert back.lookup(_point(spec, "resident"), 8) == 999.0  # other wins
+    assert len(back) == 2
+
+
+def test_load_rejects_stale_version_and_foreign_host(tmp_path):
+    spec = _spec()
+    t = CostTable(host={"platform": "cpu", "device_count": 8})
+    t.add(_point(spec, "resident"), 8, 1.0)
+    path = str(tmp_path / "t.json")
+    t.save(path)
+    # strict (ambient) load: host mismatch -> silently None
+    assert CostTable.load(path, expect_host={"platform": "cpu",
+                                             "device_count": 4}) is None
+    # trusted load ignores the host
+    assert CostTable.load(path) is not None
+    obj = json.load(open(path))
+    obj["version"] = -99
+    json.dump(obj, open(path, "w"))
+    with pytest.warns(UserWarning, match="version"):
+        assert CostTable.load(path) is None
+
+
+def test_resolve_table_forms(tmp_path, monkeypatch):
+    assert resolve_table(False) is None
+    t = CostTable()
+    assert resolve_table(t) is t
+    with pytest.raises(TypeError):
+        resolve_table(42)
+    for off in ("", "off", "none", "0"):
+        monkeypatch.setenv("REPRO_GA_COST_TABLE", off)
+        assert resolve_table(None) is None
+    spec = _spec()
+    t2 = CostTable(host={"platform": "weird", "device_count": 3})
+    t2.add(_point(spec, "resident"), 8, 7.0)
+    path = t2.save(str(tmp_path / "pinned.json"))
+    monkeypatch.setenv("REPRO_GA_COST_TABLE", path)
+    got = resolve_table(None)          # env pin is trusted: host ignored
+    assert got is not None and got.lookup(_point(spec, "resident"), 8) == 7.0
+    assert resolve_table(path) is not None     # explicit path, same deal
+
+
+# ---------------------------------------------------------------------------
+# Planner decision matrix (tier 2: measured argmax over feasible modes)
+# ---------------------------------------------------------------------------
+
+
+def test_no_table_plan_is_exactly_the_heuristic():
+    topo = _topo(_spec(), cost_table=False)
+    heur = topo.epoch_candidates()[0]
+    assert topo.plan["plan_source"] == "heuristic"
+    assert {k: topo.plan[k] for k in heur} == heur
+    assert "plan_gens_per_s" not in topo.plan
+
+
+def test_measured_argmax_flips_the_mode():
+    spec = _spec()
+    t = CostTable()
+    t.add(_point(spec, "resident"), 8, 10.0)
+    t.add(_point(spec, "gridded"), 4, 100.0)
+    topo = _topo(spec, cost_table=t)
+    assert topo.plan["mode"] == "gridded"
+    assert topo.plan["plan_source"] == "measured"
+    assert topo.plan["plan_gens_per_s"] == 100.0
+
+
+def test_measured_argmax_keeps_heuristic_winner():
+    spec = _spec()
+    t = CostTable()
+    t.add(_point(spec, "resident"), 8, 100.0)
+    t.add(_point(spec, "gridded"), 4, 10.0)
+    topo = _topo(spec, cost_table=t)
+    assert topo.plan["mode"] == "resident"
+    assert topo.plan["plan_source"] == "measured"
+
+
+def test_partial_table_interpolates_on_the_launch_axis():
+    spec = _spec()
+    t = CostTable()
+    # resident measured at brackets of its g=8 launch; gridded exact
+    t.add(_point(spec, "resident"), 4, 100.0)
+    t.add(_point(spec, "resident"), 12, 300.0)
+    t.add(_point(spec, "gridded"), 4, 150.0)
+    topo = _topo(spec, cost_table=t)
+    # resident interpolates to 200 at g=8 and beats gridded's 150
+    assert topo.plan["mode"] == "resident"
+    assert topo.plan["plan_gens_per_s"] == pytest.approx(200.0)
+
+
+def test_table_not_covering_heuristic_falls_back_bit_identically():
+    spec = _spec()
+    t = CostTable()
+    t.add(_point(spec, "gridded"), 4, 9999.0)   # only the alternative
+    topo = _topo(spec, cost_table=t)
+    heur = _topo(spec, cost_table=False).plan
+    assert topo.plan == heur
+    assert topo.plan["plan_source"] == "heuristic"
+
+
+def test_measured_plan_results_bit_identical_to_heuristic():
+    spec = _spec()
+    t = CostTable()
+    t.add(_point(spec, "resident"), 8, 10.0)
+    t.add(_point(spec, "gridded"), 4, 100.0)    # flips to gridded
+    meas = ga.solve(spec, backend="fused-islands", cost_table=t)
+    heur = ga.solve(spec, backend="fused-islands", cost_table=False)
+    assert meas.extras["epoch_mode"] == "gridded"
+    assert heur.extras["epoch_mode"] == "resident"
+    assert meas.best_fitness == heur.best_fitness
+    np.testing.assert_array_equal(np.asarray(meas.best_params),
+                                  np.asarray(heur.best_params))
+
+
+def test_plan_override_forces_and_validates():
+    spec = _spec()
+    topo = _topo(spec, cost_table=False, plan_override="gridded")
+    assert topo.plan["mode"] == "gridded"
+    assert topo.plan["plan_source"] == "forced"
+    with pytest.raises(ValueError, match="resident"):
+        _topo(spec, cost_table=False, plan_override="resident-sharded")
+
+
+# ---------------------------------------------------------------------------
+# Migration-free resident mode (migration="none", unlimited gen folding)
+# ---------------------------------------------------------------------------
+
+
+def test_migration_none_offers_resident_free():
+    spec = _spec(migration="none", generations=16, gens_per_epoch=16)
+    cands = _topo(spec, cost_table=False).epoch_candidates()
+    modes = [c["mode"] for c in cands]
+    assert modes == ["gridded", "resident-free"]   # heuristic stays gridded
+    free = cands[1]
+    assert free["gens_per_launch"] == 16           # no whole-multiple rule
+
+
+def test_resident_free_bit_identical_and_unthrottled():
+    spec = _spec(migration="none", generations=16, gens_per_epoch=16)
+    free = ga.solve(spec, backend="fused-islands", cost_table=False,
+                    plan_override="resident-free")
+    grid = ga.solve(spec, backend="fused-islands", cost_table=False)
+    assert free.extras["epoch_mode"] == "resident-free"
+    assert free.extras["plan_source"] == "forced"
+    assert free.extras.get("migrations", 0) == 0
+    assert free.best_fitness == grid.best_fitness
+    np.testing.assert_array_equal(np.asarray(free.best_params),
+                                  np.asarray(grid.best_params))
+
+
+def test_vmem_fallback_reason_surfaces_in_plan_and_extras(monkeypatch):
+    monkeypatch.setenv("REPRO_RESIDENT_VMEM_BUDGET", "1024")   # 1 KiB: no fit
+    spec = _spec()
+    topo = _topo(spec, cost_table=False)
+    assert topo.plan["mode"] == "gridded"
+    assert "fallback" in topo.plan
+    out = ga.solve(spec, backend="fused-islands", cost_table=False)
+    assert out.extras["plan_fallback"] == topo.plan["fallback"]
+    assert out.extras["resident_fallback"] == topo.plan["fallback"]
+
+
+# ---------------------------------------------------------------------------
+# Plan provenance through job telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_plan_fields_flow_into_job_metrics():
+    from repro.serve.engine import GAMetricsRegistry
+    reg = GAMetricsRegistry()
+    spec = _spec()
+    eng = ga.Engine(spec, "fused-islands", cost_table=False)
+    jid = reg.allocate_job_id("F3")
+    reg.start_job(jid, backend=eng.backend_name, gens_total=spec.generations)
+    for tele in eng.run_chunked():
+        reg.record_chunk(jid, tele)
+    reg.finish_job(jid)
+    m = reg.metrics()["jobs"][jid]
+    assert m["epoch_mode"] == "resident"
+    assert m["plan_source"] == "heuristic"
+    assert m["plan_fallback"] is None
+
+
+def test_metrics_http_renders_autotune_gauges():
+    from repro.serve.metrics_http import render_prometheus
+    text = render_prometheus({
+        "jobs": {},
+        "scheduler": {"queue_depth": 0, "jobs_evicted": 3,
+                      "plans_measured": 2, "plans_heuristic": 5,
+                      "plan_table_entries": 6}})
+    for gauge in ("repro_ga_sched_evicted_total 3",
+                  "repro_ga_plan_measured_total 2",
+                  "repro_ga_plan_heuristic_total 5",
+                  "repro_ga_plan_table_entries 6"):
+        assert gauge in text
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: TTL GC + cost-table-aware dispatch ordering
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_ttl_evicts_finished_jobs():
+    import time as _t
+    from repro.serve.engine import GAMetricsRegistry
+    from repro.serve.scheduler import GAScheduler
+    reg = GAMetricsRegistry()
+    sched = GAScheduler(registry=reg, backend="reference", job_ttl_s=30.0,
+                        cost_table=False)
+    try:
+        jid = sched.submit(_spec(n_islands=1, gens_per_epoch=1,
+                                 generations=4))
+        sched.result(jid, timeout=300)
+        assert jid in reg.metrics()["jobs"]
+        assert sched.gc_now(now=_t.monotonic()) == 0      # too young
+        assert sched.gc_now(now=_t.monotonic() + 60.0) == 1
+        assert jid not in reg.metrics()["jobs"]
+        with pytest.raises(KeyError):
+            sched.job(jid)
+        assert sched.stats()["jobs_evicted"] == 1
+    finally:
+        sched.shutdown()
+
+
+def test_scheduler_without_ttl_never_evicts():
+    from repro.serve.engine import GAMetricsRegistry
+    from repro.serve.scheduler import GAScheduler
+    reg = GAMetricsRegistry()
+    sched = GAScheduler(registry=reg, backend="reference", cost_table=False)
+    try:
+        jid = sched.submit(_spec(n_islands=1, gens_per_epoch=1,
+                                 generations=4))
+        sched.result(jid, timeout=300)
+        assert sched.gc_now(now=1e18) == 0
+        assert jid in reg.metrics()["jobs"]
+    finally:
+        sched.shutdown()
+
+
+def test_unit_ordering_shortest_estimated_wall_first():
+    from repro.serve.engine import GAMetricsRegistry
+    from repro.serve.scheduler import GAScheduler, Job, _Unit
+    sched = GAScheduler(registry=GAMetricsRegistry(), backend="reference",
+                        cost_table=False)
+    try:
+        seq = itertools.count()
+
+        def unit(gens, est, priority=0):
+            j = Job(job_id=f"j{next(seq)}", spec=_spec(generations=gens),
+                    priority=priority, est_gens_per_s=est)
+            return _Unit(seq=next(seq), jobs=[j])
+
+        a, b, c = unit(100, 10.0), unit(100, 50.0), unit(100, None)
+        # estimated units outrank unestimated; shorter wall wins among them
+        assert max([a, b, c], key=sched._unit_order_key) is b
+        # without any estimate the key reduces to (priority, FIFO)
+        u0, u1 = unit(100, None), unit(100, None)
+        assert max([u1, u0], key=sched._unit_order_key) is u0
+        # priority still dominates every estimate
+        hot = unit(100, None, priority=10)
+        assert max([a, b, hot], key=sched._unit_order_key) is hot
+    finally:
+        sched.shutdown()
+
+
+def test_scheduler_plan_counters_and_table_gauge():
+    from repro.serve.engine import GAMetricsRegistry
+    from repro.serve.scheduler import GAScheduler
+    spec = _spec()
+    t = CostTable()
+    t.add(_point(spec, "resident"), 8, 10.0)
+    t.add(_point(spec, "gridded"), 4, 100.0)
+    reg = GAMetricsRegistry()
+    sched = GAScheduler(registry=reg, backend="fused-islands", cost_table=t)
+    try:
+        jid = sched.submit(spec)
+        res = sched.result(jid, timeout=600)
+        stats = sched.stats()
+        assert stats["plans_measured"] == 1
+        assert stats["plans_heuristic"] == 0
+        assert stats["plan_table_entries"] == 2
+        assert sched.job(jid).est_gens_per_s == 100.0
+        assert reg.metrics()["jobs"][jid]["plan_source"] == "measured"
+        assert reg.metrics()["jobs"][jid]["epoch_mode"] == "gridded"
+        # measured plan, identical result
+        solo = ga.solve(spec, backend="fused-islands", cost_table=False)
+        assert res["best_fitness"] == solo.best_fitness
+    finally:
+        sched.shutdown()
+
+
+def test_estimate_gens_per_s():
+    from repro.autotune import estimate_gens_per_s
+    spec = _spec()
+    assert estimate_gens_per_s(spec, None) is None
+    t = CostTable()
+    t.add(_point(spec, "resident"), 8, 42.0)
+    t.add(_point(spec, "gridded"), 4, 1.0)
+    assert estimate_gens_per_s(spec, t,
+                               backend="fused-islands") == pytest.approx(42.0)
+
+
+# ---------------------------------------------------------------------------
+# plan_point identity discipline
+# ---------------------------------------------------------------------------
+
+
+def test_plan_point_excludes_seed_generations_and_repeats():
+    a = _point(_spec(seed=1, generations=8), "resident")
+    b = _point(_spec(seed=99, generations=800, n_repeats=4), "resident")
+    assert a == b
+    assert _point(_spec(n=32), "resident") != a
+    assert a["stage"].startswith("F3:v")
