@@ -12,7 +12,11 @@ mode, so their absolute numbers only mean something on TPU — which is why
 The `fused-islands` rows run with `gens_per_epoch = 2 * migrate_every`,
 i.e. the RESIDENT epoch kernel (ring migration folded into the VMEM-resident
 launch; the intra-shard part on mesh rows) — their ratio row is the
-regression gate for that optimization.
+regression gate for that optimization.  The `+streamed` /
+`+streamed-gridded` pair runs an island stack that exceeds a (forced)
+VMEM budget through the HBM-streaming lane and through the gridded
+fallback respectively; `check_bench.streamed_gate` requires the streamed
+row to actually stream and to be no slower than its gridded twin.
 
 The island backends additionally run as mesh combos (`...@mesh{D}`): the
 island axis shard_mapped over D devices with `ppermute` ring migration —
@@ -79,11 +83,13 @@ def _mesh_device_counts(smoke: bool):
 
 
 def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
-             mesh=None, devices: int = 1, cost_table=False):
+             mesh=None, devices: int = 1, cost_table=False, options=None):
     # cost_table=False by default: benchmark rows must not silently flip
     # epoch plans because the host happens to have an ambient autotune
     # table — only the explicit `+measured` rows consume one
-    eng = ga.Engine(spec, backend, mesh=mesh, cost_table=cost_table)
+    if options is None:
+        options = ga.EngineOptions(mesh=mesh, cost_table=cost_table)
+    eng = ga.Engine(spec, backend, options=options)
     out = eng.run()           # compile + warm caches
     # interpret-mode Pallas and the eager loop are slow; fewer iters.  The
     # cheap XLA backends keep 3 timed iters even in smoke mode — the
@@ -93,23 +99,54 @@ def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
     iters = 1 if slow else 3
     dt, out = time_call(eng.run, warmup=0, iters=iters)
     gens = out.generations * max(spec.n_islands, spec.n_repeats)
+    tele = out.telemetry
     payload = json.dumps({"backend": out.backend,
-                          "executor": out.extras.get("executor", "-"),
-                          "topology": out.extras.get("topology", "-"),
-                          "problem": out.extras.get("problem", spec.problem),
+                          "executor": tele.topology.executor,
+                          "topology": tele.topology.topology,
+                          "problem": tele.problem or spec.problem,
                           "n_vars": spec.v,
                           "gens_per_s": round(gens / dt, 1),
                           "best": round(out.best_fitness, 4),
                           "n": spec.n,
                           "islands": spec.n_islands,
                           "devices": devices,
-                          "epoch_mode": out.extras.get("epoch_mode", "-"),
-                          "plan_source": out.extras.get("plan_source", "-"),
-                          "migrations": out.extras.get("migrations", 0)},
+                          "epoch_mode": tele.plan.mode,
+                          "plan_source": tele.plan.source,
+                          "tile_islands": tele.plan.tile_islands,
+                          "migrations": tele.topology.migrations},
                          separators=(",", ":"))
     # island epochs round K up to whole migration epochs — divide by
     # what actually ran
     return (name, dt / out.generations * 1e6, payload)
+
+
+def _streamed_rows(problem: str, sizes: dict, *, smoke: bool):
+    """The oversized-stack pair: an island stack past a (forced) VMEM
+    budget, once through the HBM-streaming lane (the planner's heuristic
+    pick for oversized ring specs) and once forced through the gridded
+    per-interval fallback.  The kernels still validate tiles against the
+    REAL budget, so the forced budget only steers the plan."""
+    from repro.kernels import ga_step as KS
+    isl = max(8, sizes["n_islands"])
+    spec = dataclasses.replace(
+        _spec_for("fused-islands", problem, **sizes), n_islands=isl)
+    probe = ga.Engine(spec, "fused-islands",
+                      options=ga.EngineOptions(cost_table=False))
+    cfg = probe.backend.topology.cfg
+    # below the full stack, but a double-buffered 2-island tile fits:
+    # the heuristic plans streamed with tile_islands=2
+    budget = KS.resident_vmem_bytes(cfg, isl - 3)
+    return [
+        _one_row(f"engine_fused-islands[{problem}]+streamed",
+                 "fused-islands", spec, smoke=smoke,
+                 options=ga.EngineOptions(cost_table=False,
+                                          vmem_budget=budget)),
+        _one_row(f"engine_fused-islands[{problem}]+streamed-gridded",
+                 "fused-islands", spec, smoke=smoke,
+                 options=ga.EngineOptions(cost_table=False,
+                                          vmem_budget=budget,
+                                          plan_override="gridded")),
+    ]
 
 
 def run(smoke: bool = False, cost_table=None):
@@ -129,6 +166,9 @@ def run(smoke: bool = False, cost_table=None):
             rows.append(_one_row(
                 f"engine_fused-islands[{problem}]+measured", "fused-islands",
                 spec, smoke=smoke, cost_table=cost_table))
+        if problem == "F3":
+            # one oversized-stack pair is enough to gate the streamed lane
+            rows.extend(_streamed_rows(problem, sizes, smoke=smoke))
         # mesh combos: island axis sharded over devices (device-count sweep)
         from repro.launch.mesh import make_island_mesh
         for backend in MESH_BACKENDS:

@@ -31,7 +31,7 @@ def run():
     spec1 = ga.paper_spec("F1", n=32, m=26, mode="lut", mutation_rate=0.05,
                           seed=0, generations=100, n_repeats=R)
     out1 = ga.solve(spec1, backend="reference")
-    per_rep = out1.extras["per_repeat_traj_best"] / spec1.fitness_scale()
+    per_rep = out1.telemetry.per_repeat.traj_best / spec1.fitness_scale()
     gens = [_gens_to(per_rep[r], target1) for r in range(R)]
     ok = [g for g in gens if g >= 0]
     rows.append(("convergence_F1_N32_m26",
@@ -43,7 +43,7 @@ def run():
     spec3 = ga.paper_spec("F3", n=64, m=20, mode="arith", mutation_rate=0.05,
                           seed=0, generations=100, n_repeats=R)
     out3 = ga.solve(spec3, backend="reference")
-    per_rep = out3.extras["per_repeat_traj_best"]
+    per_rep = out3.telemetry.per_repeat.traj_best
     gens = [_gens_to(per_rep[r], 1.0) for r in range(R)]
     ok = [g for g in gens if g >= 0]
     rows.append(("convergence_F3_N64_m20",

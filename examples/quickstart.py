@@ -35,7 +35,7 @@ def main():
     r = ga.solve(dataclasses.replace(spec3, selection="tournament4",
                                      n_repeats=8))
     print(f"F3 [tournament4, 8 repeats] best: {r.best_fitness:.4f}, "
-          f"per-seed: {np.round(r.extras['per_repeat_best'], 3)}")
+          f"per-seed: {np.round(r.telemetry.per_repeat.best, 3)}")
 
     # --- 4. The GA as a tuning service: minimize a 4-var blackbox --------
     target = jnp.array([0.5, -1.0, 2.0, 0.0])

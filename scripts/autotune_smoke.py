@@ -7,7 +7,9 @@ runs a tiny autotune sweep over the exact spec shapes the engine_backends
 asserts the whole loop closes:
 
   * the sweep measured > 0 points, including a resident-free one
-    (migration="none" folding past migrate_every without ring exchange);
+    (migration="none" folding past migrate_every without ring exchange)
+    and a streamed one (an 8-island stack under a forced vmem_budget that
+    only fits a double-buffered tile);
   * an Engine pointed at the written table plans with
     plan_source="measured" and its result is bit-identical to the
     heuristic plan's;
@@ -61,12 +63,22 @@ def main():
                           **{**BASE, "generations": 16,
                              "gens_per_epoch": 16})
     table = sweep(specs + [free_spec], backend="fused-islands", log=print)
+    # streamed coverage: an 8-island stack under a forced budget that only
+    # fits a double-buffered 2-island tile -> candidates [streamed, gridded]
+    from repro.kernels import ga_step as K
+    stream_spec = ga.GASpec(problem="F3", **{**BASE, "n_islands": 8})
+    probe = ga.Engine(stream_spec, "fused-islands", cost_table=False)
+    budget = K.resident_vmem_bytes(probe.backend.topology.cfg, 5)
+    sweep([stream_spec], backend="fused-islands",
+          options=ga.EngineOptions(cost_table=False, vmem_budget=budget),
+          table=table, log=print)
     table.save(args.out)
     print(f"wrote {len(table)} measured point(s) -> {args.out}")
 
     assert len(table) > 0, "sweep measured nothing"
     modes = {e["mode"] for e in table.entries()}
     assert "resident-free" in modes, f"no resident-free point (got {modes})"
+    assert "streamed" in modes, f"no streamed point (got {modes})"
 
     # planner consumes the table it just wrote (path form, trusted load)
     plan = _plan(specs[0], args.out)
@@ -81,7 +93,7 @@ def main():
     out_heur = ga.solve(specs[0], backend="fused-islands", cost_table=False)
     assert out_meas.best_fitness == out_heur.best_fitness, \
         (out_meas.best_fitness, out_heur.best_fitness)
-    assert out_heur.extras["plan_source"] == "heuristic"
+    assert out_heur.telemetry.plan.source == "heuristic"
 
     # no table -> exactly the heuristic candidate (bit-identical pre-PR plan)
     eng = ga.Engine(specs[0], "fused-islands", cost_table=False)

@@ -35,6 +35,12 @@ VERY loose absolute floor: `engine_reference[*]` must stay above
 ANCHOR_FLOOR (default 0.10) × its baseline gens/s — 10× machine-speed
 variance passes, a catastrophic shared-path slowdown does not.
 
+Two same-artifact gates ride along: `+measured` rows must keep up with
+their static twin (measured_gate) and `+streamed` rows must actually plan
+the streamed epoch mode and keep up with their `+streamed-gridded`
+fallback twin (streamed_gate) — both absolute-safe because the pair ran
+on the same machine in the same run.
+
 Env overrides: CHECK_BENCH_TOLERANCE (float, default 0.30),
 CHECK_BENCH_ANCHOR_FLOOR (float, default 0.10) and CHECK_BENCH_SKIP=1
 (escape hatch for pathological machines — prints a warning, exits 0).
@@ -170,6 +176,39 @@ def measured_gate(current: dict, tolerance: float):
     return failures, notes
 
 
+def streamed_gate(current: dict, tolerance: float):
+    """Gate the HBM-streaming epoch lane: every '<combo>+streamed' row (an
+    island stack past the forced VMEM budget) must have actually planned
+    `epoch_mode == "streamed"` AND reach at least (1 - tolerance) × its
+    '+streamed-gridded' twin — the same oversized spec forced through the
+    gridded per-interval fallback, in the same artifact.  A streamed row
+    that silently fell back, or that is slower than the fallback it exists
+    to beat, is a regression of the streaming pipeline."""
+    failures, notes = [], []
+    for name in sorted(n for n in current if n.endswith("+streamed")):
+        cur = current[name]
+        if cur.get("epoch_mode") != "streamed":
+            failures.append(
+                f"{name}: planned epoch_mode="
+                f"{cur.get('epoch_mode', '?')!r}, expected 'streamed' — "
+                "the oversized-stack row no longer exercises the "
+                "streaming lane")
+            continue
+        twin = current.get(name + "-gridded")
+        if twin is None or not twin.get("gens_per_s"):
+            notes.append(f"{name}: no '+streamed-gridded' twin row; "
+                         "skipping throughput comparison")
+            continue
+        floor = twin["gens_per_s"] * (1.0 - tolerance)
+        if cur.get("gens_per_s", 0.0) < floor:
+            failures.append(
+                f"{name}: streamed at {cur.get('gens_per_s', 0.0):.1f} "
+                f"gens/s < floor {floor:.1f} ({(1.0 - tolerance):.0%} of "
+                f"the gridded fallback's {twin['gens_per_s']:.1f}; "
+                f"tile_islands={cur.get('tile_islands', '?')})")
+    return failures, notes
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("artifacts", nargs="+",
@@ -229,6 +268,9 @@ def main():
     m_failures, m_notes = measured_gate(current, args.tolerance)
     failures += m_failures
     notes += m_notes
+    s_failures, s_notes = streamed_gate(current, args.tolerance)
+    failures += s_failures
+    notes += s_notes
     for n in notes:
         print(f"note: {n}")
     if failures:

@@ -34,6 +34,10 @@ mkdir -p artifacts
 timeout 420 python scripts/autotune_smoke.py \
     --out artifacts/autotune_table.json
 
+echo "== streaming smoke (oversized island stack through the HBM-streaming"
+echo "   epoch lane; bit-identical to the islands reference) =="
+timeout 420 python scripts/streaming_smoke.py
+
 echo "== backend-matrix smoke (1 tiny config per topology x executor x problem) =="
 timeout 420 python -m benchmarks.engine_backends --smoke \
     --out artifacts/engine_backends.json \

@@ -16,6 +16,7 @@ functions: `repro.autotune.table` must stay importable from
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
@@ -23,13 +24,26 @@ from repro.autotune.stability import Replay, replay_until_stable
 from repro.autotune.table import CostTable, host_fingerprint
 
 
+def _probe_options(options, *, mesh, interpret, plan_override=None):
+    """The engine options a probe runs under: the caller's base options
+    (or legacy mesh/interpret kwargs) with the cost table DISABLED — a
+    measurement must never depend on prior measurements — and optionally
+    one mode forced."""
+    from repro.ga.options import resolve_options
+    base = resolve_options(options, mesh=mesh, interpret=interpret)
+    return dataclasses.replace(base, cost_table=False,
+                               plan_override=plan_override)
+
+
 def plan_candidates(spec, *, backend: str = "auto", mesh=None,
-                    interpret: Optional[bool] = None) -> List[Dict[str, Any]]:
+                    interpret: Optional[bool] = None,
+                    options=None) -> List[Dict[str, Any]]:
     """The feasible epoch-plan candidates an engine for `spec` would weigh
     (heuristic choice first), or [] for backends with no island planner."""
     from repro import ga
-    eng = ga.Engine(spec, backend, mesh=mesh, interpret=interpret,
-                    cost_table=False)
+    eng = ga.Engine(spec, backend,
+                    options=_probe_options(options, mesh=mesh,
+                                           interpret=interpret))
     topo = getattr(eng.backend, "topology", None)
     if topo is None or not hasattr(topo, "epoch_candidates"):
         return []
@@ -37,7 +51,7 @@ def plan_candidates(spec, *, backend: str = "auto", mesh=None,
 
 
 def measure_candidate(spec, mode: str, *, backend: str = "auto", mesh=None,
-                      interpret: Optional[bool] = None,
+                      interpret: Optional[bool] = None, options=None,
                       warmup: int = 1, min_reps: int = 3, max_reps: int = 8,
                       cov_threshold: float = 0.25,
                       timer: Callable[[], float] = time.perf_counter,
@@ -49,8 +63,10 @@ def measure_candidate(spec, mode: str, *, backend: str = "auto", mesh=None,
     from repro import ga
     from repro.ga import compile_cache as CC
 
-    eng = ga.Engine(spec, backend, mesh=mesh, interpret=interpret,
-                    cost_table=False, plan_override=mode)
+    eng = ga.Engine(spec, backend,
+                    options=_probe_options(options, mesh=mesh,
+                                           interpret=interpret,
+                                           plan_override=mode))
     topo = eng.backend.topology
     state = eng.init_state()
     seg_gens = max(spec.gens_per_epoch, spec.migrate_every)
@@ -73,17 +89,20 @@ def measure_candidate(spec, mode: str, *, backend: str = "auto", mesh=None,
 
 
 def sweep(specs: Iterable, *, backend: str = "auto", mesh=None,
-          interpret: Optional[bool] = None, table: Optional[CostTable] = None,
+          interpret: Optional[bool] = None, options=None,
+          table: Optional[CostTable] = None,
           warmup: int = 1, min_reps: int = 3, max_reps: int = 8,
           cov_threshold: float = 0.25,
           timer: Callable[[], float] = time.perf_counter,
           log: Optional[Callable[[str], None]] = None) -> CostTable:
     """Measure every feasible candidate of every spec into one CostTable
-    (reuses `table` when given, so sweeps accumulate across invocations)."""
+    (reuses `table` when given, so sweeps accumulate across invocations).
+    An `options` carrying vmem_budget makes the streamed lane feasible on
+    small shapes, so its cost gets measured too."""
     table = CostTable(host=host_fingerprint()) if table is None else table
     for spec in specs:
         cands = plan_candidates(spec, backend=backend, mesh=mesh,
-                                interpret=interpret)
+                                interpret=interpret, options=options)
         if not cands:
             if log:
                 log(f"skip {spec.problem or 'blackbox'}: no island planner "
@@ -92,8 +111,9 @@ def sweep(specs: Iterable, *, backend: str = "auto", mesh=None,
         for cand in cands:
             row = measure_candidate(
                 spec, cand["mode"], backend=backend, mesh=mesh,
-                interpret=interpret, warmup=warmup, min_reps=min_reps,
-                max_reps=max_reps, cov_threshold=cov_threshold, timer=timer)
+                interpret=interpret, options=options, warmup=warmup,
+                min_reps=min_reps, max_reps=max_reps,
+                cov_threshold=cov_threshold, timer=timer)
             rep: Replay = row["replay"]
             table.add(row["point"], row["gens_per_launch"],
                       row["gens_per_s"], reps=rep.reps, cov=rep.cov)
@@ -108,16 +128,19 @@ def sweep(specs: Iterable, *, backend: str = "auto", mesh=None,
 
 def estimate_gens_per_s(spec, table: Optional[CostTable], *,
                         backend: str = "auto", mesh=None,
-                        interpret: Optional[bool] = None) -> Optional[float]:
+                        interpret: Optional[bool] = None,
+                        options=None) -> Optional[float]:
     """What the measured planner expects for `spec` under `table` — the
     chosen plan's measured gens/s, or None when the table does not cover
     the spec (scheduler ordering treats those jobs as unknown-length)."""
     if table is None:
         return None
     from repro import ga
+    from repro.ga.options import resolve_options
     try:
-        eng = ga.Engine(spec, backend, mesh=mesh, interpret=interpret,
-                        cost_table=table)
+        opts = resolve_options(options, mesh=mesh, interpret=interpret)
+        eng = ga.Engine(spec, backend,
+                        options=dataclasses.replace(opts, cost_table=table))
     except Exception:
         return None
     plan = getattr(getattr(eng.backend, "topology", None), "plan", None)

@@ -48,6 +48,13 @@ Typical use::
     result = ga.solve(ga.paper_spec("F3", n=64, m=20, mode="arith"),
                       backend="fused")
 
+Execution knobs (mesh, interpret, cost table, plan override, the streamed
+mode's tile/budget) ride in one frozen :class:`EngineOptions` shared by
+`Engine`, `PackedEngine`, `GAScheduler` and the CLIs; how a run executed
+comes back as typed :class:`RunTelemetry` (``result.telemetry.plan`` /
+``.topology`` / ``.per_repeat``) — the old ``result.extras`` dict is a
+deprecated view.
+
 Operator stages are pluggable protocols with registries
 (`ga.SELECTION` / `ga.CROSSOVER` / `ga.MUTATION`; see
 :mod:`repro.ga.operators`), chunked streaming + checkpoint/resume live on
@@ -77,6 +84,9 @@ from repro.ga.operators import (CROSSOVER, MUTATION, PAPER_PIPELINE,
                                 SelectionOp, make_apply_ops, make_generation,
                                 register_crossover, register_mutation,
                                 register_selection)
+from repro.ga.options import EngineOptions, resolve_options
+from repro.ga.telemetry import (TELEMETRY_VERSION, PlanInfo, ReplicaStats,
+                                RunTelemetry, TopologyInfo)
 from repro.ga.backends import (BACKENDS, EXECUTORS, TOPOLOGIES, Backend,
                                Executor, Segment, Topology)
 from repro.ga.compile_cache import RUNNER_CACHE, CompileCache
@@ -90,6 +100,9 @@ __all__ = [
     "register_problem", "resolve_problem",
     "Engine", "EngineResult", "PackedEngine", "solve", "resolve_backend",
     "capability_matrix", "BackendUnsupported",
+    "EngineOptions", "resolve_options",
+    "RunTelemetry", "PlanInfo", "TopologyInfo", "ReplicaStats",
+    "TELEMETRY_VERSION",
     "RUNNER_CACHE", "CompileCache",
     "BACKENDS", "Backend", "Segment",
     "EXECUTORS", "TOPOLOGIES", "Executor", "Topology",

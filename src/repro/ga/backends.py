@@ -76,17 +76,20 @@ from repro.core import ga as G
 from repro.core import islands as ISL
 from repro.ga import compile_cache as CC
 from repro.ga import operators as OPS
+from repro.ga import telemetry as RT
+from repro.ga.options import resolve_options
 from repro.ga.spec import GASpec
 from repro.kernels import ga_step as _ga_step
 
 
 @dataclasses.dataclass
 class Segment:
-    """Telemetry for one contiguous block of generations (raw fitness units).
+    """One contiguous block of generations (raw fitness units).
 
     traj arrays have one entry per generation, except island_ring topologies
     where the unit is one migration epoch (`migrate_every` generations —
-    see extras["telemetry_unit_gens"]).
+    see telemetry.topology.telemetry_unit_gens).  `telemetry` is the typed
+    run telemetry (ga.RunTelemetry); `.extras` is its deprecated dict view.
     """
 
     state: Any
@@ -95,7 +98,13 @@ class Segment:
     traj_best: np.ndarray
     traj_mean: np.ndarray
     gens: int
-    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    telemetry: RT.RunTelemetry = dataclasses.field(
+        default_factory=RT.RunTelemetry)
+
+    @property
+    def extras(self) -> Dict[str, Any]:
+        """Deprecated legacy dict view of `telemetry`."""
+        return RT.deprecated_extras(self.telemetry, "Segment")
 
 
 def _arg_best(y: np.ndarray, minimize: bool) -> int:
@@ -139,27 +148,36 @@ def _stack_island_replicas(icfg: ISL.IslandConfig, n_replicas: int):
 class Backend:
     """One execution strategy for a GASpec.
 
-    cost_table feeds the measured tier of the epoch planner (see
-    `repro.autotune.table.resolve_table` for the accepted values — the
-    default None discovers the ambient per-host table, False disables
+    Execution knobs arrive as one frozen `ga.EngineOptions` (`options=`);
+    the legacy `mesh=/interpret=/cost_table=/plan_override=` kwargs still
+    work (folded into an EngineOptions via `resolve_options`, which rejects
+    mixing the two styles).  cost_table feeds the measured tier of the
+    epoch planner (see `repro.autotune.table.resolve_table` for accepted
+    values — None discovers the ambient per-host table, False disables
     measurement and pins the pure heuristic).  plan_override forces one
-    epoch mode by name ("resident" / "resident-free" / "gridded" / ...;
-    the autotune runner uses it to measure non-default candidates) and
-    raises if the spec cannot feasibly run that mode.  Both only influence
-    launch shapes, never results — every plan is bit-identical in state
-    and best tracking.
+    epoch mode by name ("resident" / "streamed" / "gridded" / ...; the
+    autotune runner uses it to measure non-default candidates) and raises
+    if the spec cannot feasibly run that mode.  vmem_budget overrides the
+    PLANNER's feasibility budget (the kernels still validate against the
+    real one) and stream_tile_islands pins the streamed tile.  Options only
+    influence launch shapes, never results — every plan is bit-identical
+    in state and best tracking.
     """
 
     name = "?"
 
-    def __init__(self, spec: GASpec, *, mesh=None, interpret=None,
-                 cost_table=None, plan_override=None):
+    def __init__(self, spec: GASpec, *, options=None, mesh=None,
+                 interpret=None, cost_table=None, plan_override=None):
+        self.options = resolve_options(options, mesh=mesh,
+                                       interpret=interpret,
+                                       cost_table=cost_table,
+                                       plan_override=plan_override)
         self.spec = spec
         self.cfg = spec.ga_config()
-        self.mesh = mesh
-        self.interpret = interpret
-        self.cost_table = _cost.resolve_table(cost_table)
-        self.plan_override = plan_override
+        self.mesh = self.options.mesh
+        self.interpret = self.options.interpret
+        self.cost_table = _cost.resolve_table(self.options.cost_table)
+        self.plan_override = self.options.plan_override
         self._cache: Dict[Any, Any] = {}   # gens -> jitted segment runner
 
     @staticmethod
@@ -385,15 +403,19 @@ class Topology:
     name = "?"
 
     def __init__(self, spec: GASpec, executor: Executor, *, mesh=None,
-                 cost_table=None, plan_override=None):
+                 cost_table=None, plan_override=None, vmem_budget=None,
+                 stream_tile_islands=None):
         self.spec = spec
         self.cfg = spec.ga_config()
         self.executor = executor
         self.mesh = mesh
-        # already-resolved CostTable (or None) + forced mode; only the
-        # island_ring planner consults them — single has one launch shape
+        # already-resolved CostTable (or None) + forced mode + planner
+        # VMEM-budget override + pinned streamed tile; only the island_ring
+        # planner consults them — single has one launch shape
         self.cost_table = cost_table
         self.plan_override = plan_override
+        self.vmem_budget = vmem_budget
+        self.stream_tile_islands = stream_tile_islands
         self._cache: Dict[Any, Any] = {}   # instance memo over RUNNER_CACHE
 
     def _cached_runner(self, key, builder):
@@ -472,10 +494,9 @@ class SingleTopology(Topology):
                        traj_best=reduce(tb, axis=0),
                        traj_mean=np.asarray(tm).mean(axis=0),
                        gens=gens,
-                       extras={"per_repeat_best": per_rep,
-                               "per_repeat_best_x": np.asarray(bx),
-                               "per_repeat_traj_best": tb,
-                               "per_repeat_traj_mean": np.asarray(tm)})
+                       telemetry=RT.RunTelemetry(per_repeat=RT.ReplicaStats(
+                           best=per_rep, best_x=np.asarray(bx),
+                           traj_best=tb, traj_mean=np.asarray(tm))))
 
 
 class IslandRingTopology(Topology):
@@ -509,13 +530,26 @@ class IslandRingTopology(Topology):
       resident-free     (fused, migration="none", no mesh)  no ring to run,
                         so ONE launch folds the whole gens_per_epoch (any
                         value — the whole-multiple rule is ring-only).
+      streamed          (fused, resident does NOT fit)  the HBM-streaming
+                        lane: `ga_streamed_epoch_kernel` tiles the island
+                        axis through VMEM (`plan["tile_islands"]` islands
+                        per grid step, double-buffered by the Pallas grid
+                        pipeline) and the ring splice runs in XLA between
+                        kernel passes inside one jitted scan over
+                        gens_per_epoch // migrate_every intervals — on a
+                        mesh the boundary elite `ppermute`s inside that
+                        same scan, so k > 1 intervals fold per launch
+                        (unlike resident-sharded).
       gridded           always feasible — the per-grid-step kernel with
-                        migration between launches (and the automatic
-                        fallback when the VMEM budget says a resident block
-                        will not fit; the reason rides in plan["fallback"]).
+                        migration between launches (the last-resort
+                        fallback when not even one double-buffered streamed
+                        tile fits; the estimator's reason rides in
+                        plan["fallback"] either way).
 
-    Tier 2, selection: candidates[0] is the historical heuristic (resident
-    when it fits, else gridded).  When a measured cost table covers the
+    Tier 2, selection: candidates[0] is the heuristic (resident when it
+    fits, else streamed with ring migration, else gridded — for
+    migration="none" gridded stays the default and resident-free/streamed
+    are measured choices).  When a measured cost table covers the
     spec — including the heuristic's own mode, so "measured beats
     heuristic" is provable rather than assumed — the planner instead picks
     the candidate with the best measured gens/s (`plan_source: "measured"`,
@@ -531,9 +565,12 @@ class IslandRingTopology(Topology):
     name = "island_ring"
 
     def __init__(self, spec: GASpec, executor: Executor, *, mesh=None,
-                 cost_table=None, plan_override=None):
+                 cost_table=None, plan_override=None, vmem_budget=None,
+                 stream_tile_islands=None):
         super().__init__(spec, executor, mesh=mesh, cost_table=cost_table,
-                         plan_override=plan_override)
+                         plan_override=plan_override,
+                         vmem_budget=vmem_budget,
+                         stream_tile_islands=stream_tile_islands)
         axis_names = _mesh_axes(spec, mesh)
         self.n_shards = (int(np.prod([mesh.shape[a] for a in axis_names]))
                          if mesh is not None else 1)
@@ -556,7 +593,7 @@ class IslandRingTopology(Topology):
             executor=self.executor.name, migration=spec.migration,
             gens_per_epoch=spec.gens_per_epoch,
             migrate_every=spec.migrate_every,
-            sharded=self.mesh is not None)
+            sharded=self.mesh is not None, budget=self.vmem_budget)
 
     def _plan_point(self, cand: Dict[str, Any]) -> Dict[str, Any]:
         return CC.plan_point(self.spec, executor=self.executor.name,
@@ -574,9 +611,14 @@ class IslandRingTopology(Topology):
                     plan = dict(c, plan_source="forced")
                     break
             else:
+                hint = (" — streamed is only offered when the resident "
+                        "stack exceeds the VMEM budget (this spec fits "
+                        "resident; lower vmem_budget to force streaming)"
+                        if want == "streamed" else "")
                 raise ValueError(
                     f"plan_override mode {want!r} is not feasible for this "
-                    f"spec (candidates: {[c['mode'] for c in cands]})")
+                    f"spec (candidates: {[c['mode'] for c in cands]})"
+                    + hint)
         else:
             plan = dict(cands[0], plan_source="heuristic")
             table = self.cost_table
@@ -594,7 +636,27 @@ class IslandRingTopology(Topology):
                             best_c, best_v = c, v
                     plan = dict(best_c, plan_source="measured",
                                 plan_gens_per_s=round(best_v, 3))
-        if plan["mode"].startswith("resident"):
+        if plan["mode"] == "streamed":
+            const_bytes = _ga_step.ffm_const_bytes(self.executor.fit,
+                                                   self.cfg)
+            if self.stream_tile_islands is not None:
+                t = int(self.stream_tile_islands)
+                budget = (self.vmem_budget if self.vmem_budget is not None
+                          else _ga_step.resident_vmem_budget())
+                need = 2 * _ga_step.resident_vmem_bytes(self.cfg, t,
+                                                        const_bytes)
+                if self.i_local % t or need > budget:
+                    raise ValueError(
+                        f"stream_tile_islands={t} is not a feasible tile: "
+                        f"it must divide the local island count "
+                        f"{self.i_local} and fit double-buffered "
+                        f"(~{need} B vs budget {budget} B)")
+                plan["tile_islands"] = t
+            # the double-buffered working set of one tile — what actually
+            # occupies VMEM while the grid pipeline streams the stack
+            plan["vmem_estimate_bytes"] = 2 * _ga_step.resident_vmem_bytes(
+                self.cfg, plan["tile_islands"], const_bytes)
+        elif plan["mode"].startswith("resident"):
             const_bytes = _ga_step.ffm_const_bytes(self.executor.fit,
                                                    self.cfg)
             plan["vmem_estimate_bytes"] = _ga_step.resident_vmem_bytes(
@@ -711,6 +773,98 @@ class IslandRingTopology(Topology):
                     sq(jnp.mean(y, axis=-1))[..., None])
 
         return self._cached_runner(key, lambda: jax.jit(launch))
+
+    def _streamed_runner(self, k: int):
+        """Jitted HBM-streaming launch: k migration intervals, each ONE
+        `ga_streamed_epoch_kernel` pass tiling the island stack through
+        VMEM (`plan["tile_islands"]` islands per grid step; the Pallas grid
+        pipeline double-buffers the tile loads), with the ring splice
+        running in XLA between passes — all inside one jitted `lax.scan`.
+        The kernel emits PRE-splice elites + worst slots and the scan body
+        applies the same shift-by-one/`splice_at` rule set as
+        `ring_migrate_stack`, so state stays bit-identical to the resident
+        and gridded plans.  On a mesh the launch is shard_mapped and the
+        boundary elite crosses shards via the `ppermute` ring INSIDE the
+        scan body — which is why, unlike resident-sharded, k > 1 intervals
+        fold per launch.  Same (state', by, bx, tb, tm) contract as
+        `_resident_runner` (one trajectory sample per launch)."""
+        tile = self.plan["tile_islands"]
+        key = self._runner_key("streamed", k, tile)
+        E = self.icfg.migrate_every
+        R = self.spec.n_repeats
+        mini = self.spec.minimize
+        migrate = self.spec.migration == "ring"
+        cfg, ffm = self.cfg, self.executor.fit
+        interp = self.executor.interpret
+        mesh, axes = self.mesh, self.icfg.axis_names
+        g4 = (lambda a: a) if R > 1 else (lambda a: a[None])
+        sq = (lambda a: a) if R > 1 else (lambda a: a[0])
+
+        def launch(states):                    # states: [R?, I(_loc), ...]
+            x0 = g4(states.x)
+            n_groups, i_loc = x0.shape[0], x0.shape[1]
+            init = (x0, g4(states.sel_lfsr), g4(states.cross_lfsr),
+                    g4(states.mut_lfsr),
+                    jnp.full((n_groups, i_loc),
+                             jnp.inf if mini else -jnp.inf, jnp.float32),
+                    jnp.zeros((n_groups, i_loc, cfg.v), jnp.uint32))
+
+            def interval(carry, _):
+                x, sel, cross, mut, by, bx = carry
+                outs = _ga_step.ga_streamed_epoch_kernel(
+                    x, sel, cross, mut, cfg=cfg, ffm=ffm, migrate_every=E,
+                    tile_islands=tile, migrate=migrate, interpret=interp)
+                if migrate:
+                    x, sel, cross, mut, ymig, lby, lbx, elite, widx = outs
+                    if mesh is None:
+                        # island 0 receives island I-1's elite — the same
+                        # roll `ring_migrate_stack` writes as a concat
+                        incoming = jnp.concatenate(
+                            [elite[:, -1:], elite[:, :-1]], axis=1)
+                    else:
+                        # one global ring: the last LOCAL island's elite
+                        # crosses to the next shard, whose island 0 takes it
+                        recv = ISL.ring_shift_sharded(elite[:, -1], mesh,
+                                                      axes)
+                        incoming = jnp.concatenate(
+                            [recv[:, None], elite[:, :-1]], axis=1)
+                    x = jax.vmap(ISL.splice_at)(x, widx, incoming)
+                else:
+                    x, sel, cross, mut, ymig, lby, lbx = outs
+                # fold the interval's in-kernel best into the launch best
+                # (strict improvement: earlier intervals win ties, matching
+                # the resident kernel's sequential per-generation fold)
+                better = lby < by if mini else lby > by
+                by = jnp.where(better, lby, by)
+                bx = jnp.where(better[..., None], lbx, bx)
+                return (x, sel, cross, mut, by, bx), ymig
+
+            carry, ys = jax.lax.scan(interval, init, None, length=k)
+            x, sel, cross, mut, by, bx = carry
+            ymig = ys[-1]                      # final interval, pre-splice
+            state = G.GAState(sq(x), sq(sel), sq(cross), sq(mut),
+                              states.k + k * E)
+            tb = jnp.min(ymig, axis=-1) if mini else jnp.max(ymig, axis=-1)
+            return (state, sq(by), sq(bx), sq(tb)[..., None],
+                    sq(jnp.mean(ymig, axis=-1))[..., None])
+
+        fn = launch
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as P
+            from repro.sharding import shard_map
+            lead = () if R == 1 else (None,)
+
+            def pfor(extra):
+                return P(*lead, axes, *([None] * extra))
+
+            state_specs = G.GAState(x=pfor(2), sel_lfsr=pfor(2),
+                                    cross_lfsr=pfor(2), mut_lfsr=pfor(2),
+                                    k=pfor(0))
+            fn = shard_map(
+                launch, mesh, in_specs=(state_specs,),
+                out_specs=(state_specs, pfor(0), pfor(1), pfor(1), pfor(1)))
+
+        return self._cached_runner(key, lambda: jax.jit(fn))
 
     def _resident_sharded_epoch(self):
         """Shard-local epoch body for the resident-sharded plan: one
@@ -830,7 +984,7 @@ class IslandRingTopology(Topology):
         # launch schedule: every plan covers the SAME epochs * E total
         # generations (the rounding contract all modes share), but
         # resident-free paces in raw generations — no ring means no
-        # interval boundary to respect — while resident covers
+        # interval boundary to respect — while resident/streamed cover
         # `per_launch` whole migration intervals per launch and the rest
         # one epoch at a time
         if mode == "resident-free":
@@ -845,8 +999,12 @@ class IslandRingTopology(Topology):
             sched, left = [], epochs
             while left:
                 k = min(per_launch, left)
-                sched.append(self._resident_runner(k) if mode == "resident"
-                             else self._epoch())
+                if mode == "resident":
+                    sched.append(self._resident_runner(k))
+                elif mode == "streamed":
+                    sched.append(self._streamed_runner(k))
+                else:
+                    sched.append(self._epoch())
                 left -= k
             unit = E * per_launch
         # running per-replica best across launches (telemetry arrays get
@@ -871,29 +1029,24 @@ class IslandRingTopology(Topology):
         r = _arg_best(rep_y, mini)
         tb_rep = np.stack(tb_ep, axis=1)                    # [R, launches]
         tm_rep = np.stack(tm_ep, axis=1)
-        extras = {"telemetry_unit_gens": unit,
-                  "n_islands": self.icfg.n_islands,
-                  "n_shards": self.n_shards,
-                  "epoch_mode": mode,
-                  "plan_source": self.plan.get("plan_source", "heuristic"),
-                  "launches": launches,
-                  "migrations": epochs if self.spec.migration == "ring" else 0,
-                  # per-replica views: job packing (PackedEngine) unpacks
-                  # each tenant's best/trajectory from its slot range here
-                  "per_repeat_best": rep_y,
-                  "per_repeat_best_x": rep_x,
-                  "per_repeat_traj_best": tb_rep,
-                  "per_repeat_traj_mean": tm_rep}
-        if "fallback" in self.plan:
-            extras["resident_fallback"] = self.plan["fallback"]
-            extras["plan_fallback"] = self.plan["fallback"]
-        if self.mesh is not None:
-            extras["sharded"] = True
+        tele = RT.RunTelemetry(
+            plan=RT.PlanInfo.from_plan(self.plan),
+            topology=RT.TopologyInfo(
+                n_islands=self.icfg.n_islands,
+                n_shards=self.n_shards,
+                sharded=self.mesh is not None,
+                launches=launches,
+                migrations=(epochs if self.spec.migration == "ring" else 0),
+                telemetry_unit_gens=unit),
+            # per-replica views: job packing (PackedEngine) unpacks each
+            # tenant's best/trajectory from its slot range here
+            per_repeat=RT.ReplicaStats(best=rep_y, best_x=rep_x,
+                                       traj_best=tb_rep, traj_mean=tm_rep))
         return Segment(state=state, best_y=float(rep_y[r]),
                        best_x=rep_x[r],
                        traj_best=reduce(tb_rep, axis=0),
                        traj_mean=tm_rep.mean(axis=0),
-                       gens=epochs * E, extras=extras)
+                       gens=epochs * E, telemetry=tele)
 
 
 TOPOLOGIES: Dict[str, type] = {
@@ -913,14 +1066,19 @@ class ComposedBackend(Backend):
     executor_cls: type = None
     topology_cls: type = None
 
-    def __init__(self, spec: GASpec, *, mesh=None, interpret=None,
-                 cost_table=None, plan_override=None):
-        super().__init__(spec, mesh=mesh, interpret=interpret,
-                         cost_table=cost_table, plan_override=plan_override)
-        self.executor: Executor = self.executor_cls(spec, interpret=interpret)
+    def __init__(self, spec: GASpec, *, options=None, mesh=None,
+                 interpret=None, cost_table=None, plan_override=None):
+        super().__init__(spec, options=options, mesh=mesh,
+                         interpret=interpret, cost_table=cost_table,
+                         plan_override=plan_override)
+        opts = self.options
+        self.executor: Executor = self.executor_cls(
+            spec, interpret=opts.interpret)
         self.topology: Topology = self.topology_cls(
-            spec, self.executor, mesh=mesh, cost_table=self.cost_table,
-            plan_override=plan_override)
+            spec, self.executor, mesh=opts.mesh,
+            cost_table=self.cost_table, plan_override=opts.plan_override,
+            vmem_budget=opts.vmem_budget,
+            stream_tile_islands=opts.stream_tile_islands)
 
     @classmethod
     def supports(cls, spec: GASpec, mesh=None) -> Optional[str]:
@@ -937,8 +1095,10 @@ class ComposedBackend(Backend):
 
     def segment(self, state, gens: int) -> Segment:
         seg = self.topology.segment(state, gens)
-        seg.extras.setdefault("executor", self.executor_cls.name)
-        seg.extras.setdefault("topology", self.topology_cls.name)
+        info = seg.telemetry.topology
+        if info.executor == "-":
+            info.executor = self.executor_cls.name
+            info.topology = self.topology_cls.name
         return seg
 
 
@@ -1012,7 +1172,9 @@ class EagerBackend(Backend):
                        traj_best=reduce(tb, axis=0),
                        traj_mean=np.stack([np.asarray(o.traj_mean)
                                            for o in outs]).mean(axis=0),
-                       gens=gens, extras={"per_repeat_best": per_rep})
+                       gens=gens,
+                       telemetry=RT.RunTelemetry(
+                           per_repeat=RT.ReplicaStats(best=per_rep)))
 
 
 BACKENDS: Dict[str, type] = {

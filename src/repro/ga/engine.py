@@ -35,7 +35,9 @@ import jax
 import numpy as np
 
 from repro.ckpt import checkpoint as CKPT
+from repro.ga import telemetry as RT
 from repro.ga.backends import BACKENDS, Backend, Segment
+from repro.ga.options import EngineOptions, resolve_options
 from repro.ga.spec import GASpec
 
 
@@ -93,7 +95,8 @@ def resolve_backend(spec: GASpec, backend: str = "auto",
 @dataclasses.dataclass
 class EngineResult:
     """Uniform result across backends (fitness in real units — lut-mode
-    fixed-point scaling is already divided out)."""
+    fixed-point scaling is already divided out).  How the run executed is
+    in `telemetry` (ga.RunTelemetry: .plan / .topology / .per_repeat)."""
 
     spec: GASpec
     backend: str
@@ -104,34 +107,49 @@ class EngineResult:
     traj_mean: np.ndarray
     generations: int
     wall_s: float
-    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    telemetry: RT.RunTelemetry = dataclasses.field(
+        default_factory=RT.RunTelemetry)
+
+    @property
+    def extras(self) -> Dict[str, Any]:
+        """DEPRECATED dict view of `telemetry` (one release grace)."""
+        return RT.deprecated_extras(self.telemetry, "EngineResult")
 
 
 class Engine:
     """A spec bound to a backend, with cached compiled runners.
 
-    cost_table / plan_override steer the measured epoch planner (see
-    `Backend` and `repro.autotune`): the default cost_table=None discovers
-    the ambient per-host table, False pins the pure heuristic, and
-    plan_override forces one epoch mode by name.  Neither changes results —
-    plans differ only in launch shape."""
+    Execution knobs ride in one frozen `ga.EngineOptions` (`options=`);
+    the legacy `mesh= / interpret= / cost_table= / plan_override=` kwargs
+    still work and build one internally.  cost_table / plan_override steer
+    the measured epoch planner (see `Backend` and `repro.autotune`): the
+    default cost_table=None discovers the ambient per-host table, False
+    pins the pure heuristic, and plan_override forces one epoch mode by
+    name.  None of these change results — plans differ only in launch
+    shape."""
 
     def __init__(self, spec: GASpec, backend: str = "auto", *,
+                 options: Optional[EngineOptions] = None,
                  mesh=None, interpret: Optional[bool] = None,
                  cost_table=None, plan_override=None):
         self.spec = spec
-        self.backend_name = resolve_backend(spec, backend, mesh)
+        self.options = resolve_options(options, mesh=mesh,
+                                       interpret=interpret,
+                                       cost_table=cost_table,
+                                       plan_override=plan_override)
+        self.backend_name = resolve_backend(spec, backend, self.options.mesh)
         self.backend: Backend = BACKENDS[self.backend_name](
-            spec, mesh=mesh, interpret=interpret, cost_table=cost_table,
-            plan_override=plan_override)
+            spec, options=self.options)
 
     def init_state(self):
         return self.backend.init()
 
     def _result(self, seg: Segment, wall_s: float) -> EngineResult:
         scale = self.spec.fitness_scale()
-        seg.extras.setdefault("problem", self.spec.problem or "blackbox")
-        seg.extras.setdefault("n_vars", self.spec.v)
+        tele = seg.telemetry
+        if tele.problem is None:
+            tele.problem = self.spec.problem or "blackbox"
+            tele.n_vars = self.spec.v
         return EngineResult(
             spec=self.spec, backend=self.backend_name,
             best_fitness=seg.best_y / scale,
@@ -139,7 +157,7 @@ class Engine:
             best_params=self.spec.decode(seg.best_x),
             traj_best=np.asarray(seg.traj_best) / scale,
             traj_mean=np.asarray(seg.traj_mean) / scale,
-            generations=seg.gens, wall_s=wall_s, extras=seg.extras)
+            generations=seg.gens, wall_s=wall_s, telemetry=tele)
 
     def run(self, generations: Optional[int] = None,
             state=None) -> EngineResult:
@@ -224,7 +242,7 @@ class Engine:
             state = seg.state
             done += seg.gens
             chunk_idx += 1
-            migrations += int(seg.extras.get("migrations", 0))
+            migrations += seg.telemetry.topology.migrations
             if best_y is None or (seg.best_y < best_y if mini
                                   else seg.best_y > best_y):
                 best_y, best_x = seg.best_y, np.asarray(seg.best_x)
@@ -250,19 +268,20 @@ class Engine:
                 "problem": self.spec.problem or "blackbox",
                 "n_vars": self.spec.v,
                 "migrations": migrations,
-                "telemetry_unit_gens": int(
-                    seg.extras.get("telemetry_unit_gens", 1)),
-                "extras": seg.extras,
+                "telemetry_unit_gens": seg.telemetry.topology
+                                          .telemetry_unit_gens,
+                "telemetry": seg.telemetry,
             }
 
 
 def solve(spec: GASpec, backend: str = "auto", *,
-          generations: Optional[int] = None, mesh=None,
+          generations: Optional[int] = None,
+          options: Optional[EngineOptions] = None, mesh=None,
           interpret: Optional[bool] = None, cost_table=None,
           plan_override=None) -> EngineResult:
     """Run a GASpec end to end and return the uniform result."""
-    return Engine(spec, backend, mesh=mesh, interpret=interpret,
-                  cost_table=cost_table,
+    return Engine(spec, backend, options=options, mesh=mesh,
+                  interpret=interpret, cost_table=cost_table,
                   plan_override=plan_override).run(generations)
 
 
@@ -285,11 +304,16 @@ class PackedEngine:
     `run_chunked` mirrors `Engine.run_chunked` (chunked telemetry +
     checkpoint/resume — the scheduler's preemption primitive) but yields a
     pack-level dict whose `"jobs"` list carries one Engine-style telemetry
-    dict per job, unpacked from the per-replica segment extras."""
+    dict per job, unpacked from the segment's per-replica telemetry."""
 
     def __init__(self, specs, backend: str = "auto", *,
+                 options: Optional[EngineOptions] = None,
                  mesh=None, interpret: Optional[bool] = None,
                  cost_table=None, plan_override=None):
+        self.options = resolve_options(options, mesh=mesh,
+                                       interpret=interpret,
+                                       cost_table=cost_table,
+                                       plan_override=plan_override)
         specs = list(specs)
         if not specs:
             raise ValueError("PackedEngine needs at least one spec")
@@ -312,7 +336,8 @@ class PackedEngine:
             off += s.n_repeats
         self.n_slots = off
         self.batch_spec = dataclasses.replace(specs[0], n_repeats=self.n_slots)
-        self.backend_name = resolve_backend(self.batch_spec, backend, mesh)
+        self.backend_name = resolve_backend(self.batch_spec, backend,
+                                            self.options.mesh)
         if self.backend_name == "eager":
             raise BackendUnsupported(
                 "the eager backend steps replicas in a host loop — nothing "
@@ -321,14 +346,12 @@ class PackedEngine:
         # plain Engine (same result layout, zero packing overhead)
         self._solo: Optional[Engine] = None
         if self.n_slots == 1:
-            self._solo = Engine(specs[0], self.backend_name, mesh=mesh,
-                                interpret=interpret, cost_table=cost_table,
-                                plan_override=plan_override)
+            self._solo = Engine(specs[0], self.backend_name,
+                                options=self.options)
             self.backend = self._solo.backend
         else:
             self.backend = BACKENDS[self.backend_name](
-                self.batch_spec, mesh=mesh, interpret=interpret,
-                cost_table=cost_table, plan_override=plan_override)
+                self.batch_spec, options=self.options)
 
     def init_state(self):
         if self._solo is not None:
@@ -336,7 +359,7 @@ class PackedEngine:
         return self.backend.init_packed(list(self.seeds))
 
     def _job_tele(self, j: int, *, chunk_idx, done, total, dt, seg_gens,
-                  slot_y, slot_x, chunk_y, traj, migrations, extras):
+                  slot_y, slot_x, chunk_y, traj, migrations, telemetry):
         off, cnt = self.slots[j]
         spec = self.specs[j]
         scale = spec.fitness_scale()
@@ -359,13 +382,12 @@ class PackedEngine:
             "problem": spec.problem or "blackbox",
             "n_vars": spec.v,
             "migrations": migrations,
-            "telemetry_unit_gens": int(extras.get("telemetry_unit_gens", 1)),
+            "telemetry_unit_gens": (telemetry.topology.telemetry_unit_gens
+                                    if telemetry is not None else 1),
             "job_index": j, "pack_size": len(self.specs),
             "slots": (off, cnt),
-            "extras": {k: extras[k] for k in ("n_islands", "n_shards",
-                                              "epoch_mode", "plan_source",
-                                              "plan_fallback")
-                       if k in extras},
+            "telemetry": (telemetry.job_view()
+                          if telemetry is not None else None),
         }
 
     def run_chunked(self, *, chunk_generations: Optional[int] = None,
@@ -435,7 +457,8 @@ class PackedEngine:
                 "jobs": [self._job_tele(
                     j, chunk_idx=chunk_idx, done=done, total=total, dt=0.0,
                     seg_gens=0, slot_y=slot_y, slot_x=slot_x, chunk_y=slot_y,
-                    traj=slot_y[:, None], migrations=migrations, extras={})
+                    traj=slot_y[:, None], migrations=migrations,
+                    telemetry=None)
                     for j in range(len(self.specs))],
             }
             return
@@ -448,13 +471,11 @@ class PackedEngine:
             state = seg.state
             done += seg.gens
             chunk_idx += 1
-            migrations += int(seg.extras.get("migrations", 0))
-            by = np.asarray(seg.extras["per_repeat_best"],
-                            np.float32).reshape(L)
-            bx = np.asarray(seg.extras["per_repeat_best_x"],
-                            np.uint32).reshape(L, spec.v)
-            traj = np.asarray(seg.extras["per_repeat_traj_best"],
-                              np.float32).reshape(L, -1)
+            migrations += seg.telemetry.topology.migrations
+            rep = seg.telemetry.per_repeat
+            by = np.asarray(rep.best, np.float32).reshape(L)
+            bx = np.asarray(rep.best_x, np.uint32).reshape(L, spec.v)
+            traj = np.asarray(rep.traj_best, np.float32).reshape(L, -1)
             better = by < slot_y if mini else by > slot_y
             slot_y = np.where(better, by, slot_y)
             slot_x = np.where(better[:, None], bx, slot_x)
@@ -476,7 +497,8 @@ class PackedEngine:
                     j, chunk_idx=chunk_idx, done=done, total=total, dt=dt,
                     seg_gens=seg.gens, slot_y=slot_y, slot_x=slot_x,
                     chunk_y=by, traj=traj, migrations=migrations,
-                    extras=seg.extras) for j in range(len(self.specs))],
+                    telemetry=seg.telemetry)
+                    for j in range(len(self.specs))],
             }
 
     def run(self, *, chunk_generations: Optional[int] = None):

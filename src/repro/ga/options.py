@@ -1,0 +1,119 @@
+"""`EngineOptions` — one frozen options object for every engine entry point.
+
+`Engine`, `PackedEngine`, `GAScheduler` and the `ga_run` / `ga_serve` /
+`ga_autotune` CLIs all take the same execution knobs; before this object
+each grew its own `mesh= / interpret= / cost_table= / plan_override=`
+kwarg tail, and new knobs (the streamed mode's tile size, a forced VMEM
+budget) would have widened five signatures.  Now they live in one place:
+
+    opts = ga.EngineOptions(mesh=mesh, plan_override="streamed")
+    ga.solve(spec, backend="fused-islands", options=opts)
+
+The legacy kwargs still work on every constructor (they build an
+`EngineOptions` internally via `resolve_options`), but mixing `options=`
+with a non-default legacy kwarg is an error — one source of truth.
+
+Knobs:
+  * mesh — jax Mesh the island axis shards over (None = single device).
+  * interpret — force Pallas interpret mode (None = auto: CPU hosts).
+  * cost_table — autotune CostTable | path | None (ambient discovery) |
+    False (disable measured planning).
+  * plan_override — force an epoch mode ("gridded", "resident",
+    "resident-sharded", "resident-free", "streamed"); infeasible forces
+    raise with the feasibility reason.
+  * vmem_budget — override the resident/streamed VMEM feasibility budget
+    (bytes) for PLANNING only; the kernels still validate tiles against
+    the real (env-derived) budget.  Lets benches/smokes exercise the
+    streamed lane on small populations.
+  * stream_tile_islands — pin the streamed mode's island tile size
+    (must divide the local island count and fit double-buffered).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+PLAN_MODES = ("gridded", "resident", "resident-sharded", "resident-free",
+              "streamed")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    mesh: Any = None
+    interpret: Optional[bool] = None
+    cost_table: Any = None
+    plan_override: Optional[str] = None
+    vmem_budget: Optional[int] = None
+    stream_tile_islands: Optional[int] = None
+
+    def __post_init__(self):
+        if (self.plan_override is not None
+                and self.plan_override not in PLAN_MODES):
+            raise ValueError(
+                f"plan_override must be one of {PLAN_MODES}, "
+                f"got {self.plan_override!r}")
+        for field in ("vmem_budget", "stream_tile_islands"):
+            val = getattr(self, field)
+            if val is not None and int(val) < 1:
+                raise ValueError(f"{field} must be >= 1, got {val!r}")
+
+    # ---- one flags→options parser shared by the CLIs --------------------
+
+    @staticmethod
+    def add_cli_args(ap) -> None:
+        """Attach the shared engine-option flags to an ArgumentParser."""
+        ap.add_argument("--cost-table", default=None, metavar="PATH",
+                        help="autotune cost table for measured epoch plans "
+                             "(default: ambient per-host table; 'off' "
+                             "disables measured planning)")
+        ap.add_argument("--plan-override", default=None, choices=PLAN_MODES,
+                        help="force an epoch mode instead of the planner's "
+                             "choice (errors if infeasible)")
+        ap.add_argument("--vmem-budget", type=int, default=None,
+                        metavar="BYTES",
+                        help="override the planner's VMEM feasibility "
+                             "budget (exercises the streamed lane on small "
+                             "populations)")
+        ap.add_argument("--stream-tile-islands", type=int, default=None,
+                        metavar="T",
+                        help="pin the streamed mode's island tile size")
+
+    @classmethod
+    def from_args(cls, args, *, mesh=None,
+                  interpret: Optional[bool] = None) -> "EngineOptions":
+        """Build options from parsed CLI args (+ an already-built mesh)."""
+        ct = getattr(args, "cost_table", None)
+        if isinstance(ct, str) and ct.lower() in ("off", "none", "0"):
+            ct = False
+        return cls(mesh=mesh, interpret=interpret, cost_table=ct,
+                   plan_override=getattr(args, "plan_override", None),
+                   vmem_budget=getattr(args, "vmem_budget", None),
+                   stream_tile_islands=getattr(args, "stream_tile_islands",
+                                               None))
+
+
+def resolve_options(options: Optional[EngineOptions] = None, *,
+                    mesh=None, interpret=None, cost_table=None,
+                    plan_override=None) -> EngineOptions:
+    """Fold a constructor's legacy kwarg tail into one EngineOptions.
+
+    With no `options=`, the legacy kwargs build one.  With `options=`, any
+    non-default legacy kwarg is rejected — two sources of truth for the
+    same knob is exactly the ambiguity this object removes."""
+    if options is None:
+        return EngineOptions(mesh=mesh, interpret=interpret,
+                             cost_table=cost_table,
+                             plan_override=plan_override)
+    if not isinstance(options, EngineOptions):
+        raise TypeError(f"options must be ga.EngineOptions, "
+                        f"got {type(options).__name__}")
+    clash = [name for name, val in (("mesh", mesh), ("interpret", interpret),
+                                    ("cost_table", cost_table),
+                                    ("plan_override", plan_override))
+             if val is not None]
+    if clash:
+        raise ValueError(
+            f"got both options= and legacy kwarg(s) {clash}: move them "
+            "into EngineOptions (dataclasses.replace(options, ...))")
+    return options

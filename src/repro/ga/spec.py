@@ -76,14 +76,16 @@ class GASpec:
     # of it (validated here; migration="none" has no interval boundary and
     # is exempt — for it the planner offers the RESIDENT-FREE mode, which
     # folds the full gens_per_epoch in one VMEM-resident launch with no
-    # migration pauses and no whole-multiple rule).  Which feasible mode
-    # actually runs is the two-tier epoch-plan decision (kernels/ga_step
-    # module docstring): the VMEM byte estimator gates feasibility, and an
-    # autotune cost table — when one covers the spec — picks the best
-    # MEASURED gens/s among the survivors (extras["epoch_mode"] /
-    # extras["plan_source"] / extras["plan_fallback"] report the outcome;
-    # with no table the choice is the original static heuristic,
-    # bit-identically).
+    # migration pauses and no whole-multiple rule).  When the stack does
+    # NOT fit the VMEM budget, the STREAMED mode tiles the island axis
+    # through VMEM with a double-buffered HBM pipeline instead of giving
+    # up kernel residency.  Which feasible mode actually runs is the
+    # two-tier epoch-plan decision (kernels/ga_step module docstring): the
+    # VMEM byte estimator gates feasibility, and an autotune cost table —
+    # when one covers the spec — picks the best MEASURED gens/s among the
+    # survivors (result.telemetry.plan — mode / source / fallback — reports
+    # the outcome; with no table the choice is the original static
+    # heuristic, bit-identically).
     gens_per_epoch: int = 1
 
     # ---- topology (how populations are arranged + exchanged) ------------

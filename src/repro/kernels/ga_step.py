@@ -58,13 +58,27 @@ Epoch planning & VMEM budget — the TWO-TIER decision:
     `migration="none"` ablation has no ring to run, so one launch folds the
     WHOLE `gens_per_epoch` (any value, no whole-multiple rule) with zero
     in-kernel migration work.
+  * streamed (`ga_streamed_epoch_kernel`) — the HBM-streaming lane for
+    populations PAST the residency budget: the island axis joins the grid
+    in tiles of `tile_islands` islands, and Pallas's grid pipeline
+    double-buffers the tile loads (the next tile's HBM→VMEM copy overlaps
+    the current tile's `migrate_every` generations), so only ~2 tiles of
+    working set ever occupy VMEM.  Elite/worst-slot extraction still runs
+    in-kernel per tile; the ring splice between tiles runs in XLA between
+    kernel passes, inside one jitted `lax.scan` over the migration
+    intervals (sharded meshes `ppermute` the boundary elite inside the
+    same scan, so unlike resident-sharded a launch folds k > 1 intervals).
+    `streamed_tile_islands` picks the largest island tile whose
+    double-buffered working set fits; when a spec outgrows residency the
+    planner now prefers this mode over the gridded fallback.
 
   tier 2 — SELECTION (measured, `repro.autotune`): among feasible
   candidates the planner picks the best *measured* gens/s from a per-host
   cost table when one covers the spec, and otherwise keeps the first
   candidate — `epoch_mode_candidates` orders candidates so that index 0 IS
-  the historical heuristic (resident when it fits, else gridded), making
-  the no-table path bit-identical to the pre-measurement planner.
+  the heuristic (resident when it fits, else streamed when a tile fits,
+  else gridded), making the no-table path deterministic without
+  measurement.
 
   The VMEM estimator: the island state stack (population + LFSR banks +
   fitness) PLUS the per-island one-hot tournament set — which materializes
@@ -132,6 +146,26 @@ def _lfsr_draw(state, steps: int):
         state = out
         steps -= t
     return state
+
+
+def _lfsr_draw_banks(banks, steps: int):
+    """One fused GF(2) leap advancing several LFSR banks at once.
+
+    The paper clocks its three RNG banks (selection / crossover / mutation)
+    in lockstep; leaping each bank separately pays the leap-table mask loop
+    three times per generation.  The leap is elementwise in the register
+    word and every bank advances by the same `steps`, so the banks
+    concatenate — each flattened to one (1, size) lane row — into a single
+    register file, ONE `_lfsr_draw` advances everything, and the result
+    splits back.  Bit-identical per element to leaping each bank alone."""
+    flat = jnp.concatenate([b.reshape(1, -1) for b in banks], axis=1)
+    flat = _lfsr_draw(flat, steps)
+    out, off = [], 0
+    for b in banks:
+        size = int(np.prod(b.shape))
+        out.append(flat[:, off:off + size].reshape(b.shape))
+        off += size
+    return tuple(out)
 
 
 def _onehot_gather_u32(oh: jax.Array, x: jax.Array) -> jax.Array:
@@ -251,18 +285,40 @@ def resident_fit_reason(cfg: GAConfig, n_islands: int, const_bytes: int = 0,
     return None
 
 
+def streamed_tile_islands(cfg: GAConfig, i_local: int, const_bytes: int = 0,
+                          budget: int = None) -> int:
+    """The streamed lane's VMEM tile estimator: the largest island-tile size
+    T (a divisor of `i_local`) whose DOUBLE-BUFFERED working set fits the
+    budget — the grid pipeline prefetches the next tile's block while the
+    current one computes, so ~2 tiles of state + one-hot scratch (+ the
+    hoisted FFM consts, replicated per buffer: conservative) live in VMEM
+    at once.  None when even a single double-buffered island won't fit —
+    then only the gridded fallback remains."""
+    budget = resident_vmem_budget() if budget is None else budget
+    for t in range(i_local, 0, -1):
+        if i_local % t:
+            continue
+        if 2 * resident_vmem_bytes(cfg, t, const_bytes) <= budget:
+            return t
+    return None
+
+
 def epoch_mode_candidates(cfg: GAConfig, i_local: int, const_bytes: int = 0,
                           *, executor: str, migration: str,
                           gens_per_epoch: int, migrate_every: int,
                           sharded: bool, budget: int = None) -> list:
     """Tier 1 of the epoch plan: the FEASIBLE launch shapes for a spec,
-    ordered so candidates[0] is the historical heuristic choice (what a
-    planner with no cost table must pick, bit-identically).
+    ordered so candidates[0] is the heuristic choice (what a planner with
+    no cost table must pick, deterministically).
 
     Each candidate is a plan dict: {"mode", "epochs_per_launch",
     "gens_per_launch"} (+ "fallback" carrying the VMEM-estimator reason when
-    a resident shape was rejected).  `gens_per_launch` is the generations
-    one kernel launch folds — the cost table's interpolation axis.
+    a resident shape was rejected, + "tile_islands" for the streamed mode).
+    `gens_per_launch` is the generations one kernel launch folds — the cost
+    table's interpolation axis.  When the resident stack exceeds the budget
+    the streamed lane — NOT gridded — is the heuristic for ring migration:
+    it keeps kernel throughput at any population size, which is the lane's
+    whole point.
     """
     # the gridded path launches one migrate_every-generation epoch at a
     # time; the fused executor's block folds min(gens_per_epoch, E) of those
@@ -276,7 +332,14 @@ def epoch_mode_candidates(cfg: GAConfig, i_local: int, const_bytes: int = 0,
     if migration == "ring" and gens_per_epoch >= migrate_every:
         reason = resident_fit_reason(cfg, i_local, const_bytes, budget)
         if reason is not None:
-            return [dict(gridded, fallback=reason)]
+            tile = streamed_tile_islands(cfg, i_local, const_bytes, budget)
+            if tile is None:
+                return [dict(gridded, fallback=reason)]
+            k = max(1, gens_per_epoch // migrate_every)
+            return [{"mode": "streamed", "epochs_per_launch": k,
+                     "gens_per_launch": k * migrate_every,
+                     "tile_islands": tile, "fallback": reason},
+                    dict(gridded, fallback=reason)]
         if sharded:
             return [{"mode": "resident-sharded", "epochs_per_launch": 1,
                      "gens_per_launch": migrate_every}, gridded]
@@ -290,7 +353,17 @@ def epoch_mode_candidates(cfg: GAConfig, i_local: int, const_bytes: int = 0,
         # forced via plan_override), never silently.
         reason = resident_fit_reason(cfg, i_local, const_bytes, budget)
         if reason is not None:
-            return [dict(gridded, fallback=reason)]
+            # gridded stays the heuristic for migration="none" (matching the
+            # fitting case below); a feasible streamed tile is offered for
+            # measurement/plan_override to pick.
+            tile = streamed_tile_islands(cfg, i_local, const_bytes, budget)
+            out = [dict(gridded, fallback=reason)]
+            if tile is not None:
+                k = max(1, gens_per_epoch // migrate_every)
+                out.append({"mode": "streamed", "epochs_per_launch": k,
+                            "gens_per_launch": k * migrate_every,
+                            "tile_islands": tile, "fallback": reason})
+            return out
         return [gridded,
                 {"mode": "resident-free",
                  "epochs_per_launch": max(1, gens_per_epoch // migrate_every),
@@ -411,11 +484,14 @@ def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
     n, v, c = cfg.n, cfg.v, cfg.c
     var_mask = jnp.uint32((1 << c) - 1)
 
+    # ---- RNG: ONE fused GF(2) leap clocks all three LFSR banks -----------
+    sel, cross, mut = _lfsr_draw_banks((sel_in, cross_in, mut_in),
+                                       cfg.steps_per_draw)
+
     # ---- FFM (pluggable traced stage: decode + problem expression, VPU) --
     y = jnp.asarray(ffm(x), jnp.float32)                  # (N,)
 
     # ---- SM: tournaments via one-hot MXU gathers --------------------------
-    sel = _lfsr_draw(sel_in, cfg.steps_per_draw)          # (2, N)
     i1 = (sel[0] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)
     i2 = (sel[1] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)
     iota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
@@ -428,7 +504,6 @@ def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
     w = _onehot_gather_u32(ohw, x)                        # (N, V)
 
     # ---- CM: mask-shift single-point crossover ----------------------------
-    cross = _lfsr_draw(cross_in, cfg.steps_per_draw)      # (V, N/2)
     cut = (cross >> jnp.uint32(32 - cfg.cut_bits)).astype(jnp.uint32)
     cut = jnp.minimum(cut, jnp.uint32(c))
     s = (var_mask >> cut).T                               # (N/2, V)
@@ -439,7 +514,6 @@ def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
     z = jnp.stack([z1, z2], axis=1).reshape(n, v)
 
     # ---- MM: XOR-mutate the first P --------------------------------------
-    mut = _lfsr_draw(mut_in, cfg.steps_per_draw)          # (V, N)
     rbits = (mut >> jnp.uint32(32 - c)).T                 # (N, V)
     mut_row = (jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0) < cfg.p)
     x_new = jnp.where(mut_row, z ^ rbits, z)
@@ -685,6 +759,163 @@ def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
     return pl.pallas_call(
         kernel,
         grid=(g_grid,),
+        in_specs=state_blks + [cblk(c.shape[1]) for c in flat_consts],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        **call_kwargs,
+    )(x, sel, cross, mut, *flat_consts)
+
+
+# ---------------------------------------------------------------------------
+# Streamed-epoch kernel: HBM→VMEM island tiles through the grid pipeline
+# ---------------------------------------------------------------------------
+
+
+def _streamed_body(x_ref, sel_ref, cross_ref, mut_ref,       # inputs
+                   *rest,                                    # consts + outputs
+                   cfg: GAConfig, ffm, const_shapes=(),
+                   migrate_every: int, migrate: bool = True):
+    """One migration interval for ONE island tile of a streamed epoch.
+
+    The block holds `tile_islands` islands — a slice of the island axis, not
+    the whole stack — so the working set is bounded by the tile, not the
+    population.  Each tile runs `migrate_every` vmapped generations with the
+    per-generation best fold (identical math to `_epoch_body`), evaluates
+    the migration fitness in-kernel, and — when a ring runs — emits the
+    per-island elites and worst slots so the caller can splice the shifted
+    elites in XLA between kernel passes.  The outputs are therefore
+    PRE-splice; `elites_stack`/`worst_slot` in here and `splice_at` outside
+    are the same rule set `ring_migrate_stack` composes, so the streamed
+    interval stays bit-identical to the resident and gridded plans."""
+    n_consts = len(const_shapes)
+    const_refs, out_refs = rest[:n_consts], rest[n_consts:]
+    if n_consts:
+        consts = [r[0].reshape(s) for r, s in zip(const_refs, const_shapes)]
+        ffm_stage = lambda x: ffm(x, *consts)
+    else:
+        ffm_stage = ffm
+    if migrate:
+        (x_out, sel_out, cross_out, mut_out, y_out, by_out, bx_out,
+         ex_out, w_out) = out_refs
+    else:
+        x_out, sel_out, cross_out, mut_out, y_out, by_out, bx_out = out_refs
+    mini = cfg.minimize
+    t_islands = x_ref.shape[1]
+
+    vgen = jax.vmap(functools.partial(_one_generation, cfg=cfg,
+                                      ffm=ffm_stage))
+    vfit = jax.vmap(lambda xx: jnp.asarray(ffm_stage(xx), jnp.float32))
+
+    def gen_step(carry):
+        x, sel, cross, mut, y, by, bx = carry
+        x2, sel2, cross2, mut2, y2 = vgen(x, sel, cross, mut, y)
+        gx, gb = ISL.elites_stack(x, y2, minimize=mini)   # y2 scores x
+        better = gb < by if mini else gb > by
+        by = jnp.where(better, gb, by)
+        bx = jnp.where(better[:, None], gx, bx)
+        return (x2, sel2, cross2, mut2, y2, by, bx)
+
+    init = (x_ref[0], sel_ref[0], cross_ref[0], mut_ref[0],
+            jnp.zeros((t_islands, cfg.n), jnp.float32),
+            jnp.full((t_islands,), jnp.inf if mini else -jnp.inf,
+                     jnp.float32),
+            jnp.zeros((t_islands, cfg.v), jnp.uint32))
+    carry = jax.lax.fori_loop(0, migrate_every, lambda _, c: gen_step(c),
+                              init)
+    x, sel, cross, mut, _y, by, bx = carry
+    ymig = vfit(x)                                        # scores final pops
+    x_out[0], sel_out[0], cross_out[0], mut_out[0] = x, sel, cross, mut
+    y_out[0], by_out[0], bx_out[0] = ymig, by, bx
+    if migrate:
+        elite_x, _elite_y = ISL.elites_stack(x, ymig, minimize=mini)
+        ex_out[0] = elite_x
+        w_out[0] = ISL.worst_slot(ymig, minimize=mini)
+
+
+def ga_streamed_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig,
+                             ffm: FfmStage, migrate_every: int,
+                             tile_islands: int, migrate: bool = True,
+                             interpret: bool = False,
+                             vmem_limit_bytes: int = None
+                             ) -> Tuple[jax.Array, ...]:
+    """One migration interval streamed through VMEM in island tiles.
+
+    x: uint32[G, I, N, V] (+ the sel/cross/mut LFSR banks, same leading
+    axes): G replica groups × I islands, tiled through the kernel
+    `tile_islands` islands at a time over grid (G, I // tile_islands).
+    Pallas's grid pipeline double-buffers the block loads — the next tile's
+    HBM→VMEM copy overlaps the current tile's `migrate_every` generations —
+    so populations far past `resident_vmem_budget()` keep kernel throughput.
+
+    Returns (x', sel', cross', mut', y[G, I, N], best_y[G, I],
+    best_x[G, I, V]) plus, when migrate=True, (elite_x[G, I, V],
+    worst_idx[G, I]) — the PRE-splice migration ingredients.  The caller
+    owns the ring: shift the elites by one island (`ppermute` across shards
+    at the boundary) and `islands.splice_at` the worst slots in XLA, then
+    feed the spliced state to the next interval's kernel pass (see
+    `ga/backends.IslandRingTopology._streamed_runner`).  migrate=False (the
+    `migration="none"` ablation) skips the elite outputs and the caller
+    skips the splice.
+
+    Callers should consult `streamed_tile_islands` first; this function
+    raises on a tile whose double-buffered working set exceeds the REAL
+    budget (env-derived — a planner-forced smaller budget never makes a
+    legitimate tile illegal here).
+    """
+    assert cfg.n & (cfg.n - 1) == 0, "kernel path requires power-of-two N"
+    assert cfg.n <= 1024, "one-hot (N,N) must fit VMEM; use more islands"
+    assert migrate_every >= 1 and tile_islands >= 1
+    g_grid, i_islands, n, v = x.shape
+    assert (n, v) == (cfg.n, cfg.v)
+    assert i_islands % tile_islands == 0, \
+        f"tile_islands={tile_islands} must divide the island count {i_islands}"
+
+    ffm_conv, const_shapes, flat_consts, const_bytes = _hoist_ffm(ffm, n, v)
+    _check_const_gate(const_bytes)
+    need = 2 * resident_vmem_bytes(cfg, tile_islands, const_bytes)
+    real_budget = resident_vmem_budget()
+    if need > real_budget:
+        raise ValueError(
+            f"streamed tile of {tile_islands} island(s) at N={cfg.n} needs "
+            f"~{need} B of VMEM double-buffered (> budget {real_budget} B); "
+            "use streamed_tile_islands to size the tile")
+
+    blk = lambda *shape: pl.BlockSpec(
+        (1, tile_islands) + shape,
+        lambda g, t: (g, t) + (0,) * len(shape))
+    cblk = lambda k: pl.BlockSpec((1, k), lambda g, t: (0, 0))
+    kernel = functools.partial(_streamed_body, cfg=cfg, ffm=ffm_conv,
+                               const_shapes=const_shapes,
+                               migrate_every=migrate_every, migrate=migrate)
+    state_blks = [blk(n, v), blk(2, n), blk(v, n // 2), blk(v, n)]
+    state_shapes = [
+        jax.ShapeDtypeStruct((g_grid, i_islands, n, v), jnp.uint32),
+        jax.ShapeDtypeStruct((g_grid, i_islands, 2, n), jnp.uint32),
+        jax.ShapeDtypeStruct((g_grid, i_islands, v, n // 2), jnp.uint32),
+        jax.ShapeDtypeStruct((g_grid, i_islands, v, n), jnp.uint32),
+    ]
+    out_specs = state_blks + [blk(n), blk(), blk(v)]
+    out_shape = state_shapes + [
+        jax.ShapeDtypeStruct((g_grid, i_islands, n), jnp.float32),
+        jax.ShapeDtypeStruct((g_grid, i_islands), jnp.float32),
+        jax.ShapeDtypeStruct((g_grid, i_islands, v), jnp.uint32),
+    ]
+    if migrate:
+        out_specs += [blk(v), blk()]
+        out_shape += [jax.ShapeDtypeStruct((g_grid, i_islands, v),
+                                           jnp.uint32),
+                      jax.ShapeDtypeStruct((g_grid, i_islands), jnp.int32)]
+    call_kwargs = {}
+    if vmem_limit_bytes is not None and not interpret:
+        from jax.experimental.pallas import tpu as pltpu
+        params_cls = (getattr(pltpu, "CompilerParams", None)
+                      or getattr(pltpu, "TPUCompilerParams"))
+        call_kwargs["compiler_params"] = params_cls(
+            vmem_limit_bytes=int(vmem_limit_bytes))
+    return pl.pallas_call(
+        kernel,
+        grid=(g_grid, i_islands // tile_islands),
         in_specs=state_blks + [cblk(c.shape[1]) for c in flat_consts],
         out_specs=out_specs,
         out_shape=out_shape,

@@ -10,7 +10,9 @@
 
 For every (problem, gens_per_epoch, migration) shape this times each
 feasible epoch mode — gridded, resident, resident-sharded (with --mesh),
-resident-free (migration=none) — by forcing it with `plan_override` and
+resident-free (migration=none), streamed (when the resident stack exceeds
+the VMEM budget; `--vmem-budget` forces that on small shapes) — by forcing
+it with `plan_override` and
 replaying segments until the timing is stable.  The resulting
 `repro.autotune.CostTable` is what `Engine(..., cost_table=...)`, the
 serving scheduler and the benchmarks consume: among VMEM-feasible modes
@@ -70,7 +72,9 @@ def main():
                     help="fold new points into an existing table at --out "
                          "instead of replacing it")
     ap.add_argument("--seed", type=int, default=1)
-    args = ap.parse_args()
+    from repro.ga.options import EngineOptions
+    EngineOptions.add_cli_args(ap)   # --vmem-budget etc. (the sweep itself
+    args = ap.parse_args()           # forces cost_table/plan_override)
 
     from repro.autotune import (CostTable, default_table_path,
                                 host_fingerprint, sweep)
@@ -100,9 +104,10 @@ def main():
     if table is None:
         table = CostTable(host=host_fingerprint())
 
+    options = EngineOptions.from_args(args, mesh=mesh)
     print(f"sweeping {len(specs)} spec(s) x feasible modes "
           f"(backend={args.backend})")
-    sweep(specs, backend=args.backend, mesh=mesh, table=table,
+    sweep(specs, backend=args.backend, options=options, table=table,
           max_reps=args.reps, cov_threshold=args.cov, log=print)
     table.save(out)
     print(f"wrote {len(table)} measured point(s) -> {out}")

@@ -80,6 +80,8 @@ def main():
                     help="opt-in: serve GA_METRICS as Prometheus text at "
                          "http://0.0.0.0:PORT/metrics for the run's duration")
     ap.add_argument("--seed", type=int, default=1)
+    from repro.ga.options import EngineOptions
+    EngineOptions.add_cli_args(ap)   # --cost-table/--plan-override/--vmem-...
     args = ap.parse_args()
 
     from repro import ga
@@ -112,6 +114,7 @@ def main():
         from repro.launch.mesh import parse_mesh
         mesh = parse_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)} ({mesh.devices.size} device(s))")
+    options = EngineOptions.from_args(args, mesh=mesh)
 
     server = None
     if args.metrics_port is not None:
@@ -121,7 +124,7 @@ def main():
 
     if args.chunk > 0 or server is not None:
         from repro.serve.engine import GA_METRICS
-        eng = ga.Engine(spec, backend, mesh=mesh)
+        eng = ga.Engine(spec, backend, options=options)
         last = None
         job = GA_METRICS.start_job(
             GA_METRICS.allocate_job_id(spec.problem), backend=eng.backend_name,
@@ -149,18 +152,23 @@ def main():
             print(f"decoded vars: {np.round(last['best_params'], 4)}")
         return
 
-    out = ga.solve(spec, backend=backend, mesh=mesh)
-    exec_name = out.extras.get("executor")
-    topo_name = out.extras.get("topology")
-    comp = f" ({exec_name} x {topo_name})" if exec_name and topo_name else ""
+    out = ga.solve(spec, backend=backend, options=options)
+    tele = out.telemetry
+    comp = (f" ({tele.topology.executor} x {tele.topology.topology})"
+            if tele.topology.executor != "-" else "")
     print(f"backend: {out.backend}{comp}")
-    print(f"problem: {out.extras.get('problem', spec.problem)} "
+    print(f"problem: {tele.problem or spec.problem or 'blackbox'} "
           f"({spec.v} variable(s), mode={mode})")
-    if out.extras.get("sharded"):
-        print(f"shards: {out.extras['n_shards']} "
-              f"({spec.n_islands // out.extras['n_shards']} island(s) each)")
-    if out.extras.get("migrations"):
-        print(f"migrations: {out.extras['migrations']}")
+    if tele.topology.sharded:
+        shards = max(1, tele.topology.n_shards)
+        print(f"shards: {shards} "
+              f"({spec.n_islands // shards} island(s) each)")
+    if tele.plan.mode != "-":
+        tile = (f", tile={tele.plan.tile_islands}"
+                if tele.plan.tile_islands else "")
+        print(f"epoch plan: {tele.plan.mode} ({tele.plan.source}{tile})")
+    if tele.topology.migrations:
+        print(f"migrations: {tele.topology.migrations}")
     print(f"best fitness: {out.best_fitness:.4f}")
     print(f"decoded vars: {np.round(out.best_params, 4)}")
     traj = np.asarray(out.traj_best)

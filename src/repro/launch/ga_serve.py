@@ -71,13 +71,11 @@ def main():
     ap.add_argument("--job-ttl", type=float, default=None, metavar="S",
                     help="evict DONE/FAILED jobs S seconds after they "
                          "finish (default: keep forever)")
-    ap.add_argument("--cost-table", default=None, metavar="PATH",
-                    help="autotune cost table for measured epoch plans "
-                         "('off' disables; default: ambient discovery "
-                         "via REPRO_GA_COST_TABLE / the user cache)")
     ap.add_argument("--stream", default="first",
                     choices=["first", "none"],
                     help="print the first job's live telemetry feed")
+    from repro.ga.options import EngineOptions
+    EngineOptions.add_cli_args(ap)   # --cost-table/--plan-override/--vmem-...
     args = ap.parse_args()
 
     if (args.jobs is None) == (args.demo <= 0):
@@ -93,17 +91,15 @@ def main():
         mesh = parse_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)} ({mesh.devices.size} device(s))")
 
-    cost_table = args.cost_table
-    if cost_table is not None and cost_table.lower() in ("off", "none", "0"):
-        cost_table = False
+    options = EngineOptions.from_args(args, mesh=mesh)
 
     from repro.serve.scheduler import GAScheduler
-    sched = GAScheduler(mesh=mesh, backend=args.backend,
+    sched = GAScheduler(backend=args.backend,
                         max_pack=args.max_pack,
                         chunk_generations=args.chunk,
                         ckpt_root=args.ckpt_root,
                         job_ttl_s=args.job_ttl,
-                        cost_table=cost_table)
+                        options=options)
     if sched.cost_table is not None:
         print(f"cost table: {len(sched.cost_table)} measured point(s)")
 

@@ -156,9 +156,10 @@ class GAJobStats:
     priority: int = 0                # scheduler priority (higher preempts)
     preemptions: int = 0             # times the scheduler parked this job
     pack_size: int = 1               # jobs sharing the launch it ran in
-    epoch_mode: str = "-"            # resident | resident-free | gridded | ...
+    epoch_mode: str = "-"            # resident | streamed | gridded | ...
     plan_source: str = "-"           # heuristic | measured | forced
     plan_fallback: Optional[str] = None   # why resident modes were infeasible
+    tile_islands: Optional[int] = None    # streamed mode's island tile size
 
     @property
     def gens_per_s(self) -> float:
@@ -196,6 +197,7 @@ class GAJobStats:
             "epoch_mode": self.epoch_mode,
             "plan_source": self.plan_source,
             "plan_fallback": self.plan_fallback,
+            "tile_islands": self.tile_islands,
         }
 
 
@@ -276,12 +278,15 @@ class GAMetricsRegistry:
             job.wall_s += float(tele.get("wall_s", 0.0))
             job.migrations = int(tele.get("migrations", job.migrations))
             job.pack_size = int(tele.get("pack_size", job.pack_size))
-            extras = tele.get("extras", {})
-            job.islands = int(extras.get("n_islands", job.islands))
-            job.shards = int(extras.get("n_shards", job.shards))
-            job.epoch_mode = str(extras.get("epoch_mode", job.epoch_mode))
-            job.plan_source = str(extras.get("plan_source", job.plan_source))
-            job.plan_fallback = extras.get("plan_fallback", job.plan_fallback)
+            rt = tele.get("telemetry")
+            if rt is not None:
+                job.islands = rt.topology.n_islands
+                job.shards = rt.topology.n_shards
+                if rt.plan.mode != "-":
+                    job.epoch_mode = rt.plan.mode
+                    job.plan_source = rt.plan.source
+                    job.tile_islands = rt.plan.tile_islands
+                    job.plan_fallback = rt.plan.fallback or job.plan_fallback
             bf = tele.get("best_fitness")
             if bf is not None:
                 job.best_fitness = float(bf)
@@ -289,7 +294,8 @@ class GAMetricsRegistry:
             subs = list(self._subs.get(job_id, ()))
         event = {"event": "chunk", "job_id": job_id}
         event.update({k: v for k, v in tele.items()
-                      if k not in ("extras", "best_params", "traj_best")})
+                      if k not in ("telemetry", "extras", "best_params",
+                                   "traj_best")})
         for q in subs:
             q.put(event)
 
@@ -381,7 +387,7 @@ def run_ga_job(spec, backend: str = "auto", *, job_id: Optional[str] = None,
                chunk_generations: Optional[int] = None,
                ckpt_dir: Optional[str] = None,
                registry: Optional[GAMetricsRegistry] = None,
-               mesh=None) -> Dict[str, Any]:
+               mesh=None, options=None) -> Dict[str, Any]:
     """Run a GASpec as a telemetered serving job.
 
     Streams `Engine.run_chunked` into the registry so a concurrent /metrics
@@ -393,7 +399,10 @@ def run_ga_job(spec, backend: str = "auto", *, job_id: Optional[str] = None,
     registry = registry if registry is not None else GA_METRICS
     if job_id is None:
         job_id = registry.allocate_job_id(spec.problem or "blackbox")
-    eng = ga.Engine(spec, backend, mesh=mesh)
+    if options is not None:
+        eng = ga.Engine(spec, backend, options=options)
+    else:
+        eng = ga.Engine(spec, backend, mesh=mesh)
     registry.start_job(job_id, backend=eng.backend_name,
                        gens_total=spec.generations,
                        problem=spec.problem or "blackbox", n_vars=spec.v)

@@ -110,6 +110,10 @@ class GAScheduler:
     finish (None keeps them forever); `cost_table` follows
     `repro.autotune.table.resolve_table` semantics — None discovers the
     ambient table, False disables, a path or CostTable pins one.
+    Engine knobs can also arrive as one `ga.EngineOptions` via `options=`
+    (mesh/cost_table then live there; mixing both is an error) — that is
+    how the streamed lane's vmem_budget / stream_tile_islands reach every
+    packed launch.
     """
 
     def __init__(self, *, mesh=None, registry: Optional[GAMetricsRegistry]
@@ -117,10 +121,13 @@ class GAScheduler:
                  chunk_generations: Optional[int] = None,
                  ckpt_root: Optional[str] = None,
                  job_ttl_s: Optional[float] = None,
-                 cost_table=None):
+                 cost_table=None, options=None):
         from repro.autotune import resolve_table   # import-light (no jax)
+        from repro.ga.options import resolve_options   # import-light too
 
-        self.mesh = mesh
+        self.options = resolve_options(options, mesh=mesh,
+                                       cost_table=cost_table)
+        self.mesh = self.options.mesh
         self.registry = registry if registry is not None else GA_METRICS
         self.backend = backend
         self.max_pack = max(1, int(max_pack))
@@ -128,7 +135,7 @@ class GAScheduler:
         self.ckpt_root = ckpt_root or tempfile.mkdtemp(prefix="ga-sched-")
         self.job_ttl_s = None if job_ttl_s is None else float(job_ttl_s)
         # resolve once: every engine build + submit estimate reuses it
-        self.cost_table = resolve_table(cost_table)
+        self.cost_table = resolve_table(self.options.cost_table)
         self._cv = threading.Condition()
         self._queue: List[_Unit] = []
         self._jobs: Dict[str, Job] = {}
@@ -354,8 +361,10 @@ class GAScheduler:
         jobs = unit.jobs
         if unit.ckpt_dir is None:
             unit.ckpt_dir = os.path.join(self.ckpt_root, f"pack-{unit.seq}")
-        pe = PackedEngine([j.spec for j in jobs], jobs[0].backend,
-                          mesh=self.mesh, cost_table=self.cost_table)
+        pe = PackedEngine(
+            [j.spec for j in jobs], jobs[0].backend,
+            options=dataclasses.replace(self.options,
+                                        cost_table=self.cost_table))
         self.packs_launched += 1
         if len(jobs) > 1:
             self.jobs_packed += len(jobs)
@@ -369,10 +378,11 @@ class GAScheduler:
         for tele in pe.run_chunked(chunk_generations=self.chunk_generations,
                                    ckpt_dir=unit.ckpt_dir, resume=True):
             if last is None:   # count the plan once per dispatch
-                ps = (tele["jobs"][0].get("extras") or {}).get("plan_source")
+                tj = tele["jobs"][0].get("telemetry")
+                ps = tj.plan.source if tj is not None else None
                 if ps == "measured":
                     self.plans_measured += 1
-                elif ps is not None:
+                elif ps is not None and ps != "-":
                     self.plans_heuristic += 1
             last = tele
             for j, jt in zip(jobs, tele["jobs"]):

@@ -234,8 +234,8 @@ def test_measured_plan_results_bit_identical_to_heuristic():
     t.add(_point(spec, "gridded"), 4, 100.0)    # flips to gridded
     meas = ga.solve(spec, backend="fused-islands", cost_table=t)
     heur = ga.solve(spec, backend="fused-islands", cost_table=False)
-    assert meas.extras["epoch_mode"] == "gridded"
-    assert heur.extras["epoch_mode"] == "resident"
+    assert meas.telemetry.plan.mode == "gridded"
+    assert heur.telemetry.plan.mode == "resident"
     assert meas.best_fitness == heur.best_fitness
     np.testing.assert_array_equal(np.asarray(meas.best_params),
                                   np.asarray(heur.best_params))
@@ -269,23 +269,22 @@ def test_resident_free_bit_identical_and_unthrottled():
     free = ga.solve(spec, backend="fused-islands", cost_table=False,
                     plan_override="resident-free")
     grid = ga.solve(spec, backend="fused-islands", cost_table=False)
-    assert free.extras["epoch_mode"] == "resident-free"
-    assert free.extras["plan_source"] == "forced"
-    assert free.extras.get("migrations", 0) == 0
+    assert free.telemetry.plan.mode == "resident-free"
+    assert free.telemetry.plan.source == "forced"
+    assert free.telemetry.topology.migrations == 0
     assert free.best_fitness == grid.best_fitness
     np.testing.assert_array_equal(np.asarray(free.best_params),
                                   np.asarray(grid.best_params))
 
 
-def test_vmem_fallback_reason_surfaces_in_plan_and_extras(monkeypatch):
+def test_vmem_fallback_reason_surfaces_in_plan_and_telemetry(monkeypatch):
     monkeypatch.setenv("REPRO_RESIDENT_VMEM_BUDGET", "1024")   # 1 KiB: no fit
     spec = _spec()
     topo = _topo(spec, cost_table=False)
     assert topo.plan["mode"] == "gridded"
     assert "fallback" in topo.plan
     out = ga.solve(spec, backend="fused-islands", cost_table=False)
-    assert out.extras["plan_fallback"] == topo.plan["fallback"]
-    assert out.extras["resident_fallback"] == topo.plan["fallback"]
+    assert out.telemetry.plan.fallback == topo.plan["fallback"]
 
 
 # ---------------------------------------------------------------------------

@@ -103,7 +103,7 @@ def test_problem_registry_spec_plumbing():
     assert spec.problem == "rastrigin" and spec.v == 8
     assert spec.program().modes == ("lut", "arith")
     r = ga.solve(spec, backend="reference")
-    assert r.extras["problem"] == "rastrigin" and r.extras["n_vars"] == 8
+    assert r.telemetry.problem == "rastrigin" and r.telemetry.n_vars == 8
     assert r.best_params.shape == (8,)
     with pytest.raises(ValueError, match="unknown problem"):
         _spec(problem="nope")
@@ -239,7 +239,7 @@ def test_repeats_replica_zero_matches_solo_run():
     solo = ga.solve(spec, backend="reference")
     rep = ga.solve(dataclasses.replace(spec, n_repeats=4),
                    backend="reference")
-    per = rep.extras["per_repeat_best"]
+    per = rep.telemetry.per_repeat.best
     assert per.shape == (4,)
     assert float(per[0]) == solo.best_fitness
     assert rep.best_fitness == float(np.min(per))
@@ -251,8 +251,8 @@ def test_repeats_match_across_backends():
     spec = _spec(n=32, generations=10, n_repeats=3)
     r_ref = ga.solve(spec, backend="reference")
     r_fus = ga.solve(spec, backend="fused")
-    np.testing.assert_array_equal(r_ref.extras["per_repeat_best"],
-                                  r_fus.extras["per_repeat_best"])
+    np.testing.assert_array_equal(r_ref.telemetry.per_repeat.best,
+                                  r_fus.telemetry.per_repeat.best)
 
 
 # ---------------------------------------------------------------------------

@@ -55,7 +55,7 @@ def test_packed_engine_bit_identical_to_solo_islands():
         assert jt["best_fitness"] == solo.best_fitness
         np.testing.assert_array_equal(np.asarray(jt["best_params"]),
                                       np.asarray(solo.best_params))
-        assert jt["migrations"] == solo.extras["migrations"]
+        assert jt["migrations"] == solo.telemetry.topology.migrations
 
 
 def test_packed_engine_single_job_delegates():

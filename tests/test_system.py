@@ -48,7 +48,7 @@ def test_islands_beat_single_population():
                     mutation_rate=0.05, seed=1, generations=100,
                     n_islands=8, migrate_every=10)
     r_isl = ga.solve(isl, backend="islands")
-    assert r_isl.extras["migrations"] == 10
+    assert r_isl.telemetry.topology.migrations == 10
 
     big = ga.GASpec(problem="F3", n=256, bits_per_var=12, mode="arith",
                     mutation_rate=0.05, seed=1, generations=100)
@@ -71,8 +71,8 @@ spec = ga.GASpec(problem="F3", n=32, bits_per_var=10, mode="arith",
                  n_islands=16, migrate_every=8)
 r = ga.solve(spec, backend="islands", mesh=mesh)
 assert r.backend == "islands"
-assert r.extras.get("sharded") is True
-assert r.extras["migrations"] == 6
+assert r.telemetry.topology.sharded is True
+assert r.telemetry.topology.migrations == 6
 assert r.best_fitness < 2.0, r.best_fitness
 print("SHARDED_OK", r.best_fitness)
 """

@@ -52,10 +52,12 @@ def test_fused_islands_bit_identical_to_reference_islands(problem):
     np.testing.assert_array_equal(seg_f.traj_best, seg_r.traj_best)
     np.testing.assert_array_equal(seg_f.best_x, seg_r.best_x)
     assert seg_f.best_y == seg_r.best_y
-    assert seg_f.extras["migrations"] == seg_r.extras["migrations"] == 3
-    assert seg_f.extras["executor"] == "fused"
-    assert seg_r.extras["executor"] == "reference"
-    assert seg_f.extras["topology"] == seg_r.extras["topology"] == "island_ring"
+    assert (seg_f.telemetry.topology.migrations
+            == seg_r.telemetry.topology.migrations == 3)
+    assert seg_f.telemetry.topology.executor == "fused"
+    assert seg_r.telemetry.topology.executor == "reference"
+    assert (seg_f.telemetry.topology.topology
+            == seg_r.telemetry.topology.topology == "island_ring")
 
 
 @pytest.mark.parametrize("problem", ["rastrigin:4", "ackley:6"])
@@ -100,7 +102,7 @@ def test_fused_islands_end_to_end_solve():
     spec = _spec(generations=40, migrate_every=8)
     r = ga.solve(spec, backend="fused-islands")
     assert r.backend == "fused-islands"
-    assert r.extras["migrations"] == 5
+    assert r.telemetry.topology.migrations == 5
     assert np.isfinite(r.best_fitness) and r.best_fitness < 3.0
     assert r.generations == 40
     assert len(r.traj_best) == 5   # telemetry unit = migration epoch
@@ -114,7 +116,7 @@ def test_fused_islands_end_to_end_solve():
 def test_islands_n_repeats_per_replica_bests():
     solo = ga.solve(_spec(), backend="islands")
     rep = ga.solve(_spec(n_repeats=3), backend="islands")
-    per = rep.extras["per_repeat_best"]
+    per = rep.telemetry.per_repeat.best
     assert per.shape == (3,)
     # replica 0 re-runs the n_repeats=1 island stack bit-exactly
     assert float(per[0]) == solo.best_fitness
@@ -127,8 +129,8 @@ def test_fused_islands_n_repeats_matches_reference():
     spec = _spec(n_repeats=2, generations=10)
     r_ref = ga.solve(spec, backend="islands")
     r_fus = ga.solve(spec, backend="fused-islands")
-    np.testing.assert_array_equal(r_ref.extras["per_repeat_best"],
-                                  r_fus.extras["per_repeat_best"])
+    np.testing.assert_array_equal(r_ref.telemetry.per_repeat.best,
+                                  r_fus.telemetry.per_repeat.best)
     assert r_ref.best_fitness == r_fus.best_fitness
 
 
@@ -156,8 +158,8 @@ def test_migration_none_ablation():
     run but no elites are exchanged."""
     ring = ga.solve(_spec(), backend="islands")
     none = ga.solve(_spec(migration="none"), backend="islands")
-    assert none.extras["migrations"] == 0
-    assert ring.extras["migrations"] == 3
+    assert none.telemetry.topology.migrations == 0
+    assert ring.telemetry.topology.migrations == 3
     assert np.isfinite(none.best_fitness)
 
 
@@ -223,10 +225,11 @@ def test_resident_epoch_bit_identical_to_reference_islands(problem):
                                       err_msg=field)
     assert seg_f.best_y == seg_r.best_y
     np.testing.assert_array_equal(seg_f.best_x, seg_r.best_x)
-    assert seg_f.extras["epoch_mode"] == "resident"
-    assert seg_f.extras["launches"] == 2
-    assert seg_f.extras["migrations"] == seg_r.extras["migrations"] == 3
-    assert seg_f.extras["telemetry_unit_gens"] == 10
+    assert seg_f.telemetry.plan.mode == "resident"
+    assert seg_f.telemetry.topology.launches == 2
+    assert (seg_f.telemetry.topology.migrations
+            == seg_r.telemetry.topology.migrations == 3)
+    assert seg_f.telemetry.topology.telemetry_unit_gens == 10
     assert seg_f.traj_best.shape == (2,)
 
 
@@ -237,10 +240,10 @@ def test_resident_epoch_n_repeats_matches_reference():
     r_ref = ga.solve(dataclasses.replace(spec, gens_per_epoch=1),
                      backend="islands")
     r_res = ga.solve(spec, backend="fused-islands")
-    np.testing.assert_array_equal(r_ref.extras["per_repeat_best"],
-                                  r_res.extras["per_repeat_best"])
+    np.testing.assert_array_equal(r_ref.telemetry.per_repeat.best,
+                                  r_res.telemetry.per_repeat.best)
     assert r_ref.best_fitness == r_res.best_fitness
-    assert r_res.extras["epoch_mode"] == "resident"
+    assert r_res.telemetry.plan.mode == "resident"
 
 
 def test_resident_sharded_epoch_on_one_device_mesh():
@@ -258,14 +261,15 @@ def test_resident_sharded_epoch_on_one_device_mesh():
                                       np.asarray(getattr(ref.state, field)),
                                       err_msg=field)
     assert shard.best_y == ref.best_y
-    assert shard.extras["epoch_mode"] == "resident-sharded"
-    assert shard.extras["sharded"] is True
+    assert shard.telemetry.plan.mode == "resident-sharded"
+    assert shard.telemetry.topology.sharded is True
 
 
 def test_resident_vmem_budget_fallback_decision():
     """The VMEM-budget estimator drives the fallback: an island stack whose
-    one-hot working set exceeds the budget silently reverts to the gridded
-    per-interval kernel (still bit-identical), never errors."""
+    one-hot working set exceeds the budget reverts to the STREAMED lane when
+    a double-buffered tile fits, and all the way to the gridded per-interval
+    kernel when none does (still bit-identical), never errors."""
     from repro.kernels import ga_step as K
 
     cfg = _spec().ga_config()
@@ -275,18 +279,27 @@ def test_resident_vmem_budget_fallback_decision():
     assert reason is not None and "VMEM" in reason
     # big captured consts count against the same budget
     assert K.resident_fit_reason(cfg, 4, 1 << 30) is not None
-    # estimator scales with the one-hot term: N=512 x 4 islands > 16 MiB
+    # estimator scales with the one-hot term: N=512 x 4 islands > 16 MiB —
+    # but a double-buffered 1-island tile fits, so the HBM-streaming lane
+    # absorbs the oversize case instead of dropping kernel residency
     big = _spec(n=512, gens_per_epoch=10)
-    eng = ga.Engine(big, "fused-islands")
+    eng = ga.Engine(big, "fused-islands", options=ga.EngineOptions(
+        cost_table=False))
     plan = eng.backend.topology.plan
-    assert plan["mode"] == "gridded" and "VMEM" in plan["fallback"]
-    # integration: the fallback path still runs and matches reference
+    assert plan["mode"] == "streamed" and "VMEM" in plan["fallback"]
+    # with a budget too small for even a double-buffered 1-island tile the
+    # planner still reverts to gridded
+    eng_g = ga.Engine(big, "fused-islands", options=ga.EngineOptions(
+        cost_table=False, vmem_budget=1 << 10))
+    plan_g = eng_g.backend.topology.plan
+    assert plan_g["mode"] == "gridded" and "VMEM" in plan_g["fallback"]
+    # integration: the streamed fallback path still runs, matches reference
     seg_f = eng.backend.segment(eng.init_state(), 10)
     seg_r = _segment(dataclasses.replace(big, gens_per_epoch=1),
                      "islands", 10)
     np.testing.assert_array_equal(np.asarray(seg_f.state.x),
                                   np.asarray(seg_r.state.x))
-    assert seg_f.extras["resident_fallback"] == plan["fallback"]
+    assert seg_f.telemetry.plan.fallback == plan["fallback"]
 
 
 # ---------------------------------------------------------------------------
@@ -312,8 +325,8 @@ def test_fused_islands_on_one_device_mesh_bit_identical():
                                       err_msg=field)
     assert shard.best_y == local.best_y
     np.testing.assert_array_equal(shard.traj_best, local.traj_best)
-    assert shard.extras["sharded"] is True
-    assert shard.extras["n_shards"] == 1
+    assert shard.telemetry.topology.sharded is True
+    assert shard.telemetry.topology.n_shards == 1
 
 
 def test_mesh_capability_gates():
@@ -357,7 +370,7 @@ def test_mesh_multi_device_bit_identical_in_process(backend):
                                       np.asarray(getattr(local.state, field)),
                                       err_msg=field)
     assert shard.best_y == local.best_y
-    assert shard.extras["n_shards"] == n_dev
+    assert shard.telemetry.topology.n_shards == n_dev
 
 
 def test_fused_islands_mesh_bit_identical_subprocess_8dev():
@@ -392,7 +405,8 @@ def check(spec, mesh, tag):
                                       err_msg=tag + " " + f)
     assert shard.best_y == local.best_y, tag
     np.testing.assert_array_equal(shard.traj_best, local.traj_best)
-    assert shard.extras["sharded"] is True and shard.extras["n_shards"] == 8
+    ti = shard.telemetry.topology
+    assert ti.sharded is True and ti.n_shards == 8
 
 for problem in ("F1", "F2", "F3", "rastrigin:4"):
     spec = ga.GASpec(problem=problem, n=32, bits_per_var=10, mode="arith",
@@ -421,8 +435,8 @@ spec = ga.GASpec(problem="F3", n=32, bits_per_var=10, mode="arith",
                  n_islands=8, migrate_every=5, n_repeats=2)
 local = ga.solve(spec, backend="fused-islands")
 shard = ga.solve(spec, backend="fused-islands", mesh=mesh)
-np.testing.assert_array_equal(local.extras["per_repeat_best"],
-                              shard.extras["per_repeat_best"])
+np.testing.assert_array_equal(local.telemetry.per_repeat.best,
+                              shard.telemetry.per_repeat.best)
 assert local.best_fitness == shard.best_fitness
 
 # RESIDENT epochs on the mesh: gens_per_epoch=10 > migrate_every=5 runs the
@@ -437,7 +451,7 @@ def check_resident(tag, use_mesh, n_repeats=1):
                      n_repeats=n_repeats, gens_per_epoch=10)
     ref = seg(dataclasses.replace(spec, gens_per_epoch=1), "islands", 15)
     res = seg(spec, "fused-islands", 15, mesh=use_mesh)
-    assert res.extras["epoch_mode"] == "resident-sharded", tag
+    assert res.telemetry.plan.mode == "resident-sharded", tag
     for f in ("x", "sel_lfsr", "cross_lfsr", "mut_lfsr"):
         np.testing.assert_array_equal(np.asarray(getattr(res.state, f)),
                                       np.asarray(getattr(ref.state, f)),
