@@ -16,7 +16,10 @@ regression gate for that optimization.  The `+streamed` /
 `+streamed-gridded` pair runs an island stack that exceeds a (forced)
 VMEM budget through the HBM-streaming lane and through the gridded
 fallback respectively; `check_bench.streamed_gate` requires the streamed
-row to actually stream and to be no slower than its gridded twin.
+row to actually stream and to be no slower than its gridded twin.  The
+`+onehot` / `+gather` pair pins the fused tournament's selection lane on
+an N=512 spec; `check_bench.lane_gate` requires the gather row to run the
+gather lane and keep up with its onehot twin.
 
 The island backends additionally run as mesh combos (`...@mesh{D}`): the
 island axis shard_mapped over D devices with `ppermute` ring migration —
@@ -38,7 +41,7 @@ import dataclasses
 import json
 import os
 
-from benchmarks.ga_common import time_call
+from benchmarks.ga_common import planned_peak_vmem, time_call
 from repro import ga
 
 K = 100
@@ -113,6 +116,8 @@ def _one_row(name: str, backend: str, spec: ga.GASpec, *, smoke: bool,
                           "epoch_mode": tele.plan.mode,
                           "plan_source": tele.plan.source,
                           "tile_islands": tele.plan.tile_islands,
+                          "sel_lane": tele.plan.lane,
+                          "planned_vmem_bytes": planned_peak_vmem(eng),
                           "migrations": tele.topology.migrations},
                          separators=(",", ":"))
     # island epochs round K up to whole migration epochs — divide by
@@ -149,6 +154,26 @@ def _streamed_rows(problem: str, sizes: dict, *, smoke: bool):
     ]
 
 
+LANE_N = 512     # the lane pair's population: large enough that the onehot
+                 # lane's (N, N) working set dominates and gather should win
+
+
+def _lane_rows(problem: str, sizes: dict, *, smoke: bool):
+    """The selection-lane pair: one fused-islands spec at N=512 pinned to
+    each tournament lane.  `check_bench.lane_gate` requires the gather row
+    to actually run the gather lane and to keep up with (noise margin) or
+    beat its onehot twin — the O(N·V) working set must not cost speed."""
+    spec = dataclasses.replace(
+        _spec_for("fused-islands", problem, **sizes),
+        n=LANE_N, n_islands=2)
+    rows = []
+    for lane in ("onehot", "gather"):
+        rows.append(_one_row(
+            f"engine_fused-islands[{problem}]+{lane}", "fused-islands",
+            dataclasses.replace(spec, sel_lane=lane), smoke=smoke))
+    return rows
+
+
 def run(smoke: bool = False, cost_table=None):
     sizes = SMOKE if smoke else dict(n=64, m=20, generations=K,
                                      n_islands=N_ISLANDS, migrate_every=16)
@@ -169,6 +194,8 @@ def run(smoke: bool = False, cost_table=None):
         if problem == "F3":
             # one oversized-stack pair is enough to gate the streamed lane
             rows.extend(_streamed_rows(problem, sizes, smoke=smoke))
+            # one N=512 pinned-lane pair gates the gather selection lane
+            rows.extend(_lane_rows(problem, sizes, smoke=smoke))
         # mesh combos: island axis sharded over devices (device-count sweep)
         from repro.launch.mesh import make_island_mesh
         for backend in MESH_BACKENDS:

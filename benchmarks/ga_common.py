@@ -23,6 +23,18 @@ def bench_engine(problem: str, n: int, m: int, generations: int,
     return eng
 
 
+def planned_peak_vmem(eng):
+    """Peak planned VMEM (bytes) of an engine's epoch plan — the working
+    set the planner budgeted for one launch (double-buffered tile for the
+    streamed mode, the whole stack for resident ones, one island for
+    gridded fused launches).  None when the backend has no planner
+    (reference / eager / single topologies)."""
+    plan = getattr(getattr(eng.backend, "topology", None), "plan", None)
+    if not plan:
+        return None
+    return plan.get("vmem_estimate_bytes")
+
+
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5
               ) -> Tuple[float, object]:
     out = None

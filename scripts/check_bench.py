@@ -35,11 +35,17 @@ VERY loose absolute floor: `engine_reference[*]` must stay above
 ANCHOR_FLOOR (default 0.10) × its baseline gens/s — 10× machine-speed
 variance passes, a catastrophic shared-path slowdown does not.
 
-Two same-artifact gates ride along: `+measured` rows must keep up with
-their static twin (measured_gate) and `+streamed` rows must actually plan
+Three same-artifact gates ride along: `+measured` rows must keep up with
+their static twin (measured_gate), `+streamed` rows must actually plan
 the streamed epoch mode and keep up with their `+streamed-gridded`
-fallback twin (streamed_gate) — both absolute-safe because the pair ran
-on the same machine in the same run.
+fallback twin (streamed_gate), and `+gather` rows must actually run the
+gather selection lane and keep up with their `+onehot` twin at N >= 512
+(lane_gate) — all absolute-safe because each pair ran on the same machine
+in the same run.
+
+`--append-trajectory` appends the merged artifacts' headline rows to a
+committed JSON history (`benchmarks/BENCH_trajectory.json`), one entry per
+CI run, so throughput drift across PRs stays inspectable.
 
 Env overrides: CHECK_BENCH_TOLERANCE (float, default 0.30),
 CHECK_BENCH_ANCHOR_FLOOR (float, default 0.10) and CHECK_BENCH_SKIP=1
@@ -209,6 +215,93 @@ def streamed_gate(current: dict, tolerance: float):
     return failures, notes
 
 
+LANE_GATE_MIN_N = 512   # below this the (N, N) working set is too small for
+                        # the lane choice to matter; the pair is informational
+
+
+def lane_gate(current: dict, tolerance: float):
+    """Gate the gather selection lane: every '<combo>+gather' row must have
+    actually run `sel_lane == "gather"` AND — when its population is at
+    least LANE_GATE_MIN_N — reach (1 - tolerance) × its '+onehot' twin in
+    the same artifact.  The gather lane exists to shrink the tournament
+    working set from O(N²) to O(N·V) WITHOUT giving up throughput; a gather
+    row losing to onehot at large N is a regression of that lane."""
+    failures, notes = [], []
+    for name in sorted(n for n in current if n.endswith("+gather")):
+        cur = current[name]
+        if cur.get("sel_lane") != "gather":
+            failures.append(
+                f"{name}: ran sel_lane={cur.get('sel_lane', '?')!r}, "
+                "expected 'gather' — the pinned-lane row no longer "
+                "exercises the gather selection lane")
+            continue
+        twin = current.get(name[:-len("+gather")] + "+onehot")
+        if twin is None or not twin.get("gens_per_s"):
+            notes.append(f"{name}: no '+onehot' twin row; skipping "
+                         "throughput comparison")
+            continue
+        if cur.get("n", 0) < LANE_GATE_MIN_N:
+            notes.append(f"{name}: N={cur.get('n')} < {LANE_GATE_MIN_N}; "
+                         "lane pair is informational at this size")
+            continue
+        floor = twin["gens_per_s"] * (1.0 - tolerance)
+        if cur.get("gens_per_s", 0.0) < floor:
+            failures.append(
+                f"{name}: gather lane at {cur.get('gens_per_s', 0.0):.1f} "
+                f"gens/s < floor {floor:.1f} ({(1.0 - tolerance):.0%} of "
+                f"the onehot twin's {twin['gens_per_s']:.1f} at "
+                f"N={cur.get('n')})")
+    return failures, notes
+
+
+# the committed per-PR throughput history and the rows worth tracking in it
+DEFAULT_TRAJECTORY = os.path.join(os.path.dirname(__file__), "..",
+                                  "benchmarks", "BENCH_trajectory.json")
+TRAJECTORY_ROWS = ("engine_reference[F3]", "engine_fused-islands[F3]",
+                   "engine_fused-islands[F3]+streamed",
+                   "engine_fused-islands[F3]+onehot",
+                   "engine_fused-islands[F3]+gather")
+
+
+def append_trajectory(path: str, current: dict) -> None:
+    """Append one entry of headline gens/s (and the fused-vs-reference
+    ratio) to the committed trajectory file.  Entries are labeled by git
+    commit when available; absolute rates are machine-dependent, the ratio
+    column is the comparable series."""
+    import subprocess
+    import time as _time
+    try:
+        with open(path) as f:
+            history = json.load(f)
+    except (OSError, ValueError):
+        history = []
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except OSError:
+        commit = None
+    entry = {"commit": commit,
+             "date": _time.strftime("%Y-%m-%d"),
+             "rows": {}}
+    for name in TRAJECTORY_ROWS:
+        r = current.get(name)
+        if r is None:
+            continue
+        entry["rows"][name] = {
+            "gens_per_s": r.get("gens_per_s"),
+            "ratio": (round(r["ratio"], 4)
+                      if r.get("ratio") is not None else None)}
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+    print(f"appended trajectory entry ({len(entry['rows'])} rows) "
+          f"to {path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("artifacts", nargs="+",
@@ -224,6 +317,12 @@ def main():
     ap.add_argument("--write-baseline", action="store_true",
                     help="(re)seed the baseline from the artifacts "
                          f"(min ratio per combo scaled by {RATIO_MARGIN})")
+    ap.add_argument("--append-trajectory", nargs="?", default=None,
+                    const=os.path.normpath(DEFAULT_TRAJECTORY),
+                    metavar="PATH",
+                    help="append the headline rows' gens/s + ratio to the "
+                         "committed per-PR trajectory history (default "
+                         "path: benchmarks/BENCH_trajectory.json)")
     args = ap.parse_args()
 
     artifacts = [load_rows(p) for p in args.artifacts]
@@ -259,6 +358,9 @@ def main():
               f"ratio margin {RATIO_MARGIN})")
         return 0
 
+    if args.append_trajectory:
+        append_trajectory(args.append_trajectory, current)
+
     if os.environ.get("CHECK_BENCH_SKIP") == "1":
         print("check_bench: CHECK_BENCH_SKIP=1 — skipping regression gate")
         return 0
@@ -271,6 +373,9 @@ def main():
     s_failures, s_notes = streamed_gate(current, args.tolerance)
     failures += s_failures
     notes += s_notes
+    l_failures, l_notes = lane_gate(current, args.tolerance)
+    failures += l_failures
+    notes += l_notes
     for n in notes:
         print(f"note: {n}")
     if failures:

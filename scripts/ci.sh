@@ -49,7 +49,10 @@ timeout 420 python -m benchmarks.serve_throughput --smoke \
     --out artifacts/serve_throughput.json
 
 echo "== bench regression gate (relative combo-vs-reference ratios) =="
-python scripts/check_bench.py artifacts/engine_backends.json
+# --append-trajectory extends the COMMITTED per-PR throughput history —
+# commit the updated benchmarks/BENCH_trajectory.json with your PR
+python scripts/check_bench.py artifacts/engine_backends.json \
+    --append-trajectory
 python scripts/check_bench.py artifacts/serve_throughput.json \
     --baseline benchmarks/baseline_serve_throughput.json
 

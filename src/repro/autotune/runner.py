@@ -24,26 +24,50 @@ from repro.autotune.stability import Replay, replay_until_stable
 from repro.autotune.table import CostTable, host_fingerprint
 
 
-def _probe_options(options, *, mesh, interpret, plan_override=None):
+def _probe_options(options, *, mesh, interpret, plan_override=None,
+                   sel_lane=None):
     """The engine options a probe runs under: the caller's base options
     (or legacy mesh/interpret kwargs) with the cost table DISABLED — a
     measurement must never depend on prior measurements — and optionally
-    one mode forced."""
+    one mode and/or selection lane forced."""
     from repro.ga.options import resolve_options
     base = resolve_options(options, mesh=mesh, interpret=interpret)
+    if sel_lane is None:
+        sel_lane = base.sel_lane
     return dataclasses.replace(base, cost_table=False,
-                               plan_override=plan_override)
+                               plan_override=plan_override,
+                               sel_lane=sel_lane)
+
+
+def sweep_lanes(spec) -> List[str]:
+    """The selection lanes an autotune sweep should measure for `spec`: a
+    pinned lane measures alone; "auto" measures every lane the fused
+    kernels could legally run (onehot under its N cap, gather on any
+    power-of-two N), so the planner's cross-lane argmax has real data on
+    both sides."""
+    from repro.core.ga import ONEHOT_MAX_N
+    if spec.sel_lane != "auto":
+        return [spec.sel_lane]
+    lanes = []
+    if spec.n <= ONEHOT_MAX_N:
+        lanes.append("onehot")
+    if spec.n & (spec.n - 1) == 0:
+        lanes.append("gather")
+    return lanes or [spec.resolved_sel_lane]
 
 
 def plan_candidates(spec, *, backend: str = "auto", mesh=None,
                     interpret: Optional[bool] = None,
-                    options=None) -> List[Dict[str, Any]]:
+                    options=None, sel_lane=None) -> List[Dict[str, Any]]:
     """The feasible epoch-plan candidates an engine for `spec` would weigh
-    (heuristic choice first), or [] for backends with no island planner."""
+    (heuristic choice first), or [] for backends with no island planner.
+    `sel_lane` forces the probe's selection lane (the candidates carry it
+    in their "lane" field)."""
     from repro import ga
     eng = ga.Engine(spec, backend,
                     options=_probe_options(options, mesh=mesh,
-                                           interpret=interpret))
+                                           interpret=interpret,
+                                           sel_lane=sel_lane))
     topo = getattr(eng.backend, "topology", None)
     if topo is None or not hasattr(topo, "epoch_candidates"):
         return []
@@ -52,13 +76,15 @@ def plan_candidates(spec, *, backend: str = "auto", mesh=None,
 
 def measure_candidate(spec, mode: str, *, backend: str = "auto", mesh=None,
                       interpret: Optional[bool] = None, options=None,
+                      sel_lane: Optional[str] = None,
                       warmup: int = 1, min_reps: int = 3, max_reps: int = 8,
                       cov_threshold: float = 0.25,
                       timer: Callable[[], float] = time.perf_counter,
                       ) -> Dict[str, Any]:
-    """Force one epoch mode via plan_override and time a segment of
-    `gens_per_epoch` generations until replay-stable.  Returns the table
-    row: {"point", "gens_per_launch", "gens_per_s", "replay"}."""
+    """Force one epoch mode via plan_override (and optionally one selection
+    lane) and time a segment of `gens_per_epoch` generations until
+    replay-stable.  Returns the table row: {"point", "gens_per_launch",
+    "gens_per_s", "replay"}."""
     import jax
     from repro import ga
     from repro.ga import compile_cache as CC
@@ -66,7 +92,8 @@ def measure_candidate(spec, mode: str, *, backend: str = "auto", mesh=None,
     eng = ga.Engine(spec, backend,
                     options=_probe_options(options, mesh=mesh,
                                            interpret=interpret,
-                                           plan_override=mode))
+                                           plan_override=mode,
+                                           sel_lane=sel_lane))
     topo = eng.backend.topology
     state = eng.init_state()
     seg_gens = max(spec.gens_per_epoch, spec.migrate_every)
@@ -81,7 +108,8 @@ def measure_candidate(spec, mode: str, *, backend: str = "auto", mesh=None,
         once, warmup=max(0, warmup - 1), min_reps=min_reps,
         max_reps=max_reps, cov_threshold=cov_threshold, timer=timer)
     point = CC.plan_point(spec, executor=topo.executor.name,
-                          mode=topo.plan["mode"], n_shards=topo.n_shards)
+                          mode=topo.plan["mode"], n_shards=topo.n_shards,
+                          lane=topo.plan.get("lane"))
     return {"point": point,
             "gens_per_launch": topo.plan["gens_per_launch"],
             "gens_per_s": first.gens / replay.mean_s,
@@ -101,28 +129,39 @@ def sweep(specs: Iterable, *, backend: str = "auto", mesh=None,
     small shapes, so its cost gets measured too."""
     table = CostTable(host=host_fingerprint()) if table is None else table
     for spec in specs:
-        cands = plan_candidates(spec, backend=backend, mesh=mesh,
-                                interpret=interpret, options=options)
-        if not cands:
-            if log:
-                log(f"skip {spec.problem or 'blackbox'}: no island planner "
-                    f"for backend {backend!r}")
-            continue
-        for cand in cands:
-            row = measure_candidate(
-                spec, cand["mode"], backend=backend, mesh=mesh,
-                interpret=interpret, options=options, warmup=warmup,
-                min_reps=min_reps, max_reps=max_reps,
-                cov_threshold=cov_threshold, timer=timer)
-            rep: Replay = row["replay"]
-            table.add(row["point"], row["gens_per_launch"],
-                      row["gens_per_s"], reps=rep.reps, cov=rep.cov)
-            if log:
-                stable = "stable" if rep.stable else "UNSTABLE"
-                log(f"  {spec.problem or 'blackbox'} n={spec.n} "
-                    f"I={spec.n_islands} gpe={spec.gens_per_epoch} "
-                    f"{cand['mode']:>16}: {row['gens_per_s']:9.1f} gens/s "
-                    f"({rep.reps} reps, cov={rep.cov:.3f}, {stable})")
+        measured_keys = set()
+        for lane in sweep_lanes(spec):
+            cands = plan_candidates(spec, backend=backend, mesh=mesh,
+                                    interpret=interpret, options=options,
+                                    sel_lane=lane)
+            if not cands:
+                if log:
+                    log(f"skip {spec.problem or 'blackbox'}: no island "
+                        f"planner for backend {backend!r}")
+                continue
+            for cand in cands:
+                row = measure_candidate(
+                    spec, cand["mode"], backend=backend, mesh=mesh,
+                    interpret=interpret, options=options, sel_lane=lane,
+                    warmup=warmup, min_reps=min_reps, max_reps=max_reps,
+                    cov_threshold=cov_threshold, timer=timer)
+                # a lane-forced probe that fell back to a non-fused executor
+                # produces the same point for every lane — measure it once
+                key = (tuple(sorted(row["point"].items())),
+                       row["gens_per_launch"])
+                if key in measured_keys:
+                    continue
+                measured_keys.add(key)
+                rep: Replay = row["replay"]
+                table.add(row["point"], row["gens_per_launch"],
+                          row["gens_per_s"], reps=rep.reps, cov=rep.cov)
+                if log:
+                    stable = "stable" if rep.stable else "UNSTABLE"
+                    log(f"  {spec.problem or 'blackbox'} n={spec.n} "
+                        f"I={spec.n_islands} gpe={spec.gens_per_epoch} "
+                        f"{cand['mode']:>16}/{cand.get('lane', '?')}: "
+                        f"{row['gens_per_s']:9.1f} gens/s "
+                        f"({rep.reps} reps, cov={rep.cov:.3f}, {stable})")
     return table
 
 

@@ -6,7 +6,8 @@ gridded.  This module is the measured half of the two-tier decision — a
 JSON-persisted table mapping each plan POINT to observed generations/second:
 
   point  = (executor, epoch mode, migration, N, islands-per-shard, c,
-            problem-stage kind, shard count, migrate_every)   [POINT_FIELDS]
+            problem-stage kind, shard count, migrate_every,
+            selection lane)                                   [POINT_FIELDS]
   axis   = gens_per_launch — the generations one launch folds; the one
            continuous knob, so `lookup` linearly interpolates between
            measured axis values (and returns None outside the measured
@@ -44,14 +45,14 @@ import os
 import warnings
 from typing import Any, Dict, Iterator, Optional, Tuple
 
-TABLE_VERSION = 1
+TABLE_VERSION = 2   # v2: plan points gained the "lane" field (sel_lane)
 
 # identity of one measured plan point (the table key; gens_per_launch is the
 # interpolation axis, n_repeats is deliberately EXCLUDED — the replica axis
 # rides the kernel grid / vmap and scales throughput, it does not change
 # which mode wins, and keying on it would shatter the table)
 POINT_FIELDS = ("executor", "mode", "migration", "n", "i_local", "c",
-                "stage", "shards", "E")
+                "stage", "shards", "E", "lane")
 
 _DISABLE_VALUES = {"", "0", "off", "none", "false"}
 

@@ -33,6 +33,12 @@ from repro.core import fitness as F
 from repro.core import lfsr
 
 
+# Past this population size the onehot selection lane's (N, N) one-hot
+# tournament matrices exceed a reasonable VMEM share — the gather lane
+# (dynamic indexing, O(N·V)) has no such cap.
+ONEHOT_MAX_N = 1024
+
+
 @dataclasses.dataclass(frozen=True)
 class GAConfig:
     n: int                       # population size N (even, paper uses 4..64)
@@ -43,10 +49,16 @@ class GAConfig:
     steps_per_draw: int = 3      # LFSR clocks per generation (SyncM cadence)
     seed: int = 1234
     mode: str = "lut"            # "lut" (faithful ROMs) | "arith" (VPU)
+    sel_lane: str = "onehot"     # "onehot" (MXU matmul gather) | "gather"
+                                 # (VPU dynamic indexing); always resolved —
+                                 # "auto" lives on GASpec, never here
 
     def __post_init__(self):
         assert self.n % 2 == 0, "N must be even (paper Sec. 2)"
         assert 1 <= self.c <= 31
+        assert self.sel_lane in ("onehot", "gather"), (
+            f"sel_lane={self.sel_lane!r}: GAConfig carries a RESOLVED lane "
+            "('onehot' | 'gather'); 'auto' is resolved by GASpec")
 
     @property
     def m(self) -> int:

@@ -159,9 +159,11 @@ class Backend:
     autotune runner uses it to measure non-default candidates) and raises
     if the spec cannot feasibly run that mode.  vmem_budget overrides the
     PLANNER's feasibility budget (the kernels still validate against the
-    real one) and stream_tile_islands pins the streamed tile.  Options only
-    influence launch shapes, never results — every plan is bit-identical
-    in state and best tracking.
+    real one) and stream_tile_islands pins the streamed tile.  sel_lane
+    overrides the spec's fused-kernel selection lane (the spec is re-built
+    with the override, so validation/compile keys stay consistent).
+    Options only influence launch shapes, never results — every plan is
+    bit-identical in state and best tracking.
     """
 
     name = "?"
@@ -172,6 +174,11 @@ class Backend:
                                        interpret=interpret,
                                        cost_table=cost_table,
                                        plan_override=plan_override)
+        if (self.options.sel_lane is not None
+                and self.options.sel_lane != spec.sel_lane):
+            # rebuild the spec so the override flows through validation,
+            # ga_config() and compile_key() like a spec-level pin would
+            spec = dataclasses.replace(spec, sel_lane=self.options.sel_lane)
         self.spec = spec
         self.cfg = spec.ga_config()
         self.mesh = self.options.mesh
@@ -294,9 +301,14 @@ class FusedExecutor(Executor):
                     "on the XLA path ('reference')")
         if spec.n & (spec.n - 1):
             return f"fused kernel requires power-of-two N (got {spec.n})"
-        if spec.n > 1024:
-            return (f"N={spec.n} > 1024: the (N, N) one-hot tournament "
-                    "matrices must fit VMEM; use islands/reference")
+        if (spec.resolved_sel_lane == "onehot"
+                and spec.n > G.ONEHOT_MAX_N):
+            # only reachable through a lane pin that bypassed GASpec
+            # validation; sel_lane="auto" resolves to gather past the cap
+            return (f"N={spec.n} > {G.ONEHOT_MAX_N} on the 'onehot' "
+                    "selection lane: the (N, N) one-hot tournament matrices "
+                    "must fit VMEM; use islands/reference or "
+                    "sel_lane='gather'")
         if not spec.uses_paper_pipeline:
             return ("fused kernel hardwires the paper pipeline "
                     "(tournament/single_point/xor); other operators run on "
@@ -580,16 +592,33 @@ class IslandRingTopology(Topology):
                                      axis_names=axis_names)
         self.i_local = max(1, spec.n_islands // max(1, self.n_shards))
         self.plan = self._epoch_plan()
+        # the measured tier can move an "auto" spec to the OTHER selection
+        # lane (cross-lane argmax); rebuild the configs every runner closes
+        # over so the kernels actually run the chosen lane
+        lane = self.plan.get("lane", self.cfg.sel_lane)
+        if lane != self.cfg.sel_lane:
+            self.cfg = dataclasses.replace(self.cfg, sel_lane=lane)
+            self.icfg = dataclasses.replace(self.icfg, ga=self.cfg)
+            self.executor.cfg = self.cfg
 
     def epoch_candidates(self) -> list:
         """Tier-1 feasible plan candidates, heuristic first (the autotune
         runner measures exactly this list, so table points and planner
-        queries can never drift apart)."""
+        queries can never drift apart).  All candidates carry the spec's
+        own resolved selection lane — the other lane's candidates are a
+        separate, measured-only grid (`_lane_candidates`)."""
+        return self._lane_candidates(self.cfg.sel_lane)
+
+    def _lane_candidates(self, lane: str) -> list:
+        """Feasible candidates with the selection lane forced to `lane`
+        (the measured tier's (mode × lane) grid for sel_lane='auto')."""
         spec = self.spec
-        const_bytes = (_ga_step.ffm_const_bytes(self.executor.fit, self.cfg)
+        cfg = (self.cfg if lane == self.cfg.sel_lane
+               else dataclasses.replace(self.cfg, sel_lane=lane))
+        const_bytes = (_ga_step.ffm_const_bytes(self.executor.fit, cfg)
                        if self.executor.name == "fused" else 0)
         return _ga_step.epoch_mode_candidates(
-            self.cfg, self.i_local, const_bytes,
+            cfg, self.i_local, const_bytes,
             executor=self.executor.name, migration=spec.migration,
             gens_per_epoch=spec.gens_per_epoch,
             migrate_every=spec.migrate_every,
@@ -597,7 +626,8 @@ class IslandRingTopology(Topology):
 
     def _plan_point(self, cand: Dict[str, Any]) -> Dict[str, Any]:
         return CC.plan_point(self.spec, executor=self.executor.name,
-                             mode=cand["mode"], n_shards=self.n_shards)
+                             mode=cand["mode"], n_shards=self.n_shards,
+                             lane=cand.get("lane"))
 
     def _epoch_plan(self) -> Dict[str, Any]:
         """Two-tier plan decision (see class docstring)."""
@@ -622,28 +652,45 @@ class IslandRingTopology(Topology):
         else:
             plan = dict(cands[0], plan_source="heuristic")
             table = self.cost_table
-            if table is not None and len(cands) > 1:
+            if table is not None:
                 rated = [(c, table.lookup(self._plan_point(c),
                                           c["gens_per_launch"]))
                          for c in cands]
-                # refine only when the heuristic's own mode is measured:
+                # sel_lane="auto": the OTHER lane's feasible shapes join the
+                # argmax as measured-only candidates — the heuristic never
+                # switches lane on its own, measurement does
+                if self.spec.sel_lane == "auto":
+                    twin = ("gather" if self.cfg.sel_lane == "onehot"
+                            else "onehot")
+                    if (twin != "onehot"
+                            or self.spec.n <= G.ONEHOT_MAX_N):
+                        rated += [(c, table.lookup(self._plan_point(c),
+                                                   c["gens_per_launch"]))
+                                  for c in self._lane_candidates(twin)]
+                # refine only when the heuristic's own point is measured:
                 # the argmax is then provably >= the heuristic's measured
                 # rate, and an uncovered spec stays bit-identical heuristic
-                if rated[0][1] is not None:
+                if len(rated) > 1 and rated[0][1] is not None:
                     best_c, best_v = rated[0]
                     for c, v in rated[1:]:
                         if v is not None and v > best_v:
                             best_c, best_v = c, v
                     plan = dict(best_c, plan_source="measured",
                                 plan_gens_per_s=round(best_v, 3))
+        # VMEM accounting below must price the lane the plan actually runs
+        # (a measured cross-lane pick differs from self.cfg until __init__
+        # re-resolves it)
+        plan_cfg = self.cfg
+        if plan.get("lane", plan_cfg.sel_lane) != plan_cfg.sel_lane:
+            plan_cfg = dataclasses.replace(plan_cfg, sel_lane=plan["lane"])
         if plan["mode"] == "streamed":
             const_bytes = _ga_step.ffm_const_bytes(self.executor.fit,
-                                                   self.cfg)
+                                                   plan_cfg)
             if self.stream_tile_islands is not None:
                 t = int(self.stream_tile_islands)
                 budget = (self.vmem_budget if self.vmem_budget is not None
                           else _ga_step.resident_vmem_budget())
-                need = 2 * _ga_step.resident_vmem_bytes(self.cfg, t,
+                need = 2 * _ga_step.resident_vmem_bytes(plan_cfg, t,
                                                         const_bytes)
                 if self.i_local % t or need > budget:
                     raise ValueError(
@@ -655,16 +702,24 @@ class IslandRingTopology(Topology):
             # the double-buffered working set of one tile — what actually
             # occupies VMEM while the grid pipeline streams the stack
             plan["vmem_estimate_bytes"] = 2 * _ga_step.resident_vmem_bytes(
-                self.cfg, plan["tile_islands"], const_bytes)
+                plan_cfg, plan["tile_islands"], const_bytes)
         elif plan["mode"].startswith("resident"):
             const_bytes = _ga_step.ffm_const_bytes(self.executor.fit,
-                                                   self.cfg)
+                                                   plan_cfg)
             plan["vmem_estimate_bytes"] = _ga_step.resident_vmem_bytes(
-                self.cfg, self.i_local, const_bytes)
+                plan_cfg, self.i_local, const_bytes)
             if os.environ.get("REPRO_VMEM_COMPILER_CHECK") == "1":
                 plan["vmem_compiler_check"] = _ga_step.resident_compiler_check(
-                    self.cfg, self.executor.fit, self.i_local,
+                    plan_cfg, self.executor.fit, self.i_local,
                     interpret=getattr(self.executor, "interpret", None))
+        elif self.executor.name == "fused":
+            # gridded fused launches hold ONE island per program instance —
+            # report its lane-aware working set so benches can show the
+            # selection lane's VMEM drop, not just gens/s
+            const_bytes = _ga_step.ffm_const_bytes(self.executor.fit,
+                                                   plan_cfg)
+            plan["vmem_estimate_bytes"] = _ga_step.resident_vmem_bytes(
+                plan_cfg, 1, const_bytes)
         return plan
 
     @staticmethod
@@ -717,9 +772,11 @@ class IslandRingTopology(Topology):
         return self._place(states, lead)
 
     def _runner_key(self, *parts):
+        # self.cfg.sel_lane rides along explicitly: a measured plan can move
+        # an "auto" spec to the other lane without changing compile_key()
         return CC.runner_key(self.spec, self.name, self.executor.name,
                              getattr(self.executor, "interpret", None),
-                             self.mesh, *parts)
+                             self.mesh, self.cfg.sel_lane, *parts)
 
     def _resident_runner(self, k: int):
         """Jitted resident launch (no mesh): ONE `ga_epoch_kernel` call
@@ -1072,10 +1129,12 @@ class ComposedBackend(Backend):
                          interpret=interpret, cost_table=cost_table,
                          plan_override=plan_override)
         opts = self.options
+        # self.spec, not the constructor arg: Backend.__init__ may have
+        # rebuilt the spec to apply an options-level sel_lane override
         self.executor: Executor = self.executor_cls(
-            spec, interpret=opts.interpret)
+            self.spec, interpret=opts.interpret)
         self.topology: Topology = self.topology_cls(
-            spec, self.executor, mesh=opts.mesh,
+            self.spec, self.executor, mesh=opts.mesh,
             cost_table=self.cost_table, plan_override=opts.plan_override,
             vmem_budget=opts.vmem_budget,
             stream_tile_islands=opts.stream_tile_islands)
@@ -1122,12 +1181,37 @@ FusedIslandsBackend = _compose("fused-islands", FusedExecutor,
 # ---------------------------------------------------------------------------
 
 
+def _pooled_fitness(fit, workers: int):
+    """Population-parallel host fitness: split the (N, V) batch into
+    `workers` contiguous row chunks and evaluate them on a bounded thread
+    pool.  Chunks come back in submission order and are concatenated, so
+    the result is bitwise identical to the serial batch call — the pool
+    only overlaps the (GIL-releasing or I/O-bound) fitness work."""
+    from concurrent.futures import ThreadPoolExecutor
+    pool = ThreadPoolExecutor(max_workers=workers)
+
+    def pooled(x):
+        x = np.asarray(x)
+        n = x.shape[0]
+        chunk = max(1, -(-n // workers))
+        parts = [x[i:i + chunk] for i in range(0, n, chunk)]
+        outs = list(pool.map(
+            lambda p: np.asarray(fit(p), np.float32), parts))
+        return np.concatenate(outs, axis=0)
+
+    return pooled
+
+
 class EagerBackend(Backend):
     name = "eager"
 
     def __init__(self, spec, **kw):
         super().__init__(spec, **kw)
+        spec = self.spec
         self.fit = spec.fitness_fn()
+        if self.options.fitness_workers > 1:
+            self.fit = _pooled_fitness(self.fit,
+                                       self.options.fitness_workers)
         self.apply_ops = OPS.make_apply_ops(spec.selection, spec.crossover,
                                             spec.mutation)
 

@@ -107,13 +107,17 @@ def stage_fingerprint(spec) -> str:
     return f"blackbox:v{spec.v}"
 
 
-def plan_point(spec, *, executor: str, mode: str, n_shards: int) -> dict:
+def plan_point(spec, *, executor: str, mode: str, n_shards: int,
+               lane: Optional[str] = None) -> dict:
     """The autotune cost-table identity of one epoch-plan candidate (the
     fields of `repro.autotune.table.POINT_FIELDS`).  Shares this module's
     shape-identity discipline: everything that changes the compiled launch
-    is in the key, seed/generations/n_repeats are not."""
+    is in the key, seed/generations/n_repeats are not.  `lane` is the
+    selection lane the candidate runs on (defaults to the spec's resolved
+    lane — pass the candidate's own "lane" when planning across lanes)."""
     i_local = max(1, spec.n_islands // max(1, n_shards))
     return {"executor": executor, "mode": mode, "migration": spec.migration,
             "n": spec.n, "i_local": i_local, "c": spec.bits_per_var,
             "stage": stage_fingerprint(spec), "shards": n_shards,
-            "E": spec.migrate_every}
+            "E": spec.migrate_every,
+            "lane": spec.resolved_sel_lane if lane is None else lane}

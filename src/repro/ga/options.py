@@ -27,6 +27,12 @@ Knobs:
     streamed lane on small populations.
   * stream_tile_islands — pin the streamed mode's island tile size
     (must divide the local island count and fit double-buffered).
+  * sel_lane — override the spec's fused-kernel tournament gather lane
+    ("onehot" | "gather" | "auto"); None keeps the spec's own setting.
+  * fitness_workers — eager backend only: size of the bounded thread pool
+    dispatching host-side blackbox fitness population-parallel (1 = the
+    serial batch call; results are order-preserving, so any worker count
+    is bit-deterministic).
 """
 
 from __future__ import annotations
@@ -36,6 +42,7 @@ from typing import Any, Optional
 
 PLAN_MODES = ("gridded", "resident", "resident-sharded", "resident-free",
               "streamed")
+SEL_LANES = ("onehot", "gather", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +53,8 @@ class EngineOptions:
     plan_override: Optional[str] = None
     vmem_budget: Optional[int] = None
     stream_tile_islands: Optional[int] = None
+    sel_lane: Optional[str] = None
+    fitness_workers: int = 1
 
     def __post_init__(self):
         if (self.plan_override is not None
@@ -53,10 +62,16 @@ class EngineOptions:
             raise ValueError(
                 f"plan_override must be one of {PLAN_MODES}, "
                 f"got {self.plan_override!r}")
+        if self.sel_lane is not None and self.sel_lane not in SEL_LANES:
+            raise ValueError(f"sel_lane must be one of {SEL_LANES}, "
+                             f"got {self.sel_lane!r}")
         for field in ("vmem_budget", "stream_tile_islands"):
             val = getattr(self, field)
             if val is not None and int(val) < 1:
                 raise ValueError(f"{field} must be >= 1, got {val!r}")
+        if int(self.fitness_workers) < 1:
+            raise ValueError(f"fitness_workers must be >= 1, "
+                             f"got {self.fitness_workers!r}")
 
     # ---- one flags→options parser shared by the CLIs --------------------
 
@@ -78,6 +93,16 @@ class EngineOptions:
         ap.add_argument("--stream-tile-islands", type=int, default=None,
                         metavar="T",
                         help="pin the streamed mode's island tile size")
+        ap.add_argument("--sel-lane", default=None, choices=SEL_LANES,
+                        help="fused-kernel tournament gather lane: 'onehot' "
+                             "(MXU matmul, N <= 1024), 'gather' (dynamic "
+                             "indexing, no cap) or 'auto' (default: the "
+                             "spec's setting)")
+        ap.add_argument("--fitness-workers", type=int, default=1,
+                        metavar="W",
+                        help="eager backend: thread-pool width for "
+                             "host-side blackbox fitness dispatch "
+                             "(1 = serial batch call)")
 
     @classmethod
     def from_args(cls, args, *, mesh=None,
@@ -90,7 +115,9 @@ class EngineOptions:
                    plan_override=getattr(args, "plan_override", None),
                    vmem_budget=getattr(args, "vmem_budget", None),
                    stream_tile_islands=getattr(args, "stream_tile_islands",
-                                               None))
+                                               None),
+                   sel_lane=getattr(args, "sel_lane", None),
+                   fitness_workers=getattr(args, "fitness_workers", 1))
 
 
 def resolve_options(options: Optional[EngineOptions] = None, *,

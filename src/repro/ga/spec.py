@@ -47,6 +47,12 @@ class GASpec:
     bits_per_var: int = 10         # c (paper: m/2)
     n_vars: Optional[int] = None   # V; default from the problem registry
     mode: str = "arith"            # FFM mode: "lut" (ROMs) | "arith" (VPU)
+    # fused-kernel tournament gather lane: "onehot" ((N, N) MXU matmul
+    # gathers, N <= 1024), "gather" (jnp.take dynamic indexing, O(N·V),
+    # no cap) or "auto" (onehot while legal, gather past the cap; with a
+    # cost table the planner argmaxes MEASURED gens/s across both lanes).
+    # Both lanes are bit-identical; this knob trades VMEM for MXU work.
+    sel_lane: str = "auto"
 
     # ---- operators ------------------------------------------------------
     selection: str = "tournament"
@@ -104,6 +110,20 @@ class GASpec:
             raise ValueError("set exactly one of problem= or fitness=")
         if self.mode not in ("lut", "arith"):
             raise ValueError(f"mode must be 'lut' or 'arith', got {self.mode!r}")
+        if self.sel_lane not in ("auto", "onehot", "gather"):
+            raise ValueError(f"sel_lane must be 'onehot', 'gather' or "
+                             f"'auto', got {self.sel_lane!r}")
+        if self.sel_lane == "onehot" and self.n > G.ONEHOT_MAX_N:
+            # the lane-aware kernel gate, surfaced at spec build: an
+            # explicit onehot pin past the one-hot VMEM cap can never run
+            # on the fused kernel path
+            raise ValueError(
+                f"sel_lane='onehot' pinned with N={self.n} > "
+                f"{G.ONEHOT_MAX_N}: the (N, N) one-hot tournament matrices "
+                "would exceed VMEM in every fused kernel.  Fix: split the "
+                "population across more islands (smaller per-island N), or "
+                "switch to the O(N*V) dynamic-indexing lane with "
+                "sel_lane='gather'")
         if self.problem is not None:
             # resolve "name:V" shorthand into (problem, n_vars) and validate
             # through the SAME rule set compile_program enforces
@@ -177,6 +197,19 @@ class GASpec:
         return F.resolve_vars(self.problem_def(), self.n_vars)
 
     @property
+    def resolved_sel_lane(self) -> str:
+        """The concrete kernel selection lane this spec defaults to: an
+        explicit pin wins; "auto" keeps the MXU one-hot lane while it is
+        legal (N <= ONEHOT_MAX_N) and switches to the dynamic-indexing
+        gather lane past the cap.  With an autotune cost table the planner
+        may still move an "auto" spec to the measured-faster lane at plan
+        time (see IslandRingTopology._epoch_plan); this value is the
+        heuristic starting point."""
+        if self.sel_lane != "auto":
+            return self.sel_lane
+        return "onehot" if self.n <= G.ONEHOT_MAX_N else "gather"
+
+    @property
     def effective_topology(self) -> str:
         """The topology this spec runs on: the explicit `topology` field, or
         derived from `n_islands` when left as None/'auto'."""
@@ -194,7 +227,8 @@ class GASpec:
                           mutation_rate=self.mutation_rate,
                           minimize=self.minimize,
                           steps_per_draw=self.steps_per_draw,
-                          seed=self.seed, mode=self.mode)
+                          seed=self.seed, mode=self.mode,
+                          sel_lane=self.resolved_sel_lane)
 
     def problem_def(self) -> Optional[F.ProblemDef]:
         return F.PROBLEMS[self.problem] if self.problem is not None else None
@@ -232,6 +266,7 @@ class GASpec:
         fit_id = (self.problem if self.problem is not None
                   else ("blackbox", id(self.fitness), self.bounds))
         return (fit_id, self.v, self.n, self.bits_per_var, self.mode,
+                self.resolved_sel_lane,
                 self.selection, self.crossover, self.mutation,
                 self.mutation_rate, self.minimize, self.steps_per_draw,
                 self.n_islands, self.migrate_every, self.gens_per_epoch,

@@ -37,7 +37,9 @@ class PlanInfo:
     the VMEM-estimator reason when the resident shape was rejected (set for
     both the gridded fallback AND the streamed lane, which exists because
     of that rejection).  tile_islands is the streamed mode's island tile.
-    gens_per_s is the measured rate that justified a "measured" choice."""
+    lane is the selection lane the fused kernels ran ("onehot" | "gather" |
+    "-" for executors without one).  gens_per_s is the measured rate that
+    justified a "measured" choice."""
 
     mode: str = "-"
     source: str = "-"
@@ -45,6 +47,7 @@ class PlanInfo:
     epochs_per_launch: int = 1
     gens_per_launch: int = 1
     tile_islands: Optional[int] = None
+    lane: str = "-"
     vmem_estimate_bytes: Optional[int] = None
     gens_per_s: Optional[float] = None
 
@@ -57,6 +60,7 @@ class PlanInfo:
                    epochs_per_launch=int(plan.get("epochs_per_launch", 1)),
                    gens_per_launch=int(plan.get("gens_per_launch", 1)),
                    tile_islands=plan.get("tile_islands"),
+                   lane=plan.get("lane", "-"),
                    vmem_estimate_bytes=plan.get("vmem_estimate_bytes"),
                    gens_per_s=plan.get("plan_gens_per_s"))
 
@@ -125,6 +129,8 @@ class RunTelemetry:
             d["migrations"] = t.migrations
             if p.tile_islands is not None:
                 d["tile_islands"] = p.tile_islands
+            if p.lane != "-":
+                d["sel_lane"] = p.lane
             if p.fallback is not None:
                 d["resident_fallback"] = p.fallback
                 d["plan_fallback"] = p.fallback

@@ -6,20 +6,40 @@ pipeline; here the whole generation is ONE kernel launch whose working set
 (population, fitness vector, LFSR banks, one-hot tournament matrices) lives
 entirely in VMEM — no HBM round-trips between GA stages.
 
-Key adaptation — MUX trees → MXU matmuls:
+Key adaptation — MUX trees → two selection lanes (``GAConfig.sel_lane``):
   the paper gathers tournament contestants through N-input multiplexer trees
-  (SMMUX1..3, the source of its O(N²) LUT growth).  A TPU has no per-lane
-  dynamic gather, but the systolic array contracts a one-hot matrix against
-  the population in O(N²) MACs — the exact same asymptotics as the MUX-tree
-  area, now in hardware we do have.  Bit-exactness is preserved by splitting
-  each uint32 word into two 16-bit halves before the f32 matmul (≤ 2^16 is
-  exactly representable; each one-hot row has a single nonzero so the
-  accumulation is exact), then recombining.
+  (SMMUX1..3, the source of its O(N²) LUT growth).  The kernels implement
+  that gather two bit-identical ways:
 
-Grid: one program instance per island.  VMEM budget per instance is dominated
-by the (N, N) one-hot f32 matrices → N ≤ 1024 keeps it ≤ 4 MiB (checked).
-The FPGA paper tops out at N=64; larger populations use more islands or the
-pure-JAX path in repro.core.ga.
+  * ``"onehot"`` — the systolic array contracts an (N, N) one-hot matrix
+    against the population in O(N²) MACs, the MUX tree's asymptotics in
+    hardware we do have.  Bit-exactness is preserved by splitting each
+    uint32 word into two 16-bit halves before the f32 matmul (≤ 2^16 is
+    exactly representable; each one-hot row has a single nonzero so the
+    accumulation is exact), then recombining.
+  * ``"gather"`` — plain dynamic indexing (``jnp.take`` row gathers on the
+    VPU): O(N·V) working set, trivially exact, no one-hot scratch.  This
+    drops the dominant VMEM term and with it the N ≤ 1024 cap.
+
+  Both lanes consume the same tournament indices and apply the same tie
+  rules; the one-hot matmuls were already exact, so the lanes are
+  bit-identical to each other and to the reference path.
+
+Grid: one program instance per island.  VMEM budget per instance is
+lane-dependent (`resident_vmem_bytes`):
+
+  * onehot lane — dominated by the (N, N) one-hot f32 matrices (iota + two
+    contestant one-hots + winner ≈ 16·N² B): N ≤ 1024 keeps one island at
+    ≤ ~4 MiB apart from state, and `check_kernel_lane` raises past that
+    (fix: more islands, or ``sel_lane="gather"``).
+  * gather lane — state + offspring only, O(N·(V + 1)) per island: the
+    selection working set collapses from 16·N² B to a few index/fitness
+    vectors (~64× smaller at N=1024), so N = 2048+ single-island runs are
+    feasible.  Power-of-two N is still required on BOTH lanes (the
+    tournament indices are the top `idx_bits` of the LFSR draw).
+
+The FPGA paper tops out at N=64; larger populations use more islands, the
+gather lane, or the pure-JAX path in repro.core.ga.
 
 The FFM stage is PLUGGABLE: the kernel takes a traceable ``ffm`` function
 ``uint32[N, V] bits -> f32[N]`` (normally ``FitnessProgram.stage`` from
@@ -80,9 +100,11 @@ Epoch planning & VMEM budget — the TWO-TIER decision:
   else gridded), making the no-table path deterministic without
   measurement.
 
-  The VMEM estimator: the island state stack (population + LFSR banks +
-  fitness) PLUS the per-island one-hot tournament set — which materializes
-  as [I, N, N] under the in-kernel island vmap — PLUS any hoisted FFM
+  The VMEM estimator is LANE-AWARE: the island state stack (population +
+  LFSR banks + fitness) PLUS the per-island selection working set — on the
+  onehot lane the one-hot tournament matrices, which materialize as
+  [I, N, N] under the in-kernel island vmap; on the gather lane a few O(N)
+  index/fitness vectors — PLUS any hoisted FFM
   constants must stay under `resident_vmem_budget()` (default 16 MiB ≈ one
   TPU core's VMEM; override with REPRO_RESIDENT_VMEM_BUDGET).  When it does
   not fit, the engine silently falls back to the gridded kernel (capping
@@ -113,7 +135,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import islands as ISL
 from repro.core import lfsr
-from repro.core.ga import GAConfig
+from repro.core.ga import GAConfig, ONEHOT_MAX_N
 
 # The kernel-facing FFM stage: uint32 bits (N, V) -> f32 fitness (N,).
 FfmStage = Callable[[jax.Array], jax.Array]
@@ -175,6 +197,31 @@ def _onehot_gather_u32(oh: jax.Array, x: jax.Array) -> jax.Array:
     ghi = jax.lax.dot(oh, hi, precision=jax.lax.Precision.HIGHEST)
     glo = jax.lax.dot(oh, lo, precision=jax.lax.Precision.HIGHEST)
     return (ghi.astype(jnp.uint32) << 16) | glo.astype(jnp.uint32)
+
+
+def check_kernel_lane(cfg: GAConfig) -> None:
+    """THE lane-aware validity gate for the fused kernel path — called by
+    all three kernel entry points and by `GASpec` validation, replacing the
+    bare asserts that used to be triplicated across the kernels.
+
+    The tournament indices are the top `idx_bits` of the LFSR draw, so the
+    kernel path requires a power-of-two N on ANY lane (the reference
+    backend folds indices modulo N instead and takes any even N).  The
+    onehot lane additionally caps N at `ONEHOT_MAX_N`: its (N, N) one-hot
+    tournament matrices are the dominant VMEM term.  Raises ValueError —
+    these conditions are reachable from user specs, not internal
+    invariants."""
+    if cfg.n & (cfg.n - 1):
+        raise ValueError(
+            f"N={cfg.n}: the fused kernel path draws tournament indices "
+            "from the top idx_bits LFSR bits and requires a power-of-two N "
+            "(the reference backend accepts any even N)")
+    if cfg.sel_lane == "onehot" and cfg.n > ONEHOT_MAX_N:
+        raise ValueError(
+            f"N={cfg.n} > {ONEHOT_MAX_N} on the 'onehot' selection lane: "
+            "the (N, N) one-hot tournament matrices would exceed VMEM.  "
+            "Fix: split the population across more islands, or switch to "
+            "the O(N*V) dynamic-indexing lane with sel_lane='gather'")
 
 
 # ---------------------------------------------------------------------------
@@ -260,15 +307,20 @@ def resident_vmem_bytes(cfg: GAConfig, n_islands: int,
                         const_bytes: int = 0) -> int:
     """Estimated VMEM working set of one resident-epoch program instance:
     the island state stack (population, LFSR banks, fitness) plus the
-    per-island one-hot tournament set — the dominant term, since the
-    in-kernel island vmap materializes the (N, N) iota/one-hot matrices as
-    [I, N, N] — plus offspring temporaries and the hoisted FFM consts."""
+    LANE-DEPENDENT selection working set — on the onehot lane the one-hot
+    tournament matrices, the dominant term, since the in-kernel island vmap
+    materializes the (N, N) iota/one-hot matrices as [I, N, N]; on the
+    gather lane just the O(N) tournament index/fitness vectors — plus
+    offspring temporaries and the hoisted FFM consts."""
     n, v = cfg.n, cfg.v
     state = 4 * (n * v + 2 * n + v * (n // 2) + v * n + n)  # x/sel/cross/mut/y
-    onehot = 4 * 4 * n * n              # iota + oh1 + oh2 + winner, f32
+    if cfg.sel_lane == "gather":
+        sel = 4 * 6 * n                 # i1/i2/y1/y2/winner idx + mask, i32
+    else:
+        sel = 4 * 4 * n * n             # iota + oh1 + oh2 + winner, f32
     work = 4 * (2 * n * v + 4 * n)      # offspring + tournament temporaries
     best = 4 * (1 + v)                  # running best fold
-    return n_islands * (state + onehot + work + best) + const_bytes
+    return n_islands * (state + sel + work + best) + const_bytes
 
 
 def resident_fit_reason(cfg: GAConfig, n_islands: int, const_bytes: int = 0,
@@ -311,9 +363,14 @@ def epoch_mode_candidates(cfg: GAConfig, i_local: int, const_bytes: int = 0,
     ordered so candidates[0] is the heuristic choice (what a planner with
     no cost table must pick, deterministically).
 
-    Each candidate is a plan dict: {"mode", "epochs_per_launch",
+    Each candidate is a plan dict: {"mode", "lane", "epochs_per_launch",
     "gens_per_launch"} (+ "fallback" carrying the VMEM-estimator reason when
     a resident shape was rejected, + "tile_islands" for the streamed mode).
+    The "lane" is `cfg.sel_lane` throughout — this function enumerates the
+    launch shapes of ONE lane; the planner builds the cross-lane (mode ×
+    lane) grid by calling it once per lane (see
+    `IslandRingTopology._epoch_plan`), keeping the default candidate list
+    (and the no-table heuristic) exactly what it was before lanes existed.
     `gens_per_launch` is the generations one kernel launch folds — the cost
     table's interpolation axis.  When the resident stack exceeds the budget
     the streamed lane — NOT gridded — is the heuristic for ring migration:
@@ -325,8 +382,8 @@ def epoch_mode_candidates(cfg: GAConfig, i_local: int, const_bytes: int = 0,
     # generations per kernel launch, the reference executor scans all E
     g_gridded = (min(gens_per_epoch, migrate_every) if executor == "fused"
                  else migrate_every)
-    gridded = {"mode": "gridded", "epochs_per_launch": 1,
-               "gens_per_launch": g_gridded}
+    gridded = {"mode": "gridded", "lane": cfg.sel_lane,
+               "epochs_per_launch": 1, "gens_per_launch": g_gridded}
     if executor != "fused":
         return [gridded]
     if migration == "ring" and gens_per_epoch >= migrate_every:
@@ -336,15 +393,18 @@ def epoch_mode_candidates(cfg: GAConfig, i_local: int, const_bytes: int = 0,
             if tile is None:
                 return [dict(gridded, fallback=reason)]
             k = max(1, gens_per_epoch // migrate_every)
-            return [{"mode": "streamed", "epochs_per_launch": k,
+            return [{"mode": "streamed", "lane": cfg.sel_lane,
+                     "epochs_per_launch": k,
                      "gens_per_launch": k * migrate_every,
                      "tile_islands": tile, "fallback": reason},
                     dict(gridded, fallback=reason)]
         if sharded:
-            return [{"mode": "resident-sharded", "epochs_per_launch": 1,
+            return [{"mode": "resident-sharded", "lane": cfg.sel_lane,
+                     "epochs_per_launch": 1,
                      "gens_per_launch": migrate_every}, gridded]
         k = max(1, gens_per_epoch // migrate_every)
-        return [{"mode": "resident", "epochs_per_launch": k,
+        return [{"mode": "resident", "lane": cfg.sel_lane,
+                 "epochs_per_launch": k,
                  "gens_per_launch": k * migrate_every}, gridded]
     if migration == "none" and gens_per_epoch > migrate_every and not sharded:
         # no ring to run: the resident kernel can fold the WHOLE epoch in
@@ -360,12 +420,13 @@ def epoch_mode_candidates(cfg: GAConfig, i_local: int, const_bytes: int = 0,
             out = [dict(gridded, fallback=reason)]
             if tile is not None:
                 k = max(1, gens_per_epoch // migrate_every)
-                out.append({"mode": "streamed", "epochs_per_launch": k,
+                out.append({"mode": "streamed", "lane": cfg.sel_lane,
+                            "epochs_per_launch": k,
                             "gens_per_launch": k * migrate_every,
                             "tile_islands": tile, "fallback": reason})
             return out
         return [gridded,
-                {"mode": "resident-free",
+                {"mode": "resident-free", "lane": cfg.sel_lane,
                  "epochs_per_launch": max(1, gens_per_epoch // migrate_every),
                  "gens_per_launch": gens_per_epoch}]
     return [gridded]
@@ -411,11 +472,14 @@ def resident_compiler_check(cfg: GAConfig, ffm: FfmStage, i_local: int, *,
 
 def _gen_best(x, y, cfg: GAConfig):
     """First-occurrence generation best — the reference scan's argmin/argmax
-    tie rule, expressed MXU-style: the index is a min-reduction over a masked
-    iota (no dynamic gather), the chromosome a one-hot matmul gather."""
+    tie rule: the index is a min-reduction over a masked iota (no argmin
+    inside the kernel), the chromosome pick then runs on the configured
+    selection lane (one-hot matmul gather vs a jnp.take row gather)."""
     m = jnp.min(y) if cfg.minimize else jnp.max(y)
     iota = jax.lax.broadcasted_iota(jnp.int32, (cfg.n,), 0)
     idx = jnp.min(jnp.where(y == m, iota, cfg.n))
+    if cfg.sel_lane == "gather":
+        return m, jnp.take(x, idx[None], axis=0)[0]          # (V,)
     oh = (iota == idx).astype(jnp.float32)[None, :]          # (1, N)
     return m, _onehot_gather_u32(oh, x)[0]                   # (V,)
 
@@ -491,17 +555,30 @@ def _one_generation(x, sel_in, cross_in, mut_in, _y_prev,
     # ---- FFM (pluggable traced stage: decode + problem expression, VPU) --
     y = jnp.asarray(ffm(x), jnp.float32)                  # (N,)
 
-    # ---- SM: tournaments via one-hot MXU gathers --------------------------
+    # ---- SM: tournaments on the configured selection lane -----------------
     i1 = (sel[0] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)
     i2 = (sel[1] >> jnp.uint32(32 - cfg.idx_bits)).astype(jnp.int32)
-    iota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
-    oh1 = (iota == i1[:, None]).astype(jnp.float32)
-    oh2 = (iota == i2[:, None]).astype(jnp.float32)
-    y1 = jax.lax.dot(oh1, y[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
-    y2 = jax.lax.dot(oh2, y[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
-    first_wins = (y1 <= y2) if cfg.minimize else (y1 >= y2)
-    ohw = jnp.where(first_wins[:, None], oh1, oh2)        # winner one-hot
-    w = _onehot_gather_u32(ohw, x)                        # (N, V)
+    if cfg.sel_lane == "gather":
+        # dynamic-indexing lane: VPU row gathers, O(N·V) scratch — both
+        # lanes read the same indices and tie rules, so they are
+        # bit-identical (the one-hot matmuls below were already exact)
+        y1 = jnp.take(y, i1, axis=0)
+        y2 = jnp.take(y, i2, axis=0)
+        first_wins = (y1 <= y2) if cfg.minimize else (y1 >= y2)
+        wi = jnp.where(first_wins, i1, i2)                # winner index
+        w = jnp.take(x, wi, axis=0)                       # (N, V)
+    else:
+        # one-hot lane: exact gathers as (N, N) MXU contractions
+        iota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        oh1 = (iota == i1[:, None]).astype(jnp.float32)
+        oh2 = (iota == i2[:, None]).astype(jnp.float32)
+        y1 = jax.lax.dot(oh1, y[:, None],
+                         precision=jax.lax.Precision.HIGHEST)[:, 0]
+        y2 = jax.lax.dot(oh2, y[:, None],
+                         precision=jax.lax.Precision.HIGHEST)[:, 0]
+        first_wins = (y1 <= y2) if cfg.minimize else (y1 >= y2)
+        ohw = jnp.where(first_wins[:, None], oh1, oh2)    # winner one-hot
+        w = _onehot_gather_u32(ohw, x)                    # (N, V)
 
     # ---- CM: mask-shift single-point crossover ----------------------------
     cut = (cross >> jnp.uint32(32 - cfg.cut_bits)).astype(jnp.uint32)
@@ -534,8 +611,7 @@ def ga_generation_kernel(x, sel, cross, mut, *, cfg: GAConfig,
     track_best appends (best_y[I], best_x[I, V]) — the running best over all
     `gens` in-kernel generations, reference tie rule (see `_kernel`).
     """
-    assert cfg.n & (cfg.n - 1) == 0, "kernel path requires power-of-two N"
-    assert cfg.n <= 1024, "one-hot (N,N) must fit VMEM; use islands for more"
+    check_kernel_lane(cfg)
     i_islands, n, v = x.shape
     assert (n, v) == (cfg.n, cfg.v)
 
@@ -705,8 +781,7 @@ def ga_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig, ffm: FfmStage,
     asserts the budget (and the hoisted-const gate) rather than silently
     overflowing VMEM.
     """
-    assert cfg.n & (cfg.n - 1) == 0, "kernel path requires power-of-two N"
-    assert cfg.n <= 1024, "one-hot (N,N) must fit VMEM; use more islands"
+    check_kernel_lane(cfg)
     assert intervals >= 1 and migrate_every >= 1
     assert not (boundary and intervals != 1), \
         "boundary (sharded) epochs exchange elites between launches: one " \
@@ -863,8 +938,7 @@ def ga_streamed_epoch_kernel(x, sel, cross, mut, *, cfg: GAConfig,
     budget (env-derived — a planner-forced smaller budget never makes a
     legitimate tile illegal here).
     """
-    assert cfg.n & (cfg.n - 1) == 0, "kernel path requires power-of-two N"
-    assert cfg.n <= 1024, "one-hot (N,N) must fit VMEM; use more islands"
+    check_kernel_lane(cfg)
     assert migrate_every >= 1 and tile_islands >= 1
     g_grid, i_islands, n, v = x.shape
     assert (n, v) == (cfg.n, cfg.v)

@@ -166,7 +166,9 @@ def main():
     if tele.plan.mode != "-":
         tile = (f", tile={tele.plan.tile_islands}"
                 if tele.plan.tile_islands else "")
-        print(f"epoch plan: {tele.plan.mode} ({tele.plan.source}{tile})")
+        lane = f", lane={tele.plan.lane}" if tele.plan.lane != "-" else ""
+        print(f"epoch plan: {tele.plan.mode} "
+              f"({tele.plan.source}{lane}{tile})")
     if tele.topology.migrations:
         print(f"migrations: {tele.topology.migrations}")
     print(f"best fitness: {out.best_fitness:.4f}")

@@ -160,6 +160,7 @@ class GAJobStats:
     plan_source: str = "-"           # heuristic | measured | forced
     plan_fallback: Optional[str] = None   # why resident modes were infeasible
     tile_islands: Optional[int] = None    # streamed mode's island tile size
+    sel_lane: str = "-"              # fused tournament lane: onehot | gather
 
     @property
     def gens_per_s(self) -> float:
@@ -198,6 +199,7 @@ class GAJobStats:
             "plan_source": self.plan_source,
             "plan_fallback": self.plan_fallback,
             "tile_islands": self.tile_islands,
+            "sel_lane": self.sel_lane,
         }
 
 
@@ -286,6 +288,7 @@ class GAMetricsRegistry:
                     job.epoch_mode = rt.plan.mode
                     job.plan_source = rt.plan.source
                     job.tile_islands = rt.plan.tile_islands
+                    job.sel_lane = rt.plan.lane
                     job.plan_fallback = rt.plan.fallback or job.plan_fallback
             bf = tele.get("best_fitness")
             if bf is not None:

@@ -121,6 +121,19 @@ def render_prometheus(snapshot: dict) -> str:
     for j in jobs.values():
         lines.append(
             f'{name}{{{label_str(j)},status="{_esc(j["status"])}"}} 1')
+    # the epoch-plan decision (mode × provenance × selection lane) as a
+    # one-hot info gauge, so dashboards can see e.g. "auto" picking gather
+    name = f"{_PREFIX}_plan_info"
+    lines.append(f"# HELP {name} Epoch plan decision "
+                 "(1 for the current mode/source/lane labels)")
+    lines.append(f"# TYPE {name} gauge")
+    for j in jobs.values():
+        if j.get("epoch_mode", "-") == "-":
+            continue
+        lines.append(
+            f'{name}{{{label_str(j)},mode="{_esc(j["epoch_mode"])}"'
+            f',source="{_esc(j["plan_source"])}"'
+            f',lane="{_esc(j.get("sel_lane", "-"))}"}} 1')
     for key, suffix, help_ in _FLEET_GAUGES:
         name = f"{_PREFIX}_{suffix}"
         lines.append(f"# HELP {name} {help_}")

@@ -188,9 +188,14 @@ def test_capability_matrix_and_fallback():
     assert r.backend == "reference"
     assert any("falling back" in str(x.message) for x in w)
 
-    # non-pow2 N and oversize N are fused-incompatible
+    # non-pow2 N is fused-incompatible on every lane; N past the onehot
+    # cap resolves to the gather lane (sel_lane="auto") and stays fused,
+    # while an explicit onehot pin is rejected
     assert ga.capability_matrix(_spec(n=30))["fused"] is not None
-    assert ga.capability_matrix(_spec(n=2048))["fused"] is not None
+    assert ga.capability_matrix(_spec(n=2048))["fused"] is None
+    assert _spec(n=2048).resolved_sel_lane == "gather"
+    with pytest.raises(ValueError, match="sel_lane='gather'"):
+        _spec(n=2048, sel_lane="onehot")
     # non-paper pipeline routes off the fused kernel
     assert ga.capability_matrix(_spec(selection="rank"))["fused"] is not None
     # eager fitness only runs on the eager backend

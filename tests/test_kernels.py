@@ -5,6 +5,8 @@ so the sweeps cover the paper problems, the n-variable registry suite AND a
 user blackbox closing over its own arrays (the closure-constant hoisting
 path)."""
 
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -232,10 +234,26 @@ def test_kernel_ffm_const_size_gate():
                           cfg=cfg, ffm=prog.stage)
 
 
-def test_kernel_rejects_oversize_population():
+def test_kernel_rejects_oversize_population_on_onehot_lane():
+    """The onehot lane's (N, N) tournament matrices cap N; the error names
+    the gather lane as the fix, and the gather lane actually runs there."""
     cfg = G.GAConfig(n=2048, c=10, v=2, seed=1, mode="arith")
     ffm = _ffm("F3", cfg)
     st = _states(cfg, 1)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="sel_lane='gather'"):
+        ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+                          cfg=cfg, ffm=ffm)
+    out = ops.ga_generation(
+        st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
+        cfg=dataclasses.replace(cfg, sel_lane="gather"), ffm=ffm)
+    assert out[0].shape == st.x.shape
+
+
+def test_kernel_rejects_non_pow2_population():
+    cfg = G.GAConfig(n=30, c=10, v=2, seed=1, mode="arith",
+                     sel_lane="gather")
+    ffm = _ffm("F3", cfg)
+    st = _states(cfg, 1)
+    with pytest.raises(ValueError, match="power-of-two"):
         ops.ga_generation(st.x, st.sel_lfsr, st.cross_lfsr, st.mut_lfsr,
                           cfg=cfg, ffm=ffm)
