@@ -28,6 +28,10 @@ echo "== scheduler smoke (multi-tenant packing + preemption on an"
 echo "   8-fake-device mesh; per-job bests bit-identical to solo runs) =="
 timeout 420 python scripts/scheduler_smoke.py
 
+echo "== chaos smoke (deterministic fault injection: crash retry, corrupt"
+echo "   ckpt fallback, pack quarantine, preemption + journal recovery) =="
+timeout 420 python scripts/chaos_smoke.py
+
 echo "== autotune smoke (tiny sweep on the 8-fake-device host; table"
 echo "   written, planner consumes it, snapshot still steers plans) =="
 mkdir -p artifacts

@@ -88,6 +88,7 @@ def main():
         # 2) packing + preemption actually exercised
         stats = sched.stats()
         print(f"stats: {stats}")
+        assert stats["worker_alive"] is True, "worker thread died mid-run"
         assert max(r["pack_size"] for r in results.values()) >= 2, \
             "no pack held >= 2 jobs"
         assert stats["jobs_packed"] >= 2
@@ -118,6 +119,8 @@ def main():
     finally:
         server.shutdown()
         sched.shutdown()
+        assert sched.stats()["worker_alive"] is False, \
+            "worker thread survived shutdown"
 
 
 if __name__ == "__main__":

@@ -13,6 +13,17 @@ Design points for the 1000+-node story:
     checkpoint I/O with compute;
   * integrity: manifest written last (atomic rename) — a crash mid-write
     leaves no valid-looking checkpoint; `latest_step` only trusts manifests.
+    Each shard's CRC32 rides in the manifest, `validate_step` recomputes
+    it, and `latest_step` skips a step whose shards fail validation
+    (falling back to the newest earlier valid step with a warning) instead
+    of letting resume crash mid-restore on an opaque npz error.  `restore`
+    re-checks before reading and raises the typed `CheckpointCorrupt`.
+
+Fault injection: `save` consults `repro.faults` (the ambient
+``REPRO_GA_FAULTS`` injector, or one passed via ``faults=``) at the
+``ckpt_corrupt`` site — when armed, it flips bytes in the just-written
+shard AFTER its checksum was recorded, simulating bit-rot the validation
+path must catch.
 
 On this single-host container each "host" is host 0; the pathing and
 manifest format are multi-host from day one.
@@ -26,12 +37,20 @@ import os
 import shutil
 import threading
 import time
+import warnings
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro import faults as FLT
+
 _SEP = "/"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint step failed shard-checksum validation."""
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -43,9 +62,22 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(block, crc)
+    return crc
+
+
 def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
-         host_id: int = 0) -> str:
-    """Synchronous sharded save. Returns the checkpoint path."""
+         host_id: int = 0, *, faults=None, fault_tag: str = "") -> str:
+    """Synchronous sharded save. Returns the checkpoint path.
+
+    Each shard's CRC32 + byte count land in the manifest so readers can
+    validate before trusting the step.  `faults`/`fault_tag` hook the
+    ``ckpt_corrupt`` injection site (see `repro.faults`): when a rule
+    fires, the shard is corrupted AFTER its checksum was recorded."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = path + ".tmp"
     os.makedirs(tmp, exist_ok=True)
@@ -61,9 +93,19 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
             arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
         arrays[k.replace(_SEP, "__")] = arr
         meta[k] = {"shape": list(arr.shape), "dtype": logical_dtype}
-    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **arrays)
+    shard_name = f"shard_{host_id}.npz"
+    shard_path = os.path.join(tmp, shard_name)
+    np.savez(shard_path, **arrays)
+    shards = {shard_name: {"crc32": _crc32_file(shard_path),
+                           "bytes": os.path.getsize(shard_path)}}
+    injector = FLT.resolve_faults(faults)
+    if injector is not None:
+        rule = injector.fires("ckpt_corrupt",
+                              tag=f"{fault_tag}|{ckpt_dir}|step={step}")
+        if rule is not None:   # bit-rot AFTER the checksum: readers must catch
+            FLT.corrupt_file(shard_path, seed=rule.seed)
     manifest = {"step": step, "keys": meta, "extra": extra or {},
-                "n_hosts": 1, "time": time.time()}
+                "n_hosts": 1, "time": time.time(), "shards": shards}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(path):
@@ -98,7 +140,35 @@ class AsyncCheckpointer:
             self._thread = None
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def validate_step(ckpt_dir: str, step: int) -> Optional[str]:
+    """None when the step's shards match their manifest checksums, else a
+    human-readable reason.  Manifests written before checksums existed
+    (no "shards" key) validate trivially — they can't be checked."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return f"unreadable manifest: {e}"
+    for shard_name, meta in (manifest.get("shards") or {}).items():
+        shard_path = os.path.join(path, shard_name)
+        if not os.path.exists(shard_path):
+            return f"missing shard {shard_name}"
+        if os.path.getsize(shard_path) != int(meta["bytes"]):
+            return (f"shard {shard_name} is {os.path.getsize(shard_path)} "
+                    f"bytes, manifest says {meta['bytes']}")
+        crc = _crc32_file(shard_path)
+        if crc != int(meta["crc32"]):
+            return (f"shard {shard_name} checksum {crc:#010x} != manifest "
+                    f"{int(meta['crc32']):#010x}")
+    return None
+
+
+def latest_step(ckpt_dir: str, validate: bool = True) -> Optional[int]:
+    """Newest step whose manifest exists — and, with `validate` (the
+    default), whose shards pass checksum validation: a corrupt newest step
+    falls back to the previous valid one with a warning rather than
+    handing resume a state that explodes mid-np.load."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
@@ -106,15 +176,31 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         if d.startswith("step_") and not d.endswith(".tmp") and \
                 os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
             steps.append(int(d.split("_")[1]))
-    return max(steps) if steps else None
+    for step in sorted(steps, reverse=True):
+        if not validate:
+            return step
+        reason = validate_step(ckpt_dir, step)
+        if reason is None:
+            return step
+        warnings.warn(
+            f"checkpoint step {step} in {ckpt_dir} failed validation "
+            f"({reason}); falling back to the previous step", stacklevel=2)
+    return None
 
 
 def restore(ckpt_dir: str, step: int, tree_like,
-            shardings=None) -> Tuple[Any, Dict]:
+            shardings=None, validate: bool = True) -> Tuple[Any, Dict]:
     """Restore into the structure of `tree_like`, re-sharding if shardings
     (a matching pytree of NamedSharding or None) is given — this is the
-    elastic-restart path: the saved mesh need not match the current one."""
+    elastic-restart path: the saved mesh need not match the current one.
+    With `validate` (default), shard checksums are re-checked first and a
+    mismatch raises `CheckpointCorrupt` instead of an opaque npz error."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if validate:
+        reason = validate_step(ckpt_dir, step)
+        if reason is not None:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step} in {ckpt_dir} is corrupt: {reason}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "shard_0.npz"))

@@ -92,14 +92,14 @@ from repro.ga.backends import (BACKENDS, EXECUTORS, TOPOLOGIES, Backend,
 from repro.ga.compile_cache import RUNNER_CACHE, CompileCache
 from repro.ga.engine import (BackendUnsupported, Engine, EngineResult,
                              PackedEngine, capability_matrix,
-                             resolve_backend, solve)
+                             repack_checkpoint, resolve_backend, solve)
 
 __all__ = [
     "GASpec", "paper_spec",
     "PROBLEMS", "ProblemDef", "FitnessProgram", "compile_program",
     "register_problem", "resolve_problem",
     "Engine", "EngineResult", "PackedEngine", "solve", "resolve_backend",
-    "capability_matrix", "BackendUnsupported",
+    "capability_matrix", "BackendUnsupported", "repack_checkpoint",
     "EngineOptions", "resolve_options",
     "RunTelemetry", "PlanInfo", "TopologyInfo", "ReplicaStats",
     "TELEMETRY_VERSION",

@@ -34,6 +34,7 @@ from typing import Any, Dict, Iterator, Optional
 import jax
 import numpy as np
 
+from repro import faults as FLT
 from repro.ckpt import checkpoint as CKPT
 from repro.ga import telemetry as RT
 from repro.ga.backends import BACKENDS, Backend, Segment
@@ -138,6 +139,9 @@ class Engine:
                                        cost_table=cost_table,
                                        plan_override=plan_override)
         self.backend_name = resolve_backend(spec, backend, self.options.mesh)
+        # resolved ONCE and shared with every checkpoint write: fault-rule
+        # occurrence counters live on the injector instance
+        self.faults = FLT.resolve_faults(self.options.faults)
         self.backend: Backend = BACKENDS[self.backend_name](
             spec, options=self.options)
 
@@ -172,11 +176,17 @@ class Engine:
     def run_chunked(self, *, chunk_generations: Optional[int] = None,
                     generations: Optional[int] = None,
                     ckpt_dir: Optional[str] = None,
-                    resume: bool = True) -> Iterator[Dict[str, Any]]:
+                    resume: bool = True,
+                    fault_tag: str = "") -> Iterator[Dict[str, Any]]:
         """Stream the run chunk by chunk, yielding per-chunk telemetry.
 
         With `ckpt_dir`, each chunk checkpoints the backend-native state; a
-        restarted run with the same spec/ckpt_dir resumes at the last chunk.
+        restarted run with the same spec/ckpt_dir resumes at the last chunk
+        (the newest VALID one — a corrupt step falls back to its
+        predecessor; the first chunk after a resume carries
+        ``"resumed_from"``).  `fault_tag` rides into every `repro.faults`
+        injection-site tag (the scheduler passes its job ids) so armed
+        fault rules can target one run.
 
         Telemetry granularity follows the backend's LAUNCH unit: island
         topologies sample trajectories once per launch, and a resident-epoch
@@ -197,11 +207,13 @@ class Engine:
 
         state = self.init_state()
         done, chunk_idx, migrations = 0, 0, 0
+        resumed_from: Optional[int] = None
         best_y: Optional[float] = None
         best_x = None
         if ckpt_dir and resume:
             step = CKPT.latest_step(ckpt_dir)
             if step is not None:
+                resumed_from = int(step)
                 state, extra = CKPT.restore(ckpt_dir, step, state)
                 ck_backend = extra.get("backend")
                 if ck_backend is not None and ck_backend != self.backend_name:
@@ -235,14 +247,24 @@ class Engine:
             return
 
         while done < total:
+            tag = f"{fault_tag}|{self.backend_name}|chunk={chunk_idx + 1}"
+            if self.faults is not None:
+                self.faults.inject("slow_chunk", tag)
             t0 = time.perf_counter()
             seg = self.backend.segment(state, min(chunk, total - done))
             jax.block_until_ready(jax.tree.leaves(seg.state))
             dt = time.perf_counter() - t0
+            if self.faults is not None:
+                # crash AFTER the compute, BEFORE the checkpoint: the
+                # chunk's work is lost, earlier checkpoints are not, and a
+                # retry recomputes it deterministically
+                self.faults.inject("chunk_crash", tag)
             state = seg.state
             done += seg.gens
             chunk_idx += 1
             migrations += seg.telemetry.topology.migrations
+            if resumed_from is not None:
+                seg.telemetry.resumed_from = resumed_from
             if best_y is None or (seg.best_y < best_y if mini
                                   else seg.best_y > best_y):
                 best_y, best_x = seg.best_y, np.asarray(seg.best_x)
@@ -252,9 +274,11 @@ class Engine:
                                  "migrations": migrations,
                                  "best_y": float(best_y),
                                  "best_x": [int(v) for v in best_x],
-                                 "backend": self.backend_name})
+                                 "backend": self.backend_name},
+                          faults=self.faults, fault_tag=fault_tag)
             yield {
                 "chunk": chunk_idx,
+                "resumed_from": resumed_from,
                 "gens_done": done,
                 "gens_total": total,
                 "chunk_gens": seg.gens,
@@ -272,6 +296,7 @@ class Engine:
                                           .telemetry_unit_gens,
                 "telemetry": seg.telemetry,
             }
+            resumed_from = None    # only the first post-resume chunk carries it
 
 
 def solve(spec: GASpec, backend: str = "auto", *,
@@ -338,6 +363,7 @@ class PackedEngine:
         self.batch_spec = dataclasses.replace(specs[0], n_repeats=self.n_slots)
         self.backend_name = resolve_backend(self.batch_spec, backend,
                                             self.options.mesh)
+        self.faults = FLT.resolve_faults(self.options.faults)
         if self.backend_name == "eager":
             raise BackendUnsupported(
                 "the eager backend steps replicas in a host loop — nothing "
@@ -392,7 +418,8 @@ class PackedEngine:
 
     def run_chunked(self, *, chunk_generations: Optional[int] = None,
                     ckpt_dir: Optional[str] = None,
-                    resume: bool = True) -> Iterator[Dict[str, Any]]:
+                    resume: bool = True,
+                    fault_tag: str = "") -> Iterator[Dict[str, Any]]:
         """Chunked pack run: yields {"chunk", "gens_done", ..., "jobs": [...]}
         with one Engine-style telemetry dict per job.  With `ckpt_dir`, every
         chunk checkpoints the whole packed state + per-slot bests, so an
@@ -401,7 +428,7 @@ class PackedEngine:
         if self._solo is not None:
             for tele in self._solo.run_chunked(
                     chunk_generations=chunk_generations,
-                    ckpt_dir=ckpt_dir, resume=resume):
+                    ckpt_dir=ckpt_dir, resume=resume, fault_tag=fault_tag):
                 jt = dict(tele)
                 jt.update(job_index=0, pack_size=1, slots=(0, 1))
                 yield {"chunk": tele["chunk"], "gens_done": tele["gens_done"],
@@ -421,11 +448,13 @@ class PackedEngine:
 
         state = self.init_state()
         done, chunk_idx, migrations = 0, 0, 0
+        resumed_from: Optional[int] = None
         slot_y = np.full((L,), np.inf if mini else -np.inf, np.float32)
         slot_x = np.zeros((L, spec.v), np.uint32)
         if ckpt_dir and resume:
             step = CKPT.latest_step(ckpt_dir)
             if step is not None:
+                resumed_from = int(step)
                 state, extra = CKPT.restore(ckpt_dir, step, state)
                 ck_backend = extra.get("backend")
                 if ck_backend is not None and ck_backend != self.backend_name:
@@ -464,14 +493,22 @@ class PackedEngine:
             return
 
         while done < total:
+            tag = f"{fault_tag}|{self.backend_name}|chunk={chunk_idx + 1}"
+            if self.faults is not None:
+                self.faults.inject("slow_chunk", tag)
             t0 = time.perf_counter()
             seg = self.backend.segment(state, min(chunk, total - done))
             jax.block_until_ready(jax.tree.leaves(seg.state))
             dt = time.perf_counter() - t0
+            if self.faults is not None:
+                # crash AFTER the compute, BEFORE the checkpoint (see Engine)
+                self.faults.inject("chunk_crash", tag)
             state = seg.state
             done += seg.gens
             chunk_idx += 1
             migrations += seg.telemetry.topology.migrations
+            if resumed_from is not None:
+                seg.telemetry.resumed_from = resumed_from
             rep = seg.telemetry.per_repeat
             by = np.asarray(rep.best, np.float32).reshape(L)
             bx = np.asarray(rep.best_x, np.uint32).reshape(L, spec.v)
@@ -487,9 +524,11 @@ class PackedEngine:
                                  "slot_x": [[int(v) for v in row]
                                             for row in slot_x],
                                  "seeds": [int(s) for s in self.seeds],
-                                 "backend": self.backend_name})
+                                 "backend": self.backend_name},
+                          faults=self.faults, fault_tag=fault_tag)
             yield {
-                "chunk": chunk_idx, "gens_done": done, "gens_total": total,
+                "chunk": chunk_idx, "resumed_from": resumed_from,
+                "gens_done": done, "gens_total": total,
                 "chunk_gens": seg.gens, "wall_s": dt,
                 "gens_per_s": seg.gens / dt if dt > 0 else float("inf"),
                 "backend": self.backend_name, "pack_size": len(self.specs),
@@ -500,6 +539,7 @@ class PackedEngine:
                     telemetry=seg.telemetry)
                     for j in range(len(self.specs))],
             }
+            resumed_from = None
 
     def run(self, *, chunk_generations: Optional[int] = None):
         """Run the pack to completion; returns the final per-job telemetry
@@ -508,3 +548,93 @@ class PackedEngine:
         for last in self.run_chunked(chunk_generations=chunk_generations):
             pass
         return last["jobs"]
+
+
+def repack_checkpoint(old_dir: str, specs, keep, new_dir: str,
+                      backend: str = "auto", *,
+                      options: Optional[EngineOptions] = None) -> Optional[int]:
+    """Slice a pack checkpoint down to the jobs in `keep` (indices into
+    `specs`) and write it to `new_dir`, so survivors of a quarantined pack
+    resume bit-identically from where the pack left off.
+
+    Packed state leaves carry the slot stack down their leading axis (the
+    replica axis `init_packed` builds); slicing that axis at the kept jobs'
+    slot offsets yields exactly the state those slots would hold had they
+    run alone from the same seeds — the packing bit-identity invariant run
+    in reverse.  Leaves whose shape does not change between pack sizes
+    (island ring buffers etc.) pass through; anything that matches neither
+    pattern is a layout change and raises.  Returns the checkpointed step
+    (generations done), or None when `old_dir` holds no valid step."""
+    specs = list(specs)
+    keep = list(keep)
+    pe_old = PackedEngine(specs, backend, options=options)
+    step = CKPT.latest_step(old_dir)
+    if step is None:
+        return None
+    state, extra = CKPT.restore(old_dir, step, pe_old.init_state())
+    ck_backend = extra.get("backend")
+    if ck_backend is not None and ck_backend != pe_old.backend_name:
+        raise ValueError(
+            f"checkpoint in {old_dir} was written by the {ck_backend!r} "
+            f"backend, not {pe_old.backend_name!r}; repack with the "
+            "original backend")
+    ck_seeds = [int(s) for s in extra.get("seeds", [])]
+    if ck_seeds and ck_seeds != [int(s) for s in pe_old.seeds]:
+        raise ValueError(
+            f"checkpoint in {old_dir} holds slot seeds {ck_seeds}, but the "
+            f"given specs produce {list(pe_old.seeds)} — pass the pack's "
+            "original specs in their original order")
+
+    pe_new = PackedEngine([specs[j] for j in keep], backend, options=options)
+    idx = []
+    for j in keep:
+        off, cnt = pe_old.slots[j]
+        idx.extend(range(off, off + cnt))
+    idx_arr = np.asarray(idx)
+
+    def _slice(new_like, old_leaf):
+        old_arr = np.asarray(jax.device_get(old_leaf))
+        want = tuple(np.shape(new_like))
+        if old_arr.shape == want:
+            return old_arr
+        if old_arr.ndim and old_arr.shape[0] == pe_old.n_slots:
+            sl = old_arr[idx_arr]
+            if sl.shape == want:
+                return sl
+            if len(idx) == 1 and sl.shape[1:] == want:
+                return sl[0]        # 1-slot target runs the solo (lead=0) layout
+        raise ValueError(
+            f"cannot repack state leaf of shape {old_arr.shape} into "
+            f"{want}: neither shape-stable nor sliceable down the "
+            f"{pe_old.n_slots}-slot axis")
+
+    new_state = jax.tree.map(_slice, pe_new.init_state(), state)
+
+    done = int(extra["gens_done"])
+    slot_y = np.asarray(extra["slot_y"], np.float32)
+    slot_x = np.asarray(extra["slot_x"], np.uint32).reshape(
+        pe_old.n_slots, specs[0].v)
+    if pe_new.n_slots > 1:
+        new_extra = {"gens_done": done,
+                     "chunk_idx": int(extra.get("chunk_idx", 0)),
+                     "migrations": int(extra.get("migrations", 0)),
+                     "slot_y": [float(v) for v in slot_y[idx_arr]],
+                     "slot_x": [[int(v) for v in row]
+                                for row in slot_x[idx_arr]],
+                     "seeds": [int(s) for s in pe_new.seeds],
+                     "backend": pe_new.backend_name}
+    else:
+        # a 1-slot pack delegates to the plain Engine, whose resume reads
+        # the solo extra format
+        r = idx[0]
+        new_extra = {"gens_done": done,
+                     "chunk_idx": int(extra.get("chunk_idx", 0)),
+                     "migrations": int(extra.get("migrations", 0)),
+                     "best_y": float(slot_y[r]),
+                     "best_x": [int(v) for v in slot_x[r]],
+                     "backend": pe_new.backend_name}
+    # recovery machinery is not an injection site: faults=False keeps an
+    # ambient ckpt_corrupt rule from eating the repacked checkpoint
+    CKPT.save(new_dir, step=done, tree=new_state, extra=new_extra,
+              faults=False)
+    return done

@@ -33,6 +33,10 @@ Knobs:
     dispatching host-side blackbox fitness population-parallel (1 = the
     serial batch call; results are order-preserving, so any worker count
     is bit-deterministic).
+  * faults — deterministic fault injection (`repro.faults`): None
+    discovers the ambient ``REPRO_GA_FAULTS`` env injector, False disarms,
+    a rule string (``"chunk_crash:at=2;ckpt_corrupt@job-3"``) or a shared
+    `FaultInjector` arms the chunk/compile/checkpoint injection sites.
 """
 
 from __future__ import annotations
@@ -55,6 +59,7 @@ class EngineOptions:
     stream_tile_islands: Optional[int] = None
     sel_lane: Optional[str] = None
     fitness_workers: int = 1
+    faults: Any = None
 
     def __post_init__(self):
         if (self.plan_override is not None
@@ -103,6 +108,11 @@ class EngineOptions:
                         help="eager backend: thread-pool width for "
                              "host-side blackbox fitness dispatch "
                              "(1 = serial batch call)")
+        ap.add_argument("--faults", default=None, metavar="RULES",
+                        help="arm deterministic fault injection "
+                             "(repro.faults rule grammar, e.g. "
+                             "'chunk_crash:at=2'; 'off' disarms even the "
+                             "REPRO_GA_FAULTS env; default: env-armed)")
 
     @classmethod
     def from_args(cls, args, *, mesh=None,
@@ -111,13 +121,17 @@ class EngineOptions:
         ct = getattr(args, "cost_table", None)
         if isinstance(ct, str) and ct.lower() in ("off", "none", "0"):
             ct = False
+        flt = getattr(args, "faults", None)
+        if isinstance(flt, str) and flt.lower() in ("off", "none", "0"):
+            flt = False
         return cls(mesh=mesh, interpret=interpret, cost_table=ct,
                    plan_override=getattr(args, "plan_override", None),
                    vmem_budget=getattr(args, "vmem_budget", None),
                    stream_tile_islands=getattr(args, "stream_tile_islands",
                                                None),
                    sel_lane=getattr(args, "sel_lane", None),
-                   fitness_workers=getattr(args, "fitness_workers", 1))
+                   fitness_workers=getattr(args, "fitness_workers", 1),
+                   faults=flt)
 
 
 def resolve_options(options: Optional[EngineOptions] = None, *,

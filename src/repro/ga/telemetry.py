@@ -102,6 +102,8 @@ class RunTelemetry:
     per_repeat: Optional[ReplicaStats] = None
     problem: Optional[str] = None
     n_vars: Optional[int] = None
+    resumed_from: Optional[int] = None   # ckpt step (gens) this segment
+                                         # resumed from, first chunk only
 
     def job_view(self) -> "RunTelemetry":
         """Plan/topology facets without the per-repeat arrays — what a

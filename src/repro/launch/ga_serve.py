@@ -8,7 +8,8 @@
         --mesh auto --max-pack 8 --chunk 16
 
 The jobs file is a JSON list of objects; each object's keys are GASpec
-fields plus optional "backend" and "priority":
+fields plus optional "backend", "priority", "deadline_s" (wall-clock
+budget → DEADLINE_EXCEEDED) and "max_retries" (per-job retry budget):
 
     [{"problem": "F3", "n": 32, "bits_per_var": 10, "generations": 100},
      {"problem": "F3", "n": 32, "bits_per_var": 10, "generations": 100,
@@ -35,7 +36,11 @@ def _spec_from(obj: dict):
     obj = dict(obj)
     backend = obj.pop("backend", None)
     priority = int(obj.pop("priority", 0))
-    return ga.GASpec(**obj), backend, priority
+    deadline_s = obj.pop("deadline_s", None)
+    max_retries = obj.pop("max_retries", None)
+    return (ga.GASpec(**obj), backend, priority,
+            None if deadline_s is None else float(deadline_s),
+            None if max_retries is None else int(max_retries))
 
 
 def _demo_jobs(k: int):
@@ -71,6 +76,14 @@ def main():
     ap.add_argument("--job-ttl", type=float, default=None, metavar="S",
                     help="evict DONE/FAILED jobs S seconds after they "
                          "finish (default: keep forever)")
+    ap.add_argument("--recover", action="store_true",
+                    help="replay the scheduler journal under --ckpt-root: "
+                         "re-enqueue pending jobs (packs resume from their "
+                         "checkpoints) and restore finished results")
+    ap.add_argument("--max-retries", type=int, default=3, metavar="N",
+                    help="per-job retry budget for transient failures")
+    ap.add_argument("--retry-backoff", type=float, default=0.05, metavar="S",
+                    help="base of the exponential retry backoff")
     ap.add_argument("--stream", default="first",
                     choices=["first", "none"],
                     help="print the first job's live telemetry feed")
@@ -78,11 +91,15 @@ def main():
     EngineOptions.add_cli_args(ap)   # --cost-table/--plan-override/--vmem-...
     args = ap.parse_args()
 
-    if (args.jobs is None) == (args.demo <= 0):
-        ap.error("exactly one of --jobs FILE or --demo K is required")
+    if args.jobs is not None and args.demo > 0:
+        ap.error("use only one of --jobs FILE or --demo K")
+    if args.jobs is None and args.demo <= 0 and not args.recover:
+        ap.error("one of --jobs FILE or --demo K is required "
+                 "(or --recover alone to only resume journaled jobs)")
     job_dicts = (_demo_jobs(args.demo) if args.demo > 0
-                 else json.load(open(args.jobs)))
-    if not job_dicts:
+                 else json.load(open(args.jobs)) if args.jobs is not None
+                 else [])
+    if not job_dicts and not args.recover:
         ap.error("no jobs to run")
 
     mesh = None
@@ -94,12 +111,20 @@ def main():
     options = EngineOptions.from_args(args, mesh=mesh)
 
     from repro.serve.scheduler import GAScheduler
+    if args.recover and args.ckpt_root is None:
+        ap.error("--recover needs --ckpt-root (the journal lives there)")
     sched = GAScheduler(backend=args.backend,
                         max_pack=args.max_pack,
                         chunk_generations=args.chunk,
                         ckpt_root=args.ckpt_root,
                         job_ttl_s=args.job_ttl,
+                        max_retries=args.max_retries,
+                        retry_backoff_s=args.retry_backoff,
+                        recover=args.recover,
                         options=options)
+    if args.recover:
+        print(f"recovered {sched.recovered_total} pending job(s) "
+              "from the journal")
     if sched.cost_table is not None:
         print(f"cost table: {len(sched.cost_table)} measured point(s)")
 
@@ -114,14 +139,16 @@ def main():
 
     ids = []
     for obj in job_dicts:
-        spec, backend, priority = _spec_from(obj)
-        job_id = sched.submit(spec, backend=backend, priority=priority)
+        spec, backend, priority, deadline_s, max_retries = _spec_from(obj)
+        job_id = sched.submit(spec, backend=backend, priority=priority,
+                              deadline_s=deadline_s, max_retries=max_retries)
         ids.append(job_id)
         print(f"submitted {job_id}: {spec.problem or 'blackbox'} "
-              f"gens={spec.generations} priority={priority}")
+              f"gens={spec.generations} priority={priority}"
+              + (f" deadline={deadline_s}s" if deadline_s else ""))
 
     try:
-        if args.stream == "first":
+        if args.stream == "first" and ids:
             for event in sched.stream(ids[0]):
                 if event.get("event") != "chunk":
                     continue
@@ -146,6 +173,10 @@ def main():
               f"{stats['plans_heuristic']} heuristic "
               f"(table points={stats['plan_table_entries']}, "
               f"evicted jobs={stats['jobs_evicted']})")
+        print(f"faults: retries={stats['retries']} "
+              f"quarantined={stats['quarantined']} "
+              f"recovered={stats['recovered']} "
+              f"deadline_exceeded={stats['deadline_exceeded']}")
     finally:
         sched.shutdown()
         if server is not None:

@@ -155,6 +155,9 @@ class GAJobStats:
     error: Optional[str] = None
     priority: int = 0                # scheduler priority (higher preempts)
     preemptions: int = 0             # times the scheduler parked this job
+    retries: int = 0                 # scheduler retry dispatches of this job
+    deadline_s: Optional[float] = None   # wall budget (None = unbounded)
+    quarantined: bool = False        # failed as the isolated poison job
     pack_size: int = 1               # jobs sharing the launch it ran in
     epoch_mode: str = "-"            # resident | streamed | gridded | ...
     plan_source: str = "-"           # heuristic | measured | forced
@@ -194,6 +197,9 @@ class GAJobStats:
             "error": self.error,
             "priority": self.priority,
             "preemptions": self.preemptions,
+            "retries": self.retries,
+            "deadline_s": self.deadline_s,
+            "quarantined": self.quarantined,
             "pack_size": self.pack_size,
             "epoch_mode": self.epoch_mode,
             "plan_source": self.plan_source,
@@ -232,6 +238,12 @@ class GAMetricsRegistry:
             self._next_id += 1
             return jid
 
+    def ensure_next_id(self, n: int) -> None:
+        """Bump the id counter to at least `n` — a recovering scheduler
+        calls this so fresh ids never collide with journaled ones."""
+        with self._lock:
+            self._next_id = max(self._next_id, int(n))
+
     def start_job(self, job_id: str, backend: str = "?",
                   gens_total: int = 0, problem: str = "?",
                   n_vars: int = 0) -> GAJobStats:
@@ -250,12 +262,13 @@ class GAMetricsRegistry:
             return job
 
     def queue_job(self, job_id: str, problem: str = "?", gens_total: int = 0,
-                  n_vars: int = 0, priority: int = 0) -> GAJobStats:
+                  n_vars: int = 0, priority: int = 0,
+                  deadline_s: Optional[float] = None) -> GAJobStats:
         """Register a scheduler-owned job in the QUEUED state."""
         with self._lock:
             job = GAJobStats(job_id=job_id, problem=problem, n_vars=n_vars,
                              gens_total=gens_total, status="queued",
-                             priority=priority)
+                             priority=priority, deadline_s=deadline_s)
             self._jobs[job_id] = job
             return job
 
@@ -266,6 +279,11 @@ class GAMetricsRegistry:
             if status == "preempted" and job.status != "preempted":
                 job.preemptions += 1
             job.status = status
+
+    def note_retry(self, job_id: str) -> None:
+        """Count one scheduler retry dispatch against the job."""
+        with self._lock:
+            self._jobs[job_id].retries += 1
 
     def record_chunk(self, job_id: str, tele: Dict[str, Any]) -> None:
         """Fold one `Engine.run_chunked` telemetry dict into the job."""
@@ -302,16 +320,39 @@ class GAMetricsRegistry:
         for q in subs:
             q.put(event)
 
-    def finish_job(self, job_id: str, error: Optional[str] = None) -> None:
+    def finish_job(self, job_id: str, error: Optional[str] = None,
+                   status: Optional[str] = None,
+                   quarantined: bool = False) -> None:
+        """Terminal transition.  `status` overrides the default
+        failed/done mapping (the scheduler passes "deadline_exceeded");
+        `quarantined` marks a poison job isolated by pack splitting."""
         with self._lock:
             job = self._jobs[job_id]
-            job.status = "failed" if error else "done"
+            job.status = status or ("failed" if error else "done")
             job.error = error
+            job.quarantined = job.quarantined or quarantined
             subs = list(self._subs.get(job_id, ()))
             end = {"event": "end", "job_id": job_id, "status": job.status,
                    "best_fitness": job.best_fitness, "error": error}
         for q in subs:
             q.put(end)
+
+    def abort_streams(self, reason: str) -> None:
+        """Push an aborted end-sentinel to every subscriber of a
+        non-terminal job — the worker thread died or the scheduler shut
+        down, so those chunk feeds will never produce an organic end event
+        and blocked `stream()` / SSE clients must be released."""
+        with self._lock:
+            targets = []
+            for jid, subs in self._subs.items():
+                job = self._jobs.get(jid)
+                if job is not None and job.status in (
+                        "done", "failed", "deadline_exceeded"):
+                    continue
+                targets.extend((q, jid) for q in subs)
+        for q, jid in targets:
+            q.put({"event": "end", "job_id": jid, "status": "aborted",
+                   "error": reason})
 
     def evict_job(self, job_id: str) -> bool:
         """Drop a finished job's stats and any stale subscriber queues (the
@@ -364,6 +405,7 @@ class GAMetricsRegistry:
             "jobs_queued": by_status.get("queued", 0),
             "jobs_preempted": by_status.get("preempted", 0),
             "jobs_failed": by_status.get("failed", 0),
+            "jobs_deadline_exceeded": by_status.get("deadline_exceeded", 0),
             "generations_total": sum(j["generations_done"]
                                      for j in jobs.values()),
             "migrations_total": sum(j["migration_count"]

@@ -54,6 +54,7 @@ _JOB_GAUGES = (
     ("wall_s", "wall_seconds", "Wall-clock seconds spent"),
     ("priority", "priority", "Scheduler priority (higher preempts)"),
     ("preemptions", "preemptions", "Times the scheduler parked this job"),
+    ("retries", "retries", "Scheduler retry dispatches of this job"),
     ("pack_size", "pack_size", "Jobs sharing this job's launch"),
 )
 
@@ -64,6 +65,8 @@ _FLEET_GAUGES = (
     ("jobs_queued", "jobs_queued", "GA jobs waiting in the scheduler queue"),
     ("jobs_preempted", "jobs_preempted", "GA jobs parked by preemption"),
     ("jobs_failed", "jobs_failed", "GA jobs that errored"),
+    ("jobs_deadline_exceeded", "jobs_deadline_exceeded",
+     "GA jobs that ran out of wall-clock budget"),
     ("generations_total", "fleet_generations", "Generations done, all jobs"),
     ("migrations_total", "fleet_migrations", "Migrations, all jobs"),
 )
@@ -87,6 +90,16 @@ _SCHED_GAUGES = (
      "Launches planned by the static heuristic"),
     ("plan_table_entries", "plan_table_entries",
      "Cost-table points available to the planner"),
+    ("retries", "sched_retries_total",
+     "Job retry dispatches after transient failures"),
+    ("quarantined", "sched_quarantined_total",
+     "Poison jobs isolated from their pack and failed"),
+    ("recovered", "sched_recovered_total",
+     "Jobs re-enqueued by journal replay after a restart"),
+    ("deadline_exceeded", "sched_deadline_exceeded_total",
+     "Jobs terminated at their wall-clock deadline"),
+    ("worker_alive", "sched_worker_alive",
+     "1 while the scheduler worker thread is running"),
 )
 
 
@@ -234,7 +247,7 @@ def start_metrics_server(port: int = 0, registry=None,
                 self.wfile.write(b"event: snapshot\ndata: " + json.dumps(
                     snap, default=_json_default).encode() + b"\n\n")
                 self.wfile.flush()
-                if snap["status"] in ("done", "failed"):
+                if snap["status"] in ("done", "failed", "deadline_exceeded"):
                     return
                 while True:
                     try:
